@@ -1,0 +1,87 @@
+"""Paper §10.2 complexity table: single-pass O(n) metadata operations.
+
+Measures wall time of each operation vs number of row groups n, verifying
+the O(n) (and O(1) for inversion) scaling claims, plus fleet-scale batched
+throughput (columns/second) of the full estimator.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ndv import dict_inversion, distribution, minmax_diversity
+from repro.core.ndv.estimator import estimate_batch
+from repro.core.ndv.types import ColumnBatch
+
+
+def _fake_batch(b: int, r: int, seed: int = 0) -> ColumnBatch:
+    rng = np.random.default_rng(seed)
+    ndv = rng.integers(10, 100000, (b, 1)).astype(np.float32)
+    rows = np.full((b, r), 8192.0, np.float32)
+    bits = np.maximum(np.ceil(np.log2(ndv) - 1e-9), 1)
+    S = ndv * 8.0 + rows * bits / 8.0
+    mins = np.sort(rng.normal(size=(b, r)).astype(np.float32), axis=1)
+    maxs = mins + 0.1
+    J = jnp.asarray
+    return ColumnBatch(
+        chunk_S=J(S.astype(np.float32)), chunk_rows=J(rows),
+        chunk_nulls=J(np.zeros((b, r), np.float32)),
+        chunk_dict_encoded=J(np.ones((b, r), bool)),
+        N=J(rows.sum(1)), nulls=J(np.zeros(b, np.float32)),
+        n_groups=J(np.full(b, r, np.int32)),
+        mins=J(mins), maxs=J(maxs), valid=J(np.ones((b, r), bool)),
+        m_min=J(rng.integers(1, r, b).astype(np.float32)),
+        m_max=J(rng.integers(1, r, b).astype(np.float32)),
+        mean_len=J(np.full(b, 8.0, np.float32)),
+        len_sample=J(np.full(b, 2 * r, np.int32)),
+        fixed_width=J(np.ones(b, bool)), int_like=J(np.zeros(b, bool)),
+        single_byte=J(np.zeros(b, bool)),
+    )
+
+
+def _timeit(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[tuple]:
+    rows: List[tuple] = []
+    b = 256
+    for r in (16, 64, 256, 1024):
+        batch = _fake_batch(b, r)
+        us = _timeit(lambda bt: estimate_batch(bt, mode="paper"), batch)
+        rows.append((f"complexity/estimate_batch_r{r}", us,
+                     f"cols={b};row_groups={r};us_per_col={us/b:.2f}"))
+    # O(1)-in-n inversion (flat batched solves)
+    for m in (1 << 10, 1 << 14, 1 << 18):
+        s = jnp.full((m,), 1e5, jnp.float32)
+        rws = jnp.full((m,), 1e6, jnp.float32)
+        z = jnp.zeros((m,), jnp.float32)
+        ln = jnp.full((m,), 8.0, jnp.float32)
+        us = _timeit(
+            lambda a, b_, c, d: dict_inversion.invert_dict_size(a, b_, c, d).ndv,
+            s, rws, z, ln,
+        )
+        rows.append((f"complexity/dict_newton_m{m}", us,
+                     f"solves={m};ns_per_solve={us*1e3/m:.1f}"))
+    # detector O(n)
+    for r in (64, 512, 4096):
+        batch = _fake_batch(64, r)
+        us = _timeit(
+            lambda mn, mx, v: distribution.detect_distribution(mn, mx, v),
+            batch.mins, batch.maxs, batch.valid,
+        )
+        rows.append((f"complexity/detector_r{r}", us, f"cols=64;row_groups={r}"))
+    # fleet throughput
+    batch = _fake_batch(4096, 64)
+    us = _timeit(lambda bt: estimate_batch(bt, mode="improved"), batch)
+    rows.append(("complexity/fleet_4096cols", us,
+                 f"cols_per_s={4096/(us/1e6):.0f}"))
+    return rows

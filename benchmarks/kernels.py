@@ -1,0 +1,78 @@
+"""Kernel benchmarks: Pallas (interpret on CPU; compiled on TPU) vs ref.
+
+On this CPU container the numbers characterize the REFERENCE path's
+throughput (the Pallas interpret path is a correctness tool, orders of
+magnitude slower than compiled TPU execution); the derived column records
+bytes/lanes so the TPU roofline for each kernel can be projected.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def _timeit(fn, *args, iters=3) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[tuple]:
+    rng = np.random.default_rng(0)
+    rows: List[tuple] = []
+
+    m = 1 << 16
+    ndv = rng.integers(1, 1_000_000, m).astype(np.float32)
+    rws = ndv * 4
+    z = np.zeros(m, np.float32)
+    ln = np.full(m, 8.0, np.float32)
+    bits = np.maximum(np.ceil(np.log2(ndv)), 1)
+    S = (ndv * 8 + rws * bits / 8).astype(np.float32)
+    args = [jnp.asarray(x) for x in (S, rws, z, ln)]
+
+    us_ref = _timeit(lambda *a: ops.dict_newton(*a, backend="ref"), *args)
+    rows.append((
+        "kernels/dict_newton_ref_64k", us_ref,
+        f"solves_per_s={m/(us_ref/1e6):.0f};hbm_bytes={m*20}",
+    ))
+    us_pal = _timeit(lambda *a: ops.dict_newton(*a), *args)
+    rows.append((
+        "kernels/dict_newton_pallas_interp_64k", us_pal,
+        f"interpret_overhead_x={us_pal/us_ref:.1f}",
+    ))
+
+    n = rng.integers(2, 1024, m).astype(np.float32)
+    D = rng.uniform(1, 1e6, m).astype(np.float32)
+    obs = (D * (1 - np.exp(-n / D))).astype(np.float32)
+    us = _timeit(lambda a, b: ops.coupon_newton(a, b, backend="ref"),
+                 jnp.asarray(obs), jnp.asarray(n))
+    rows.append(("kernels/coupon_newton_ref_64k", us,
+                 f"solves_per_s={m/(us/1e6):.0f}"))
+
+    b, r = 1024, 256
+    mins = np.sort(rng.normal(size=(b, r)).astype(np.float32), 1)
+    maxs = mins + 0.2
+    valid = np.ones((b, r), bool)
+    us = _timeit(
+        lambda a, c, d: ops.minmax_scan(a, c, d, backend="ref"),
+        jnp.asarray(mins), jnp.asarray(maxs), jnp.asarray(valid),
+    )
+    rows.append(("kernels/minmax_scan_ref_1024x256", us,
+                 f"cols_per_s={b/(us/1e6):.0f};hbm_bytes={b*r*12}"))
+
+    keys = rng.integers(0, 2**32, size=(b, r), dtype=np.uint32)
+    us = _timeit(
+        lambda a, c: ops.hll_fold(a, c, p=8, backend="ref"),
+        jnp.asarray(keys), jnp.asarray(valid),
+    )
+    rows.append(("kernels/hll_fold_ref_1024x256", us,
+                 f"keys_per_s={b*r/(us/1e6):.0f}"))
+    return rows

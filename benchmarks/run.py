@@ -1,0 +1,51 @@
+"""Benchmark harness — one module per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measurement):
+
+  accuracy.py     — Table 1 regime grid + coverage/rowgroup/length sweeps
+  baselines.py    — zero-cost vs data-access estimators (§11 positioning)
+  batch_memory.py — §8 batch dictionary prediction vs measured
+  complexity.py   — §10.2 single-pass complexity table
+  kernels.py      — Pallas kernel suite throughput
+  warehouse.py    — TPC-H-shaped lineitem column accuracy (§10.1 setting)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        accuracy,
+        baselines,
+        batch_memory,
+        complexity,
+        kernels,
+        warehouse,
+    )
+
+    modules = [
+        ("accuracy", accuracy),
+        ("warehouse", warehouse),
+        ("baselines", baselines),
+        ("batch_memory", batch_memory),
+        ("complexity", complexity),
+        ("kernels", kernels),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, mod in modules:
+        try:
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

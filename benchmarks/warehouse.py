@@ -1,0 +1,38 @@
+"""Warehouse-shaped accuracy: TPC-H-style lineitem columns (paper §10.1's
+production setting reconstructed with ground truth)."""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+from repro.columnar import column_metadata_from_footer, read_footer, write_file
+from repro.columnar.datasets import lineitem
+from repro.columnar.writer import WriterOptions
+from repro.core import estimate_columns
+
+
+def run() -> List[tuple]:
+    data = lineitem(rows=1 << 17, seed=0)
+    cols = {k: v for k, (v, _) in data.items()}
+    tmp = tempfile.mkdtemp()
+    write_file(os.path.join(tmp, "lineitem"), cols,
+               options=WriterOptions(row_group_size=8192))
+    footer = read_footer(os.path.join(tmp, "lineitem"))
+    metas = [column_metadata_from_footer(footer, n) for n in footer.column_names]
+
+    rows: List[tuple] = []
+    t0 = time.perf_counter()
+    for mode in ("paper", "improved"):
+        ests = estimate_columns(metas, mode=mode)
+        us = (time.perf_counter() - t0) * 1e6 / len(ests)
+        for e in ests:
+            truth = data[e.column_name][1]
+            err = abs(e.ndv - truth) / max(truth, 1)
+            rows.append((
+                f"warehouse/{mode}/{e.column_name}", us,
+                f"est={e.ndv:.0f};true={truth};err={err:.4f};"
+                f"layout={e.layout.name};lb={int(e.is_lower_bound)}",
+            ))
+    return rows

@@ -1,0 +1,68 @@
+"""Data profiling from metadata only — the paper's §1 third application.
+
+Profiles every column of every PQLite file under a root: NDV estimate,
+layout class, confidence, memory forecast — WITHOUT reading any data page.
+Compares footprint: bytes of metadata read vs bytes of data skipped.
+
+    PYTHONPATH=src python examples/profile_dataset.py [root]
+"""
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.columnar import format as fmt
+from repro.columnar import list_files, read_footer, column_metadata_from_footer
+from repro.core import estimate_columns
+from repro.core.planner import NDVPlanner
+
+
+def ensure_demo_dataset(root: str):
+    from repro.columnar.generator import int_domain, partitioned_column, zipf_column
+    from repro.columnar.writer import WriterOptions, write_file
+
+    for i in range(3):
+        dom = int_domain(2000 + 500 * i, seed=i)
+        a, _ = zipf_column(dom, 1 << 16, seed=10 + i)
+        b, _ = partitioned_column(dom, 1 << 16, seed=20 + i)
+        write_file(
+            os.path.join(root, f"part_{i:04d}"),
+            {"key": a, "range_key": b},
+            options=WriterOptions(row_group_size=8192),
+        )
+
+
+def main():
+    root = sys.argv[1] if len(sys.argv) > 1 else None
+    if root is None:
+        root = os.path.join(tempfile.mkdtemp(), "demo")
+        ensure_demo_dataset(root)
+        print(f"(no root given — generated demo dataset at {root})")
+
+    files = list_files(root)
+    print(f"profiling {len(files)} files under {root}\n")
+    planner = NDVPlanner()
+    meta_bytes = 0
+    data_bytes = 0
+    for f in files:
+        footer = read_footer(f)
+        meta_bytes += os.path.getsize(fmt.footer_path(f))
+        data_bytes += os.path.getsize(fmt.data_path(f))
+        metas = [column_metadata_from_footer(footer, n) for n in footer.column_names]
+        ests = estimate_columns(metas, mode="improved")
+        print(f"{os.path.basename(f)}  rows={footer.num_rows}  "
+              f"row_groups={footer.num_row_groups}")
+        for e, m in zip(ests, metas):
+            plan = planner.memory_plan(e, m.non_null)
+            print(f"   {e.column_name:12s} ndv~{e.ndv:9.0f} "
+                  f"layout={e.layout.name:13s} conf={e.confidence:.2f} "
+                  f"batch_mem={plan.d_batch_bytes/1e3:.0f}KB"
+                  + (" [lower-bound]" if e.is_lower_bound else ""))
+    print(f"\nmetadata read: {meta_bytes/1e3:.1f} KB; "
+          f"data pages NOT read: {data_bytes/1e6:.1f} MB "
+          f"({data_bytes/max(meta_bytes,1):.0f}x saved)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: zero-cost NDV estimation integrated into a JAX LM framework."""
+__version__ = "1.0.0"

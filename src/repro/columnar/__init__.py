@@ -1,0 +1,9 @@
+from repro.columnar.format import FileFooter, ColumnChunkMeta, RowGroupMeta  # noqa: F401
+from repro.columnar.reader import (  # noqa: F401
+    DataReader,
+    column_metadata_from_footer,
+    dataset_column_metadata,
+    list_files,
+    read_footer,
+)
+from repro.columnar.writer import WriterOptions, write_dataset, write_file  # noqa: F401

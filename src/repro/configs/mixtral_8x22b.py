@@ -1,0 +1,20 @@
+"""Mixtral-8x22B [arXiv:2401.04088]: 8 experts top-2, sliding-window attn
+(window per pool spec; SWA makes the long_500k cell sub-quadratic)."""
+from repro.models.config import ModelConfig, MoEConfig
+
+# Production default adopts the §Perf winners: per-sub-row local dispatch
+# with TP-gathered buffers (expert weights keep ff-TP; 6x better roofline
+# bound than the global-dispatch baseline, see EXPERIMENTS.md §Perf).
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    num_layers=56, d_model=6144, num_heads=48, num_kv_heads=8,
+    d_ff=16384, vocab_size=32768,
+    sliding_window=4096, rope_theta=1e6,
+    moe=MoEConfig(num_experts=8, top_k=2, dispatch="local", sub_rows=16),
+    train_microbatches=8,  # §Perf: fits 16GB HBM (13.7GB/dev)
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, sliding_window=32, moe=MoEConfig(num_experts=4, top_k=2),
+)

@@ -1,0 +1,15 @@
+"""Qwen2-7B [arXiv:2407.10671]: dense GQA decoder, QKV bias."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-7b", family="dense",
+    num_layers=28, d_model=3584, num_heads=28, num_kv_heads=4,
+    d_ff=18944, vocab_size=152064,
+    qkv_bias=True, rope_theta=1e6,
+    train_microbatches=1,  # §Perf: fewer per-mb FSDP gathers (13.2GB/dev fits)
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256,
+)

@@ -1,0 +1,14 @@
+"""Qwen3-0.6B [hf:Qwen/Qwen3-8B family]: dense GQA decoder with qk-norm."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-0.6b", family="dense",
+    num_layers=28, d_model=1024, num_heads=16, num_kv_heads=8,
+    d_ff=3072, vocab_size=151936,
+    qk_norm=True, head_dim=128, rope_theta=1e6,
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256, head_dim=16,
+)

@@ -1,0 +1,14 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892]: attention-free, data-dependent decay."""
+from repro.models.config import ModelConfig, RWKVConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b", family="rwkv",
+    num_layers=32, d_model=4096, num_heads=64, num_kv_heads=64,
+    d_ff=14336, vocab_size=65536,
+    rwkv=RWKVConfig(head_dim=64, chunk=16),
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256, rwkv=RWKVConfig(head_dim=16, chunk=8),
+)

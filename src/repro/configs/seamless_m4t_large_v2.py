@@ -1,0 +1,16 @@
+"""SeamlessM4T-large-v2 [arXiv:2308.11596]: enc-dec multimodal backbone.
+
+Audio frontend is a stub: input_specs supplies frame embeddings."""
+from repro.models.config import ModelConfig, EncDecConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="encdec",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+    d_ff=8192, vocab_size=256206,
+    encdec=EncDecConfig(num_encoder_layers=24, frontend_dim=1024),
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256, encdec=EncDecConfig(num_encoder_layers=2, frontend_dim=32),
+)

@@ -1,0 +1,44 @@
+"""Assigned input shapes (same 4 for every LM arch).
+
+``train_4k``   lowers ``train_step``; ``prefill_32k`` lowers the prefill
+forward; ``decode_32k`` / ``long_500k`` lower ``serve_step`` (one new token
+against a KV cache / recurrent state of the given length).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # train | prefill | decode
+    microbatches: int = 1      # gradient-accumulation steps (train only)
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train", microbatches=4)
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}")
+
+
+def cell_supported(cfg, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(supported, reason). long_500k needs sub-quadratic attention."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (skip per assignment)"
+        )
+    return True, ""

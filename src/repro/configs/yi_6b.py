@@ -1,0 +1,14 @@
+"""Yi-6B [arXiv:2403.04652]: llama-arch dense GQA."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b", family="dense",
+    num_layers=32, d_model=4096, num_heads=32, num_kv_heads=4,
+    d_ff=11008, vocab_size=64000,
+    rope_theta=5e6,
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+    vocab_size=256,
+)

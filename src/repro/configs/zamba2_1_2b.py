@@ -1,0 +1,16 @@
+"""Zamba2-1.2B [arXiv:2411.15242]: Mamba2 backbone + shared attention."""
+from repro.models.config import ModelConfig, SSMConfig, HybridConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, num_heads=32, num_kv_heads=32,
+    d_ff=8192, vocab_size=32000,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk=256),
+    hybrid=HybridConfig(attn_every=13),
+)
+
+SMOKE_CONFIG = CONFIG.scaled(
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=256,
+    ssm=SSMConfig(state_dim=16, head_dim=16, expand=2, conv_width=4, chunk=16),
+)

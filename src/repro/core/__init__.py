@@ -1,0 +1,14 @@
+"""Paper core: zero-cost NDV estimation from columnar file metadata."""
+from repro.core.ndv.estimator import (  # noqa: F401
+    BatchEstimates,
+    estimate_batch,
+    estimate_columns,
+    estimate_file,
+)
+from repro.core.ndv.types import (  # noqa: F401
+    ColumnBatch,
+    ColumnMetadata,
+    Layout,
+    NDVEstimate,
+    PhysicalType,
+)

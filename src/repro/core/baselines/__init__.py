@@ -1,0 +1,12 @@
+from repro.core.baselines.sketches import (  # noqa: F401
+    cvm_ndv,
+    exact_ndv,
+    hll_estimate,
+    hll_merge,
+    hll_ndv,
+    hll_registers,
+    sampling_chao,
+    sampling_gee,
+    sampling_ndv,
+    splitmix64,
+)

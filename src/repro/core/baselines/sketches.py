@@ -1,0 +1,215 @@
+"""Data-access cardinality baselines: exact, HyperLogLog, CVM.
+
+The paper's "zero-cost" claim is only meaningful against estimators that DO
+read data. These are the comparison points used in benchmarks/baselines.py:
+
+  * exact_ndv        — ground truth (hash set / np.unique).
+  * HyperLogLog      — Flajolet et al. 2007, O(2^p) registers; also used
+                       internally by the metadata path to count distinct
+                       row-group extrema in O(1) space (paper §10.2).
+  * CVM              — Chakraborty-Vinodchandran-Meel 2022 streaming sampler.
+
+HLL here is a jnp implementation (batched register folds) with a numpy
+streaming variant; the Pallas kernel (`repro.kernels.hll`) accelerates the
+register-construction fold and is validated against `hll_registers` below.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Exact
+# ---------------------------------------------------------------------------
+
+
+def exact_ndv(values: np.ndarray) -> int:
+    """Ground-truth distinct count (reads all data)."""
+    return int(np.unique(values).size)
+
+
+# ---------------------------------------------------------------------------
+# Hashing (splitmix64 — deterministic, vectorizable, good avalanche)
+# ---------------------------------------------------------------------------
+
+_M1 = np.uint64(0xBF58476D1CE4E5B9)
+_M2 = np.uint64(0x94D049BB133111EB)
+_C = np.uint64(0x9E3779B97F4A7C15)
+
+
+def splitmix64(x: np.ndarray) -> np.ndarray:
+    """64-bit splitmix hash, numpy uint64 vectorized."""
+    with np.errstate(over="ignore"):
+        z = (x.astype(np.uint64) + _C)
+        z = (z ^ (z >> np.uint64(30))) * _M1
+        z = (z ^ (z >> np.uint64(27))) * _M2
+        return z ^ (z >> np.uint64(31))
+
+
+def splitmix64_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    """splitmix64 in jnp uint32-pair arithmetic-free form (uint64 path).
+
+    CPU jax supports uint64 only with x64 enabled; to stay portable we use
+    a 32-bit variant (two rounds of murmur3-style finalization) that the
+    Pallas kernel also implements. Collision rate at 2^32 is fine for the
+    register-indexing use (p <= 14, 18 bits consumed).
+    """
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# HyperLogLog
+# ---------------------------------------------------------------------------
+
+
+def _alpha(m: int) -> float:
+    if m == 16:
+        return 0.673
+    if m == 32:
+        return 0.697
+    if m == 64:
+        return 0.709
+    return 0.7213 / (1.0 + 1.079 / m)
+
+
+def hll_registers(hashes: jnp.ndarray, p: int = 12) -> jnp.ndarray:
+    """Build HLL registers from 32-bit hashes.
+
+    Args:
+      hashes: (N,) uint32 pre-hashed values.
+      p: register index bits; m = 2^p registers.
+
+    Returns:
+      (m,) int32 registers = max rho (leading-zero rank) per bucket.
+    """
+    m = 1 << p
+    idx = (hashes >> (32 - p)).astype(jnp.int32)          # top p bits
+    rest = (hashes << p).astype(jnp.uint32)               # remaining 32-p bits
+    # rho = position of leftmost 1 in `rest` within (32-p) bits, else 32-p+1.
+    # Exact leading-zero count via bit trick (float log2 is off at boundaries).
+    nbits = 32 - p
+    lz = _clz32(rest)
+    rho = jnp.minimum(lz + 1, nbits + 1).astype(jnp.int32)
+    regs = jnp.zeros((m,), jnp.int32)
+    return regs.at[idx].max(rho)
+
+
+def _clz32(x: jnp.ndarray) -> jnp.ndarray:
+    """Count leading zeros of uint32, exact, branch-free."""
+    x = x.astype(jnp.uint32)
+    n = jnp.full(x.shape, 32, jnp.int32)
+    c = jnp.zeros(x.shape, jnp.int32)
+    for shift in (16, 8, 4, 2, 1):
+        y = x >> shift
+        move = y != 0
+        c = jnp.where(move, c + shift, c)
+        x = jnp.where(move, y, x)
+    return jnp.where(x != 0, 31 - c, n).astype(jnp.int32)
+
+
+def hll_estimate(registers: jnp.ndarray) -> jnp.ndarray:
+    """Cardinality estimate from registers, with small-range correction."""
+    m = registers.shape[-1]
+    alpha = _alpha(m)
+    inv_sum = jnp.sum(2.0 ** (-registers.astype(jnp.float32)), axis=-1)
+    raw = alpha * m * m / inv_sum
+    zeros = jnp.sum(registers == 0, axis=-1)
+    # Linear counting for small cardinalities.
+    lc = m * jnp.log(m / jnp.maximum(zeros.astype(jnp.float32), 1e-9))
+    small = (raw <= 2.5 * m) & (zeros > 0)
+    return jnp.where(small, lc, raw)
+
+
+def hll_merge(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Merge two register arrays (sketch union)."""
+    return jnp.maximum(a, b)
+
+
+def hll_ndv(values: np.ndarray, p: int = 12) -> float:
+    """End-to-end HLL over raw values (data-access baseline)."""
+    v = np.asarray(values)
+    if v.dtype.kind in "OUS":
+        h = np.array(
+            [hash(x) & 0xFFFFFFFF for x in v.tolist()], dtype=np.uint32
+        )
+    else:
+        h64 = splitmix64(v.view(np.uint64) if v.dtype.itemsize == 8
+                         else v.astype(np.uint64))
+        h = (h64 >> np.uint64(32)).astype(np.uint32)
+    regs = hll_registers(jnp.asarray(h), p)
+    return float(hll_estimate(regs))
+
+
+# ---------------------------------------------------------------------------
+# CVM (Chakraborty-Vinodchandran-Meel 2022)
+# ---------------------------------------------------------------------------
+
+
+def cvm_ndv(values: np.ndarray, buffer_size: int = 4096, seed: int = 0) -> float:
+    """CVM streaming distinct-elements estimate with a fixed buffer."""
+    rng = np.random.default_rng(seed)
+    p = 1.0
+    buf: set = set()
+    for x in np.asarray(values).tolist():
+        buf.discard(x)
+        if rng.random() < p:
+            buf.add(x)
+        if len(buf) >= buffer_size:
+            # halve: keep each element with prob 1/2
+            buf = {e for e in buf if rng.random() < 0.5}
+            p /= 2.0
+            if len(buf) >= buffer_size:  # pathological; one more halving
+                buf = {e for e in buf if rng.random() < 0.5}
+                p /= 2.0
+    return len(buf) / p
+
+
+# ---------------------------------------------------------------------------
+# Sampling-based estimators (Haas et al. 1995)
+# ---------------------------------------------------------------------------
+
+
+def sampling_gee(sample: np.ndarray, total_rows: int) -> float:
+    """Guaranteed-Error Estimator: d_gee = sqrt(N/n)*f1 + sum_{j>=2} f_j."""
+    n = sample.size
+    if n == 0:
+        return 0.0
+    _, counts = np.unique(sample, return_counts=True)
+    f1 = float(np.sum(counts == 1))
+    rest = float(np.sum(counts >= 2))
+    return float(np.sqrt(total_rows / max(n, 1)) * f1 + rest)
+
+
+def sampling_chao(sample: np.ndarray, total_rows: int) -> float:
+    """Chao84 estimator: d + f1^2 / (2 f2)."""
+    _, counts = np.unique(sample, return_counts=True)
+    d = float(counts.size)
+    f1 = float(np.sum(counts == 1))
+    f2 = float(np.sum(counts == 2))
+    if f2 == 0:
+        return d + f1 * (f1 - 1) / 2.0
+    return d + f1 * f1 / (2.0 * f2)
+
+
+def sampling_ndv(
+    values: np.ndarray, frac: float = 0.01, method: str = "gee", seed: int = 0
+) -> Tuple[float, int]:
+    """Uniform row sample + scale-up estimate. Returns (estimate, rows_read)."""
+    rng = np.random.default_rng(seed)
+    v = np.asarray(values)
+    n = max(int(v.size * frac), 1)
+    idx = rng.choice(v.size, size=n, replace=False)
+    sample = v[idx]
+    est = sampling_gee(sample, v.size) if method == "gee" else sampling_chao(
+        sample, v.size
+    )
+    return min(est, float(v.size)), n

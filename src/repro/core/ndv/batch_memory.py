@@ -1,0 +1,87 @@
+"""Batch dictionary-memory prediction (paper §8).
+
+Given a global NDV estimate, predict the dictionary memory a size-B-bytes
+batch needs — without reading the batch:
+
+    D_global = ndv * len
+    D_batch  = D_global * (1 - exp(-B / D_global))              (Eq 16)
+    D_total  = n_batches * D_batch,
+    n_batches = (N - nulls) * len / B                           (Eq 17)
+
+Limitation (paper): Eq 16 assumes well-spread data. For sorted layouts each
+batch holds a *distinct* value subset; the per-batch dictionary approaches
+min(B-rows, D_global / n_batches)-style coverage instead, and the safe
+planning figure is D_global. ``predict_batch_memory`` therefore takes the
+detected layout and switches to the conservative model for sorted /
+pseudo-sorted columns — this is the planner integration the paper describes
+for the Theseus engine (GPU there, TPU host→HBM staging here).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.ndv.types import Layout
+
+
+class BatchMemoryEstimate(NamedTuple):
+    d_global: jnp.ndarray    # (B,) bytes — full-column dictionary size
+    d_batch: jnp.ndarray     # (B,) bytes — expected per-batch dictionary
+    d_total: jnp.ndarray     # (B,) bytes — across all batches (Eq 17)
+    n_batches: jnp.ndarray   # (B,)
+
+
+def expected_batch_dictionary(
+    batch_bytes: jnp.ndarray, d_global: jnp.ndarray
+) -> jnp.ndarray:
+    """Eq 16, numerically safe."""
+    d = jnp.maximum(jnp.asarray(d_global, jnp.float32), 1e-6)
+    return d * -jnp.expm1(-jnp.asarray(batch_bytes, jnp.float32) / d)
+
+
+def predict_batch_memory(
+    ndv: jnp.ndarray,
+    mean_len: jnp.ndarray,
+    non_null: jnp.ndarray,
+    batch_bytes: float,
+    *,
+    layout: jnp.ndarray | None = None,
+) -> BatchMemoryEstimate:
+    """Eq 16-17 batched over columns; sorted-layout conservative switch.
+
+    Args:
+      ndv: (B,) final NDV estimates.
+      mean_len: (B,) mean value byte length.
+      non_null: (B,) N - nulls.
+      batch_bytes: planner batch size B in bytes (scalar).
+      layout: optional (B,) detector codes. When given, sorted and
+        pseudo-sorted columns use the conservative D_batch = min(D_global,
+        rows_per_batch * len) bound instead of Eq 16 (paper §8 Limitation).
+
+    Returns:
+      BatchMemoryEstimate.
+    """
+    ndv = jnp.asarray(ndv, jnp.float32)
+    mean_len = jnp.maximum(jnp.asarray(mean_len, jnp.float32), 1e-6)
+    non_null = jnp.maximum(jnp.asarray(non_null, jnp.float32), 0.0)
+    B = jnp.float32(batch_bytes)
+
+    d_global = ndv * mean_len
+    d_batch = expected_batch_dictionary(B, d_global)
+
+    if layout is not None:
+        lay = jnp.asarray(layout)
+        is_sorted = (lay == int(Layout.SORTED)) | (lay == int(Layout.PSEUDO_SORTED))
+        # Sorted: each batch sees a fresh slice of the dictionary; expected
+        # per-batch distinct bytes ~ min(D_global, batch rows * len), i.e.
+        # every row may introduce a new value.
+        conservative = jnp.minimum(d_global, B)
+        d_batch = jnp.where(is_sorted, conservative, d_batch)
+
+    total_bytes = non_null * mean_len
+    n_batches = jnp.maximum(jnp.ceil(total_bytes / jnp.maximum(B, 1.0)), 0.0)
+    d_total = n_batches * d_batch                               # Eq 17
+    return BatchMemoryEstimate(
+        d_global=d_global, d_batch=d_batch, d_total=d_total, n_batches=n_batches
+    )

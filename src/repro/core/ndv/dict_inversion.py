@@ -1,0 +1,176 @@
+"""Dictionary size inversion (paper §4).
+
+Inverts the dictionary-encoded storage equation
+
+    S = ndv * len + (N - nulls) * ceil(log2(ndv)) / 8          (Eq 1)
+
+for ``ndv`` via Newton-Raphson, using the *exact* residual f but a smooth
+approximation of the derivative (the ceiling has zero derivative a.e.):
+
+    f'(ndv) ~= len + (N - nulls) / (8 * ndv * ln 2)            (Eq 3)
+
+Everything is vectorized over a batch of columns and expressed with
+fixed-iteration ``lax.fori_loop`` so it jits cleanly and maps 1:1 onto the
+Pallas kernel (`repro.kernels.newton_ndv`).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEWTON_ITERS = 32          # paper reports 5-10 to 1e-6; 32 is belt-and-braces
+NEWTON_TOL = 1e-6
+LN2 = 0.6931471805599453
+
+# Eq 5 thresholds for plain-encoding fallback detection.
+FALLBACK_NDV_RATIO = 0.9
+FALLBACK_SIZE_LO = 0.8
+FALLBACK_SIZE_HI = 1.2
+
+
+def ceil_log2(ndv: jnp.ndarray) -> jnp.ndarray:
+    """ceil(log2(ndv)) with ceil_log2(1) == 1 (1 bit minimum index width).
+
+    Parquet's RLE/bit-packed hybrid needs at least 1 bit per index even for a
+    single-entry dictionary, so we clamp below at 1 bit. Uses float log2 with
+    a tiny epsilon nudge so exact powers of two are stable.
+    """
+    ndv = jnp.maximum(ndv, 1.0)
+    bits = jnp.ceil(jnp.log2(ndv) - 1e-9)
+    return jnp.maximum(bits, 1.0)
+
+
+def smooth_log2(ndv: jnp.ndarray) -> jnp.ndarray:
+    """Continuous relaxation of ceil(log2(ndv)) used for derivative only."""
+    return jnp.maximum(jnp.log2(jnp.maximum(ndv, 1.0)), 1.0)
+
+
+def dict_size_model(
+    ndv: jnp.ndarray, mean_len: jnp.ndarray, non_null: jnp.ndarray
+) -> jnp.ndarray:
+    """Forward model: Eq 1 (what the writer's uncompressed size should be)."""
+    return ndv * mean_len + non_null * ceil_log2(ndv) / 8.0
+
+
+def residual(
+    ndv: jnp.ndarray,
+    size: jnp.ndarray,
+    mean_len: jnp.ndarray,
+    non_null: jnp.ndarray,
+) -> jnp.ndarray:
+    """Exact residual f(ndv) (Eq 2)."""
+    return dict_size_model(ndv, mean_len, non_null) - size
+
+
+def residual_derivative(
+    ndv: jnp.ndarray, mean_len: jnp.ndarray, non_null: jnp.ndarray
+) -> jnp.ndarray:
+    """Smooth derivative approximation (Eq 3)."""
+    return mean_len + non_null / (8.0 * jnp.maximum(ndv, 1.0) * LN2)
+
+
+class DictInversionResult(NamedTuple):
+    ndv: jnp.ndarray            # (B,) point estimate (>= 1)
+    iterations: jnp.ndarray     # (B,) iterations to convergence
+    converged: jnp.ndarray      # (B,) bool — |f| <= tol * scale at exit
+    likely_fallback: jnp.ndarray  # (B,) bool — Eq 5 fired; treat as lower bound
+
+
+def invert_dict_size(
+    size: jnp.ndarray,
+    num_values: jnp.ndarray,
+    null_count: jnp.ndarray,
+    mean_len: jnp.ndarray,
+    *,
+    iters: int = NEWTON_ITERS,
+    tol: float = NEWTON_TOL,
+) -> DictInversionResult:
+    """Solve Eq 2 for ndv, batched over columns.
+
+    Args:
+      size: (B,) total_uncompressed_size S in bytes.
+      num_values: (B,) row count N.
+      null_count: (B,) null count.
+      mean_len: (B,) mean value byte length (Eq 4 / schema width).
+
+    Returns:
+      DictInversionResult with ndv clamped to [1, N - nulls].
+    """
+    size = jnp.asarray(size, jnp.float32)
+    non_null = jnp.maximum(
+        jnp.asarray(num_values, jnp.float32) - jnp.asarray(null_count, jnp.float32),
+        0.0,
+    )
+    mean_len = jnp.maximum(jnp.asarray(mean_len, jnp.float32), 1e-6)
+
+    # Initial guess: index overhead assumed small (paper §4.2).
+    ndv0 = jnp.maximum(size / mean_len, 1.0)
+
+    # Relative tolerance scale: sizes span bytes..TB, so scale by S.
+    scale = jnp.maximum(size, 1.0)
+
+    def body(_, carry):
+        ndv, it, done = carry
+        f = residual(ndv, size, mean_len, non_null)
+        fp = residual_derivative(ndv, mean_len, non_null)
+        step = f / fp
+        new_ndv = jnp.clip(ndv - step, 1.0, jnp.maximum(non_null, 1.0))
+        now_done = jnp.abs(f) <= tol * scale
+        ndv = jnp.where(done | now_done, ndv, new_ndv)
+        it = it + jnp.where(done | now_done, 0, 1).astype(jnp.int32)
+        return ndv, it, done | now_done
+
+    ndv, iters_used, converged = jax.lax.fori_loop(
+        0,
+        iters,
+        body,
+        (ndv0, jnp.zeros_like(size, jnp.int32), jnp.zeros_like(size, bool)),
+    )
+    # The ceiling makes f piecewise-linear in ndv with jumps at powers of 2;
+    # after Newton converges on the smooth surrogate's root, snap within the
+    # final bit-width plateau by re-solving the linear piece exactly:
+    #   ndv = (S - non_null*bits/8) / len   with bits = ceil_log2(ndv*)
+    bits = ceil_log2(ndv)
+    linear_ndv = (size - non_null * bits / 8.0) / mean_len
+    # Only accept the snap if it stays inside the same bit plateau.
+    same_plateau = ceil_log2(jnp.maximum(linear_ndv, 1.0)) == bits
+    ndv = jnp.where(
+        same_plateau & (linear_ndv >= 1.0),
+        linear_ndv,
+        ndv,
+    )
+    ndv = jnp.clip(ndv, 1.0, jnp.maximum(non_null, 1.0))
+
+    # Plain-encoding fallback detection (Eq 5). The first indicator uses
+    # the solver's degenerate-high-NDV interpretation S/len (the converged
+    # root absorbs index overhead and sits at (1 - bits/(8 len)) * rows for
+    # plain-encoded chunks, which would miss the 0.9 threshold for narrow
+    # fixed-width types).
+    ndv_ratio = (size / mean_len) / jnp.maximum(non_null, 1.0)
+    size_ratio = size / jnp.maximum(non_null * mean_len, 1e-6)
+    likely_fallback = (
+        (ndv_ratio >= FALLBACK_NDV_RATIO)
+        & (size_ratio >= FALLBACK_SIZE_LO)
+        & (size_ratio <= FALLBACK_SIZE_HI)
+    )
+    return DictInversionResult(
+        ndv=ndv,
+        iterations=iters_used,
+        converged=converged,
+        likely_fallback=likely_fallback,
+    )
+
+
+def invert_dict_size_scalar(
+    size: float, num_values: float, null_count: float, mean_len: float
+) -> Tuple[float, bool]:
+    """Convenience scalar wrapper. Returns (ndv, likely_fallback)."""
+    res = invert_dict_size(
+        jnp.asarray([size]),
+        jnp.asarray([num_values]),
+        jnp.asarray([null_count]),
+        jnp.asarray([mean_len]),
+    )
+    return float(res.ndv[0]), bool(res.likely_fallback[0])

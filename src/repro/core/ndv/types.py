@@ -1,0 +1,265 @@
+"""Core datatypes for zero-cost NDV estimation.
+
+The estimator consumes *only* file metadata: per-column-chunk uncompressed
+sizes, row counts, null counts, and per-row-group min/max statistics. These
+types mirror what a columnar footer (Parquet / ORC / PQLite) exposes, in a
+batched struct-of-arrays layout so that thousands of columns (millions of
+chunks) can be estimated in one vectorized pass.
+
+Granularity note: Eq 1's ``total_uncompressed_size`` is a PER-COLUMN-CHUNK
+field (one chunk per row group per column). Dictionary inversion therefore
+runs per chunk and the column-level estimate aggregates chunk estimates by
+max — tight when distinct values are well-spread across row groups, an
+underestimate for sorted layouts (paper Table 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class Layout(enum.IntEnum):
+    """Data-layout classes produced by the distribution detector (paper §6.2)."""
+
+    WELL_SPREAD = 0
+    SORTED = 1
+    PSEUDO_SORTED = 2
+    MIXED = 3
+
+
+class PhysicalType(enum.IntEnum):
+    """Physical column types, as a columnar format would record them."""
+
+    INT32 = 0
+    INT64 = 1
+    FLOAT32 = 2
+    FLOAT64 = 3
+    BYTE_ARRAY = 4  # variable-length (strings / binary)
+    FIXED_LEN_BYTE_ARRAY = 5
+    DATE32 = 6
+    TIMESTAMP64 = 7
+    BOOL = 8
+
+    @property
+    def fixed_width(self) -> Optional[int]:
+        return {
+            PhysicalType.INT32: 4,
+            PhysicalType.INT64: 8,
+            PhysicalType.FLOAT32: 4,
+            PhysicalType.FLOAT64: 8,
+            PhysicalType.DATE32: 4,
+            PhysicalType.TIMESTAMP64: 8,
+            PhysicalType.BOOL: 1,
+        }.get(self)
+
+    @property
+    def is_integer_like(self) -> bool:
+        """Types for which the range bound ndv <= max-min+1 applies (Eq 14)."""
+        return self in (
+            PhysicalType.INT32,
+            PhysicalType.INT64,
+            PhysicalType.DATE32,
+            PhysicalType.BOOL,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnMetadata:
+    """Everything the estimator may read for ONE column of ONE file.
+
+    All fields come from footer metadata; none require touching data pages.
+    Per-row-group arrays have shape (n,) with n = num_row_groups.
+
+    Attributes:
+      chunk_sizes: per-chunk ``total_uncompressed_size`` (dictionary page +
+        data pages before compression) — Eq 1's S, per chunk.
+      chunk_rows / chunk_nulls: per-chunk value and null counts.
+      chunk_dict_encoded: per-chunk bit — False where the writer recorded a
+        plain-encoding fallback for that chunk.
+      mins / maxs: per-row-group min/max statistics as float64 *keys*
+        (numeric value for numeric types; order-preserving 8-byte prefix for
+        byte arrays).
+      min_lengths / max_lengths: byte lengths of the min/max values.
+      distinct_min_count / distinct_max_count: m_min, m_max — number of
+        distinct min (max) values across row groups (computed exactly for
+        small n, via HLL sketch at fleet scale).
+      physical_type: the column's physical type.
+    """
+
+    chunk_sizes: np.ndarray
+    chunk_rows: np.ndarray
+    chunk_nulls: np.ndarray
+    chunk_dict_encoded: np.ndarray
+    mins: np.ndarray
+    maxs: np.ndarray
+    min_lengths: np.ndarray
+    max_lengths: np.ndarray
+    distinct_min_count: float
+    distinct_max_count: float
+    physical_type: PhysicalType
+    column_name: str = ""
+
+    @property
+    def num_row_groups(self) -> int:
+        return int(np.asarray(self.chunk_sizes).size)
+
+    @property
+    def total_uncompressed_size(self) -> float:
+        return float(np.sum(self.chunk_sizes))
+
+    @property
+    def num_values(self) -> float:
+        return float(np.sum(self.chunk_rows))
+
+    @property
+    def null_count(self) -> float:
+        return float(np.sum(self.chunk_nulls))
+
+    @property
+    def non_null(self) -> float:
+        return self.num_values - self.null_count
+
+
+@dataclasses.dataclass(frozen=True)
+class NDVEstimate:
+    """Result of hybrid estimation for one column (paper §7)."""
+
+    ndv: float                  # final hybrid estimate (Eq 13 + bounds)
+    ndv_dict: float             # dictionary-inversion estimate (§4)
+    ndv_minmax: float           # coupon-collector estimate (§5)
+    layout: Layout              # detector classification (§6.2)
+    is_lower_bound: bool        # plain-encoding fallback / saturation
+    mean_len: float             # len used for inversion (Eq 4 or schema width)
+    len_sample_size: int        # |V|, reliability indicator for len
+    overlap_ratio: float        # detector metric (Eq 11)
+    monotonicity: float         # detector metric (Eq 12)
+    confidence: float           # heuristic 0-1 quality score
+    column_name: str = ""
+
+    @property
+    def relative_error(self) -> Optional[float]:
+        return None
+
+
+@dataclasses.dataclass
+class ColumnBatch:
+    """Struct-of-arrays metadata for B columns with up to R row groups each.
+
+    This is the layout the vectorized estimators and the Pallas kernels
+    consume. Ragged row-group counts are padded to R with ``valid`` masks.
+    """
+
+    chunk_S: jnp.ndarray            # (B, R) float32 — per-chunk size (Eq 1 S)
+    chunk_rows: jnp.ndarray         # (B, R) float32
+    chunk_nulls: jnp.ndarray        # (B, R) float32
+    chunk_dict_encoded: jnp.ndarray  # (B, R) bool
+    N: jnp.ndarray                  # (B,) float32 — total row count
+    nulls: jnp.ndarray              # (B,) float32
+    n_groups: jnp.ndarray           # (B,) int32 — row groups per column
+    mins: jnp.ndarray               # (B, R) float32 key space
+    maxs: jnp.ndarray               # (B, R) float32
+    valid: jnp.ndarray              # (B, R) bool — row-group mask
+    m_min: jnp.ndarray              # (B,) float32 — distinct min count
+    m_max: jnp.ndarray              # (B,) float32 — distinct max count
+    mean_len: jnp.ndarray           # (B,) float32 — Eq 4 (or schema width)
+    len_sample: jnp.ndarray         # (B,) int32 — |V|
+    fixed_width: jnp.ndarray        # (B,) bool
+    int_like: jnp.ndarray           # (B,) bool — Eq 14 applies
+    single_byte: jnp.ndarray        # (B,) bool — Eq 15 applies
+
+    @property
+    def batch(self) -> int:
+        return int(self.chunk_S.shape[0])
+
+    @property
+    def max_groups(self) -> int:
+        return int(self.chunk_S.shape[1])
+
+    @classmethod
+    def from_columns(cls, cols: Sequence[ColumnMetadata]) -> "ColumnBatch":
+        """Pack per-column metadata into padded struct-of-arrays."""
+        b = len(cols)
+        r = max((c.num_row_groups for c in cols), default=1)
+        r = max(r, 1)
+        f = lambda: np.zeros((b,), np.float32)  # noqa: E731
+        g = lambda: np.zeros((b, r), np.float32)  # noqa: E731
+        chunk_S, chunk_rows, chunk_nulls = g(), g(), g()
+        chunk_dict = np.zeros((b, r), bool)
+        N, nulls, m_min, m_max, mean_len = f(), f(), f(), f(), f()
+        n_groups = np.zeros((b,), np.int32)
+        len_sample = np.zeros((b,), np.int32)
+        mins, maxs = g(), g()
+        valid = np.zeros((b, r), bool)
+        fixed_width = np.zeros((b,), bool)
+        int_like = np.zeros((b,), bool)
+        single_byte = np.zeros((b,), bool)
+        for i, c in enumerate(cols):
+            n = c.num_row_groups
+            chunk_S[i, :n] = np.asarray(c.chunk_sizes, np.float32)
+            chunk_rows[i, :n] = np.asarray(c.chunk_rows, np.float32)
+            chunk_nulls[i, :n] = np.asarray(c.chunk_nulls, np.float32)
+            chunk_dict[i, :n] = np.asarray(c.chunk_dict_encoded, bool)
+            N[i] = c.num_values
+            nulls[i] = c.null_count
+            n_groups[i] = n
+            mins[i, :n] = np.asarray(c.mins, np.float32)[:n]
+            maxs[i, :n] = np.asarray(c.maxs, np.float32)[:n]
+            valid[i, :n] = True
+            m_min[i] = c.distinct_min_count
+            m_max[i] = c.distinct_max_count
+            w = c.physical_type.fixed_width
+            if w is not None:
+                mean_len[i] = float(w)
+                len_sample[i] = n * 2
+                fixed_width[i] = True
+            elif n == 1:
+                # single row group fallback: (|min| + |max|)/2 (paper §4.3)
+                mean_len[i] = float(
+                    (float(c.min_lengths[0]) + float(c.max_lengths[0])) / 2.0
+                )
+                len_sample[i] = 2
+            else:
+                lens = np.concatenate([
+                    np.asarray(c.min_lengths, np.float64)[:n],
+                    np.asarray(c.max_lengths, np.float64)[:n],
+                ])
+                mean_len[i] = float(lens.mean()) if lens.size else 1.0
+                len_sample[i] = int(c.distinct_min_count + c.distinct_max_count)
+            int_like[i] = c.physical_type.is_integer_like
+            single_byte[i] = (
+                c.physical_type == PhysicalType.BYTE_ARRAY
+                and float(np.max(np.asarray(c.max_lengths)[:n], initial=0.0)) <= 1.0
+            )
+        J = jnp.asarray
+        return cls(
+            chunk_S=J(chunk_S), chunk_rows=J(chunk_rows),
+            chunk_nulls=J(chunk_nulls), chunk_dict_encoded=J(chunk_dict),
+            N=J(N), nulls=J(nulls), n_groups=J(n_groups),
+            mins=J(mins), maxs=J(maxs), valid=J(valid),
+            m_min=J(m_min), m_max=J(m_max), mean_len=J(mean_len),
+            len_sample=J(len_sample), fixed_width=J(fixed_width),
+            int_like=J(int_like), single_byte=J(single_byte),
+        )
+
+
+# Register ColumnBatch as a pytree so it can cross jit boundaries.
+def _cb_flatten(cb: "ColumnBatch"):
+    fields = [f.name for f in dataclasses.fields(ColumnBatch)]
+    return tuple(getattr(cb, k) for k in fields), tuple(fields)
+
+
+def _cb_unflatten(fields, children):
+    return ColumnBatch(**dict(zip(fields, children)))
+
+
+import jax.tree_util as _tree_util  # noqa: E402
+
+_tree_util.register_pytree_node(ColumnBatch, _cb_flatten, _cb_unflatten)
+
+
+# Printable-ASCII cardinality bound for single-byte strings (Eq 15).
+SINGLE_BYTE_BOUND = 128.0

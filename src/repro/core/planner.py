@@ -1,0 +1,173 @@
+"""Cost-based planning driven by zero-cost NDV estimates.
+
+This is the paper's application layer (§1, §8, §10.1) retargeted from the
+Theseus GPU engine to this framework's TPU data plane. Three consumers:
+
+1. **Batch memory planning** — size host-side dictionary staging buffers and
+   device prefetch allocations from Eq 16-17 without reading batches.
+2. **Embedding shard planning** — decide vocab-axis sharding of embedding
+   tables from the estimated distinct-token count (the analogue of Theseus'
+   aggregate-pushdown memory model: shard when the estimated working set
+   exceeds a per-device budget).
+3. **Aggregate pushdown** — the paper's original optimization: push a
+   partial aggregate below a join/shuffle when the estimated group count
+   (NDV) makes the partial result smaller than the input.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.ndv.batch_memory import predict_batch_memory
+from repro.core.ndv.types import Layout, NDVEstimate
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    """Per-column staging-memory plan for the data pipeline."""
+
+    column: str
+    d_global_bytes: float      # full-column dictionary size
+    d_batch_bytes: float       # expected per-batch dictionary (Eq 16)
+    n_batches: int
+    total_bytes: float         # Eq 17
+    conservative: bool         # sorted layout -> D_global provisioning
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingShardPlan:
+    """Vocab-axis sharding decision for an embedding table."""
+
+    column: str
+    vocab_size: int            # table rows (schema vocab)
+    estimated_active: float    # NDV estimate = distinct tokens actually used
+    embed_bytes_per_row: int
+    shard_vocab: bool          # shard vocab axis over `model`?
+    num_shards: int
+    reason: str
+
+
+@dataclasses.dataclass(frozen=True)
+class PushdownDecision:
+    column: str
+    ndv: float
+    input_rows: float
+    reduction_ratio: float     # estimated |aggregate| / |input|
+    push_down: bool
+
+
+class NDVPlanner:
+    """Plans pipeline memory + sharding from metadata-only NDV estimates."""
+
+    def __init__(
+        self,
+        *,
+        batch_bytes: int = 64 << 20,
+        device_budget_bytes: int = 256 << 20,
+        num_model_shards: int = 16,
+        pushdown_threshold: float = 0.5,
+    ):
+        self.batch_bytes = batch_bytes
+        self.device_budget_bytes = device_budget_bytes
+        self.num_model_shards = num_model_shards
+        self.pushdown_threshold = pushdown_threshold
+
+    # -- (1) batch memory ---------------------------------------------------
+    def memory_plan(
+        self, est: NDVEstimate, non_null: float
+    ) -> MemoryPlan:
+        conservative = est.layout in (Layout.SORTED, Layout.PSEUDO_SORTED)
+        bm = predict_batch_memory(
+            np.asarray([est.ndv], np.float32),
+            np.asarray([est.mean_len], np.float32),
+            np.asarray([non_null], np.float32),
+            float(self.batch_bytes),
+            layout=np.asarray([int(est.layout)], np.int32),
+        )
+        return MemoryPlan(
+            column=est.column_name,
+            d_global_bytes=float(bm.d_global[0]),
+            d_batch_bytes=float(bm.d_batch[0]),
+            n_batches=int(bm.n_batches[0]),
+            total_bytes=float(bm.d_total[0]),
+            conservative=conservative,
+        )
+
+    # -- (2) embedding sharding ----------------------------------------------
+    def embedding_shard_plan(
+        self,
+        est: NDVEstimate,
+        *,
+        vocab_size: int,
+        d_model: int,
+        dtype_bytes: int = 2,
+    ) -> EmbeddingShardPlan:
+        """Shard the vocab axis when the *active* working set is too big.
+
+        The gather working set during a step is roughly
+        min(ndv, vocab) * d_model * dtype_bytes (the distinct rows touched).
+        If even the active set exceeds the device budget, vocab-sharding the
+        table (and paying an all-gather on activations instead) is required;
+        when the active set is tiny, replicating or data-sharding the table
+        avoids the collective entirely.
+        """
+        row_bytes = d_model * dtype_bytes
+        active = min(est.ndv, float(vocab_size))
+        # Lower-bound estimates must be treated pessimistically (§4.4).
+        if est.is_lower_bound:
+            active = float(vocab_size)
+        active_bytes = active * row_bytes
+        table_bytes = vocab_size * row_bytes
+        if table_bytes <= self.device_budget_bytes:
+            return EmbeddingShardPlan(
+                est.column_name, vocab_size, active, row_bytes,
+                shard_vocab=False, num_shards=1,
+                reason=f"table {table_bytes/1e6:.0f}MB fits budget",
+            )
+        if active_bytes <= self.device_budget_bytes * 0.25:
+            # Few distinct tokens touched: keep table sharded over data axis
+            # (FSDP-style), gather only rows needed.
+            return EmbeddingShardPlan(
+                est.column_name, vocab_size, active, row_bytes,
+                shard_vocab=False, num_shards=1,
+                reason=(
+                    f"active set {active_bytes/1e6:.0f}MB << budget; "
+                    "row-gather beats vocab sharding"
+                ),
+            )
+        shards = min(
+            self.num_model_shards,
+            max(1, math.ceil(table_bytes / self.device_budget_bytes)),
+        )
+        return EmbeddingShardPlan(
+            est.column_name, vocab_size, active, row_bytes,
+            shard_vocab=True, num_shards=shards,
+            reason=f"active {active_bytes/1e6:.0f}MB needs {shards} vocab shards",
+        )
+
+    # -- (3) aggregate pushdown ----------------------------------------------
+    def pushdown(self, est: NDVEstimate, input_rows: float) -> PushdownDecision:
+        ratio = min(est.ndv / max(input_rows, 1.0), 1.0)
+        if est.is_lower_bound:
+            ratio = 1.0  # unknown-high NDV: do not push down
+        return PushdownDecision(
+            column=est.column_name,
+            ndv=est.ndv,
+            input_rows=input_rows,
+            reduction_ratio=ratio,
+            push_down=ratio < self.pushdown_threshold,
+        )
+
+    # -- dataset-level convenience -------------------------------------------
+    def plan_dataset(
+        self,
+        estimates: Sequence[NDVEstimate],
+        non_nulls: Sequence[float],
+    ) -> Dict[str, MemoryPlan]:
+        return {
+            e.column_name: self.memory_plan(e, nn)
+            for e, nn in zip(estimates, non_nulls)
+        }

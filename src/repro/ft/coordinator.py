@@ -1,0 +1,166 @@
+"""Fault-tolerance coordinator: heartbeats, stragglers, elastic rescale.
+
+On a real multi-pod deployment this wraps the cluster-coordination service
+(GCS runtime / Borg events). The container is single-host, so the
+coordinator is driven either by real wall-clock heartbeats (trainer loop)
+or by an injectable ``FaultPlan`` that simulates node failures and
+stragglers deterministically — which is what the integration tests and the
+`examples/fault_tolerant_train.py` driver exercise.
+
+Policies implemented:
+  * failure detection — a worker missing `miss_threshold` consecutive
+    heartbeats is declared dead; the trainer restores from the latest
+    checkpoint and continues on the surviving mesh (elastic data split).
+  * straggler mitigation — per-step duration EWMA; a worker slower than
+    `straggler_factor` x the fleet median for `patience` steps is evicted
+    (same elastic path) rather than capping fleet throughput.
+  * elastic rescale — data-parallel degree changes between runs; the
+    deterministic data pipeline re-seeds by (step, epoch) so no sample is
+    skipped or double-visited beyond one batch boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class WorkerState:
+    worker_id: int
+    last_heartbeat: float
+    missed: int = 0
+    step_ewma: Optional[float] = None
+    slow_streak: int = 0
+    alive: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    step: int
+    kind: str            # "fail" | "straggle" | "recover"
+    worker_id: int
+    factor: float = 1.0  # slowdown factor for stragglers
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Deterministic fault injection for tests/examples."""
+
+    events: Sequence[FaultEvent] = ()
+
+    def at(self, step: int) -> List[FaultEvent]:
+        return [e for e in self.events if e.step == step]
+
+
+class Coordinator:
+    def __init__(
+        self,
+        num_workers: int,
+        *,
+        heartbeat_interval: float = 10.0,
+        miss_threshold: int = 3,
+        straggler_factor: float = 1.5,
+        patience: int = 5,
+        ewma: float = 0.9,
+    ):
+        now = time.monotonic()
+        self.workers: Dict[int, WorkerState] = {
+            i: WorkerState(i, now) for i in range(num_workers)
+        }
+        self.heartbeat_interval = heartbeat_interval
+        self.miss_threshold = miss_threshold
+        self.straggler_factor = straggler_factor
+        self.patience = patience
+        self.ewma = ewma
+        self.log: List[str] = []
+
+    # -- signals ----------------------------------------------------------------
+    def heartbeat(self, worker_id: int, step_time: Optional[float] = None):
+        w = self.workers[worker_id]
+        w.last_heartbeat = time.monotonic()
+        w.missed = 0
+        if step_time is not None:
+            w.step_ewma = (
+                step_time
+                if w.step_ewma is None
+                else self.ewma * w.step_ewma + (1 - self.ewma) * step_time
+            )
+
+    def tick(self) -> None:
+        """Periodic scan: mark missed heartbeats."""
+        now = time.monotonic()
+        for w in self.workers.values():
+            if not w.alive:
+                continue
+            if now - w.last_heartbeat > self.heartbeat_interval:
+                w.missed += 1
+                w.last_heartbeat = now
+
+    # -- decisions -----------------------------------------------------------------
+    def dead_workers(self) -> List[int]:
+        out = []
+        for w in self.workers.values():
+            if w.alive and w.missed >= self.miss_threshold:
+                w.alive = False
+                self.log.append(f"worker {w.worker_id} declared DEAD")
+                out.append(w.worker_id)
+        return out
+
+    def stragglers(self) -> List[int]:
+        times = [
+            w.step_ewma for w in self.workers.values() if w.alive and w.step_ewma
+        ]
+        if len(times) < 2:
+            return []
+        med = float(np.median(times))
+        out = []
+        for w in self.workers.values():
+            if not w.alive or w.step_ewma is None:
+                continue
+            if w.step_ewma > self.straggler_factor * med:
+                w.slow_streak += 1
+            else:
+                w.slow_streak = 0
+            if w.slow_streak >= self.patience:
+                w.alive = False
+                self.log.append(
+                    f"worker {w.worker_id} evicted as STRAGGLER "
+                    f"({w.step_ewma:.3f}s vs median {med:.3f}s)"
+                )
+                out.append(w.worker_id)
+        return out
+
+    def alive_workers(self) -> List[int]:
+        return [w.worker_id for w in self.workers.values() if w.alive]
+
+    # -- fault injection --------------------------------------------------------
+    def apply_plan(self, plan: FaultPlan, step: int) -> bool:
+        """Apply simulated events; True if membership changed."""
+        changed = False
+        for e in plan.at(step):
+            w = self.workers[e.worker_id]
+            if e.kind == "fail":
+                w.missed = self.miss_threshold
+                changed |= bool(self.dead_workers())
+            elif e.kind == "straggle":
+                w.step_ewma = (w.step_ewma or 1.0) * e.factor
+                w.slow_streak = self.patience
+                changed |= bool(self.stragglers())
+            elif e.kind == "recover":
+                w.alive = True
+                w.missed = 0
+                w.slow_streak = 0
+                self.log.append(f"worker {e.worker_id} rejoined")
+                changed = True
+        return changed
+
+
+def elastic_batch_split(global_batch: int, alive: int, total: int) -> int:
+    """Per-step global batch after losing workers: keep per-worker batch
+    constant (reduce global batch) — the standard elastic-DP policy that
+    avoids OOM on survivors; the LR is rescaled linearly by the caller."""
+    per = global_batch // total
+    return per * alive

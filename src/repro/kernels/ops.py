@@ -1,0 +1,64 @@
+"""Public jit'd entry points for the NDV kernels.
+
+Dispatch policy: on TPU the Pallas kernels run compiled; elsewhere they run
+in ``interpret=True`` mode (bit-faithful kernel-body execution on CPU). The
+``backend`` argument forces either path or the pure-jnp reference
+(``"ref"``) — benchmarks use that to measure kernel-vs-XLA deltas.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import hll as _hll
+from repro.kernels import minmax_scan as _mm
+from repro.kernels import newton_ndv as _newton
+from repro.kernels import ref as _ref
+
+Backend = Literal["auto", "pallas", "ref"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def dict_newton(size, rows, nulls, mean_len, *, backend: Backend = "auto"):
+    """Batched Eq-2 dictionary-size inversion (flat float32 arrays)."""
+    if backend == "ref":
+        return _ref.ref_dict_newton(size, rows, nulls, mean_len)
+    return _newton.dict_newton(
+        size, rows, nulls, mean_len, interpret=_interpret()
+    )
+
+
+def coupon_newton(m_obs, n_draws, *, backend: Backend = "auto"):
+    """Batched Eq-8 coupon-collector inversion (flat float32 arrays)."""
+    if backend == "ref":
+        return _ref.ref_coupon_newton(m_obs, n_draws)
+    return _newton.coupon_newton(m_obs, n_draws, interpret=_interpret())
+
+
+def minmax_scan(mins, maxs, valid, *, backend: Backend = "auto"):
+    """Detector metric reductions over (B, R) row-group statistics."""
+    if backend == "ref":
+        return _ref.ref_minmax_scan(mins, maxs, valid)
+    return _mm.minmax_scan(mins, maxs, valid, interpret=_interpret())
+
+
+def hll_fold(keys, valid, *, p: int = 8, backend: Backend = "auto"):
+    """HLL register fold over (B, R) uint32 keys -> (B, 2^p) registers."""
+    if backend == "ref":
+        return _ref.ref_hll_fold(keys, valid, p=p)
+    return _hll.hll_fold(keys, valid, p=p, interpret=_interpret())
+
+
+def hll_count(registers):
+    """Register banks -> cardinality estimates."""
+    return _hll.hll_count(registers)

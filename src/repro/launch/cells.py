@@ -1,0 +1,275 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowered jit program.
+
+Everything is ShapeDtypeStruct-based (zero allocation). Each cell returns
+the jit-wrapped function plus abstract inputs and shardings, so dryrun.py
+can ``.lower().compile()`` and roofline.py can read cost/memory analyses
+off the compiled artifact.
+
+Sharding strategy (see DESIGN.md §5):
+  * weights: logical rules — FSDP over "data", TP over "model";
+  * attention TP: heads-sharded when head counts divide the model axis,
+    otherwise Megatron-style SEQUENCE parallelism (q/k/v seq-sharded over
+    "model", k/v all-gathered, MLP ff-sharded) — selected per arch;
+  * decode: cache time-axis sharded over "model" ("data" too for batch=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeConfig, cell_supported, get_shape
+from repro.launch.mesh import mesh_axis_size
+from repro.models import params as MP
+from repro.models import registry
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as SH
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainState, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Per-arch rule resolution
+# ---------------------------------------------------------------------------
+
+
+def rules_for(cfg: ModelConfig, mesh, shape: ShapeConfig) -> SH.Rules:
+    rules = dict(SH.DEFAULT_RULES)
+    msize = mesh_axis_size(mesh, "model")
+    dsize = mesh_axis_size(mesh, "data")
+    psize = mesh_axis_size(mesh, "pod")
+
+    heads_divide = (
+        cfg.num_heads % msize == 0 and cfg.num_kv_heads % msize == 0
+    )
+    if not heads_divide:
+        # Megatron sequence-parallel attention: weights for q/k/v/o stay
+        # FSDP-only; activations shard the sequence over "model".
+        rules["heads"] = None
+        rules["kv_heads"] = None
+        rules["seq_model"] = "model"
+    else:
+        rules["seq_model"] = None
+
+    # Batch sharding: drop axes that do not divide the global batch.
+    per_batch_axes = []
+    b = shape.global_batch
+    if shape.kind == "train":
+        b = b // max(shape.microbatches, 1)
+    for ax, size in (("pod", psize), ("data", dsize)):
+        if ax in mesh.axis_names and size > 1 and b % size == 0:
+            per_batch_axes.append(ax)
+            b //= size
+    rules["batch"] = tuple(per_batch_axes) if per_batch_axes else None
+
+    if shape.kind == "decode":
+        # Cache time-axis sharding: prefer axes not already carrying the
+        # batch (data) or the heads (model). When heads-TP owns "model",
+        # the KV heads stay sharded and time takes "data" if free.
+        t_axes = []
+        if "data" not in (rules["batch"] or ()) and dsize > 1:
+            t_axes.append("data")
+        if not heads_divide and msize > 1:
+            t_axes.append("model")
+        rules["seq_sharded"] = tuple(t_axes) if t_axes else None
+        rules["seq_model"] = None
+    # MoE dispatch buffers: follow attention seq-parallelism when expert
+    # weights are small enough to replicate over "model" (granite); for
+    # big-expert models the weights keep ff-TP and the buffers become the
+    # TP-gathered operand (mixtral) — see EXPERIMENTS.md §Perf.
+    if cfg.moe is not None:
+        expert_bytes = 3 * cfg.d_model * cfg.d_ff * cfg.moe.total_experts * 2
+        big_experts = expert_bytes > (1 << 30)  # >1 GiB per layer
+        rules["moe_seq"] = None if big_experts else rules.get("seq_model")
+        if not big_experts:
+            # replicate small expert weights over "model" (FSDP over "data"
+            # only) — beats 32-wide ff-TP shards, EXPERIMENTS.md §Perf
+            rules["ff"] = None
+    else:
+        rules["moe_seq"] = rules.get("seq_model")
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        batch: Dict[str, jax.ShapeDtypeStruct] = {
+            "tokens": jax.ShapeDtypeStruct((b, s), i32),
+        }
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+        if cfg.family == "encdec":
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, s, cfg.encdec.frontend_dim), jnp.bfloat16
+            )
+        if cfg.family == "vlm":
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.vlm.num_patches, cfg.vlm.vision_dim), jnp.bfloat16
+            )
+        return batch
+    # decode: one new token against a cache of length s
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+        "positions": jax.ShapeDtypeStruct((b, 1), i32),
+    }
+
+
+def batch_shardings(batch_abs, mesh, rules) -> Dict[str, NamedSharding]:
+    out = {}
+    for k, v in batch_abs.items():
+        axes: Tuple[Optional[str], ...] = ("batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = SH.checked_sharding(mesh, v.shape, axes, rules)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+
+
+class Cell(NamedTuple):
+    fn: Callable            # jit-wrapped
+    args: Tuple             # abstract args for .lower()
+    cfg: ModelConfig
+    shape: ShapeConfig
+    description: str
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    rule_overrides=None,
+    cfg_overrides=None,
+    microbatches=None,
+) -> Cell:
+    cfg = registry.get_config(arch)
+    shape = get_shape(shape_name)
+    if microbatches is None and cfg.train_microbatches is not None:
+        microbatches = cfg.train_microbatches
+    if microbatches is not None:
+        shape = dataclasses.replace(shape, microbatches=microbatches)
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(reason)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    cfg = _pad_for_mesh(cfg, mesh)
+    model = registry.build_model(cfg)
+    rules = rules_for(cfg, mesh, shape)
+    if rule_overrides:
+        rules.update(rule_overrides)
+    specs = model.specs()
+    p_shard = SH.spec_shardings(mesh, specs, rules)
+    p_abs = MP.abstract_params(specs, dtype=jnp.dtype(cfg.param_dtype))
+
+    if shape.kind == "train":
+        o_abs = opt.adamw_abstract_state(p_abs)
+        o_shard = opt.AdamWState(
+            step=SH.named_sharding(mesh, (), rules),
+            mu=p_shard, nu=p_shard, master=p_shard,
+        )
+        state_abs = TrainState(
+            params=p_abs, opt=o_abs,
+            rng=jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        state_shard = TrainState(
+            params=p_shard, opt=o_shard,
+            rng=SH.named_sharding(mesh, (None,), rules),
+        )
+        batch_abs = input_specs(cfg, shape)
+        b_shard = batch_shardings(batch_abs, mesh, rules)
+        step = make_train_step(
+            model, cfg, opt.AdamWConfig(),
+            schedule=lambda s: jnp.float32(1.0),
+            num_microbatches=shape.microbatches,
+        )
+
+        def step_with_rules(state, batch):
+            with SH.use_rules(rules):
+                return step(state, batch)
+
+        fn = jax.jit(
+            step_with_rules,
+            in_shardings=(state_shard, b_shard),
+            out_shardings=(state_shard, None),
+            donate_argnums=(0,),
+        )
+        return Cell(fn, (state_abs, batch_abs), cfg, shape,
+                    f"{arch}/{shape_name}: train_step (mb={shape.microbatches})")
+
+    if shape.kind == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        b_shard = batch_shardings(batch_abs, mesh, rules)
+
+        def prefill(params, batch):
+            # serving-prefill contract: only the last position's logits
+            with SH.use_rules(rules):
+                out = model.forward(params, batch, last_only=True)
+            return out.logits
+
+        fn = jax.jit(prefill, in_shardings=(p_shard, b_shard))
+        return Cell(fn, (p_abs, batch_abs), cfg, shape,
+                    f"{arch}/{shape_name}: prefill forward")
+
+    # decode
+    cache_abs, cache_shard = _cache_abstract(model, cfg, shape, mesh, rules)
+    toks = input_specs(cfg, shape)
+    t_shard = batch_shardings(toks, mesh, rules)
+
+    def serve_step(params, tokens, positions, cache):
+        with SH.use_rules(rules):
+            out = model.decode_step(params, tokens, positions, cache)
+        return jnp.argmax(out.logits[:, -1, :], axis=-1), out.cache
+
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(p_shard, t_shard["tokens"], t_shard["positions"], cache_shard),
+        out_shardings=(None, cache_shard),
+        donate_argnums=(3,),
+    )
+    return Cell(
+        fn, (p_abs, toks["tokens"], toks["positions"], cache_abs), cfg, shape,
+        f"{arch}/{shape_name}: serve_step (cache={shape.seq_len})",
+    )
+
+
+def _cache_abstract(model, cfg, shape, mesh, rules):
+    b = shape.global_batch
+    if cfg.family == "encdec":
+        sp = model.cache_spec(b, shape.seq_len, enc_len=4096)
+    else:
+        sp = model.cache_spec(b, shape.seq_len)
+    abs_, shard_ = {}, {}
+    for k, v in sp.items():
+        dt = jnp.int32 if "index" in k else (
+            jnp.float32 if k in ("ssm", "wkv") else jnp.dtype(cfg.dtype)
+        )
+        abs_[k] = jax.ShapeDtypeStruct(v.shape, dt)
+        shard_[k] = SH.checked_sharding(mesh, v.shape, v.axes, rules)
+    return abs_, shard_
+
+
+def _pad_for_mesh(cfg: ModelConfig, mesh) -> ModelConfig:
+    """Pad vocab to divide the model axis (standard practice; padded rows
+    are dead weight, recorded as waste in the roofline's useful-flops ratio)."""
+    import math
+
+    msize = mesh_axis_size(mesh, "model")
+    mult = math.lcm(128, msize)
+    v = cfg.vocab_size
+    pad = (-v) % mult
+    if pad:
+        cfg = cfg.scaled(vocab_size=v + pad)
+    return cfg

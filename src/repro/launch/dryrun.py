@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count on first init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — bytes/device proof-of-fit,
+  * compiled.cost_analysis()    — HLO flops/bytes for the roofline,
+  * collective operand bytes parsed from the compiled HLO text.
+"""
+import argparse          # noqa: E402
+import gzip              # noqa: E402
+import json              # noqa: E402
+import re                # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.shapes import SHAPES, cell_supported, get_shape  # noqa: E402
+from repro.launch import cells as C  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import registry  # noqa: E402
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|pred|f64|s64|u64)\[([0-9,]*)\]")
+
+_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2,
+    "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8, "u64": 8,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in an HLO snippet."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-collective operand bytes from compiled HLO (see ROOFLINE spec)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    counts = {k: 0 for k in COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # result-typed op line: "%x = bf16[...] all-gather(...)"
+        for op in COLLECTIVE_OPS:
+            if f" {op}(" in s or f"= {op}" in s or re.search(rf"\b{op}\b", s.split("(")[0]):
+                lhs = s.split("=", 1)
+                if len(lhs) == 2 and op in lhs[1].split("(")[0]:
+                    # operand bytes: use the RESULT shape (equals operand
+                    # volume for AG/AR/RS at the fan-in point)
+                    out[op] += _shape_bytes(lhs[0])
+                    counts[op] += 1
+                break
+    out_counts = {f"{k}_count": v for k, v in counts.items()}
+    out.update(out_counts)
+    out["total"] = sum(out[k] for k in COLLECTIVE_OPS)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh, verbose: bool = True) -> dict:
+    t0 = time.time()
+    cell = C.build_cell(arch, shape_name, mesh)
+    rec: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "description": cell.description,
+    }
+    with mesh:
+        lowered = cell.fn.lower(*cell.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["flops"] = float(cost.get("flops", 0.0))
+        rec["bytes_accessed"] = float(cost.get("bytes accessed", 0.0))
+        for key in ("bytes accessed0{}", "utilization0{}"):
+            pass
+        try:
+            rec["memory"] = {
+                "argument_size_in_bytes": mem.argument_size_in_bytes,
+                "output_size_in_bytes": mem.output_size_in_bytes,
+                "temp_size_in_bytes": mem.temp_size_in_bytes,
+                "generated_code_size_in_bytes": mem.generated_code_size_in_bytes,
+            }
+        except Exception:
+            rec["memory"] = str(mem)
+        hlo = compiled.as_text()
+        # persist HLO so roofline/hillclimb re-analysis never recompiles
+        os.makedirs("results/hlo", exist_ok=True)
+        hlo_path = f"results/hlo/{arch}_{shape_name}_{rec['mesh']}.txt.gz"
+        with gzip.open(hlo_path, "wt") as f:
+            f.write(hlo)
+        rec["hlo_path"] = hlo_path
+        rec["collectives_flat"] = collective_bytes(hlo)
+        rec["hlo_ops"] = len(hlo.splitlines())
+        # trip-count-aware per-device analysis (the roofline's real input)
+        ana = hlo_analysis.analyze(hlo)
+        rec["analysis"] = {
+            "flops_per_device": ana.flops,
+            "bytes_per_device": ana.bytes,
+            "collective_bytes_per_device": ana.collective_bytes,
+            "collective_count": ana.collective_count,
+            "per_collective": ana.per_collective,
+        }
+    if verbose:
+        a = rec["analysis"]
+        print(f"[dryrun] {arch:>24s} x {shape_name:<12s} mesh={rec['mesh']:>9s} "
+              f"compile={rec['compile_s']:6.1f}s flops/dev={a['flops_per_device']:.3e} "
+              f"coll/dev={a['collective_bytes_per_device']:.3e}B")
+        print(f"         memory_analysis: {rec['memory']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", type=str, default="results/dryrun.json")
+    ap.add_argument("--force", action="store_true",
+                    help="recompile even if a cached record exists")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(multi_pod=False),
+                  make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    results = []
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = (
+        set()
+        if args.force
+        else {(r["arch"], r["shape"], r["mesh"]) for r in results if "error" not in r}
+    )
+
+    archs = registry.ARCHS if (args.all or not args.arch) else [registry.canonical(args.arch)]
+    shapes = [s.name for s in SHAPES] if (args.all or not args.shape) else [args.shape]
+
+    for mesh in meshes:
+        mesh_name = "x".join(map(str, mesh.devices.shape))
+        for arch in archs:
+            cfg = registry.get_config(arch)
+            for shape_name in shapes:
+                ok, reason = cell_supported(cfg, get_shape(shape_name))
+                if not ok:
+                    print(f"[skip]   {arch} x {shape_name}: {reason}")
+                    continue
+                if (arch, shape_name, mesh_name) in done:
+                    print(f"[cached] {arch} x {shape_name} x {mesh_name}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mesh)
+                except Exception as e:  # record failures as bugs to fix
+                    rec = {
+                        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+                        "error": f"{type(e).__name__}: {e}",
+                        "traceback": traceback.format_exc()[-2000:],
+                    }
+                    print(f"[FAIL]   {arch} x {shape_name}: {rec['error'][:200]}")
+                results = [
+                    r for r in results
+                    if (r["arch"], r["shape"], r["mesh"]) != (arch, shape_name, mesh_name)
+                ] + [rec]
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results if "error" not in r)
+    print(f"[dryrun] {n_ok}/{len(results)} cells OK -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,122 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", "")
+).strip()
+
+"""Perf hillclimbing driver (§Perf methodology).
+
+Each invocation compiles ONE cell with a named variant (config / rule /
+microbatch overrides), runs the trip-count-aware HLO analysis, and appends
+a record to results/perf_log.json:
+
+    PYTHONPATH=src python -m repro.launch.perf --arch granite-moe-3b-a800m \
+        --shape train_4k --variant moe_local \
+        --cfg '{"moe": {"num_experts": 40, "top_k": 8, "dispatch": "local"}}'
+
+The hypothesis/measurement narrative lives in EXPERIMENTS.md §Perf; this
+tool provides the measurements.
+"""
+import argparse          # noqa: E402
+import dataclasses      # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+
+from repro.launch import cells as C  # noqa: E402
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS  # noqa: E402
+
+LOG = "results/perf_log.json"
+
+
+def _decode_cfg_overrides(raw: str):
+    if not raw:
+        return None
+    d = json.loads(raw)
+    if "moe" in d and isinstance(d["moe"], dict):
+        from repro.models.config import MoEConfig
+
+        d["moe"] = MoEConfig(**d["moe"])
+    return d
+
+
+def measure(arch, shape, variant, cfg_overrides=None, rule_overrides=None,
+            microbatches=None, multi_pod=False):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = C.build_cell(
+        arch, shape, mesh,
+        cfg_overrides=cfg_overrides,
+        rule_overrides=rule_overrides,
+        microbatches=microbatches,
+    )
+    with mesh:
+        compiled = cell.fn.lower(*cell.args).compile()
+        mem = compiled.memory_analysis()
+        hlo = compiled.as_text()
+        import gzip
+
+        os.makedirs("results/hlo", exist_ok=True)
+        hp = f"results/hlo/perf_{arch}_{shape}_{variant}.txt.gz"
+        with gzip.open(hp, "wt") as f:
+            f.write(hlo)
+        ana = hlo_analysis.analyze(hlo)
+    rec = {
+        "arch": arch, "shape": shape, "variant": variant,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "compile_s": round(time.time() - t0, 1),
+        "t_compute_s": ana.flops / PEAK_FLOPS,
+        "t_memory_s": ana.bytes / HBM_BW,
+        "t_collective_s": ana.collective_bytes / ICI_BW,
+        "per_collective": ana.per_collective,
+        "collective_count": ana.collective_count,
+        "temp_bytes_per_dev": mem.temp_size_in_bytes,
+        "flops_per_dev": ana.flops,
+        "bytes_per_dev": ana.bytes,
+    }
+    terms = {k: rec[f"t_{k}_s"] for k in ("compute", "memory", "collective")}
+    rec["dominant"] = max(terms, key=terms.get)
+    rec["bound_s"] = terms[rec["dominant"]]
+    rec["roofline_fraction"] = rec["t_compute_s"] / rec["bound_s"] if rec["bound_s"] else 0
+    return rec
+
+
+def log(rec):
+    os.makedirs("results", exist_ok=True)
+    hist = []
+    if os.path.exists(LOG):
+        hist = json.load(open(LOG))
+    hist = [
+        h for h in hist
+        if (h["arch"], h["shape"], h["variant"], h.get("mesh"))
+        != (rec["arch"], rec["shape"], rec["variant"], rec.get("mesh"))
+    ] + [rec]
+    json.dump(hist, open(LOG, "w"), indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--cfg", default="")
+    ap.add_argument("--rules", default="")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+    rec = measure(
+        args.arch, args.shape, args.variant,
+        cfg_overrides=_decode_cfg_overrides(args.cfg),
+        rule_overrides=json.loads(args.rules) if args.rules else None,
+        microbatches=args.microbatches,
+        multi_pod=args.multi_pod,
+    )
+    log(rec)
+    print(json.dumps({k: v for k, v in rec.items() if k != "per_collective"},
+                     indent=1))
+    print("per_collective:", {k: f"{v:.3e}" for k, v in rec["per_collective"].items()})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Roofline analysis over dry-run records (TPU v5e targets).
+
+Per (arch x shape) cell on the single-pod 16x16 mesh:
+
+    T_compute    = flops_per_device    / 197e12      (bf16 MXU peak)
+    T_memory     = bytes_per_device    / 819e9       (HBM bandwidth)
+    T_collective = coll_bytes_per_dev  / 50e9        (ICI per-link)
+
+All inputs come from the trip-count-aware HLO analysis (per-device SPMD
+program — see hlo_analysis.py), so the three terms are directly comparable
+per-chip times. The bound is max(terms); the roofline fraction we report
+for a cell is T_compute / max(terms) (how close the program is to being
+compute-bound, the best achievable state for these workloads).
+
+MODEL_FLOPS uses the 6ND/2ND accounting with the UNPADDED configs
+(vocab padding and blockwise-attention masking waste show up as a
+useful-flops ratio < 1).
+"""
+from __future__ import annotations
+
+import argparse
+import gzip
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs.shapes import get_shape
+from repro.models import registry
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic MODEL_FLOPS for the WHOLE cell (all chips), unpadded cfg."""
+    cfg = registry.get_config(arch)
+    shape = get_shape(shape_name)
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def attention_flops(arch: str, shape_name: str) -> float:
+    """Quadratic-attention flops excluded from 6ND (context for the ratio)."""
+    cfg = registry.get_config(arch)
+    shape = get_shape(shape_name)
+    if cfg.family == "rwkv":
+        return 0.0
+    s = shape.seq_len
+    b = shape.global_batch
+    hd = cfg.resolved_head_dim
+    h = cfg.num_heads
+    layers = cfg.num_layers
+    if cfg.family == "hybrid":
+        layers = 2  # shared-attention applications
+    w = cfg.sliding_window or s
+    if shape.kind in ("train", "prefill"):
+        per_layer = 2 * 2 * b * s * min(w, s) * h * hd / 2  # causal half
+        mult = 3 if shape.kind == "train" else 1            # fwd+bwd
+        return mult * layers * per_layer
+    return 2 * 2 * b * min(w, s) * h * hd * layers
+
+
+def reanalyze(records: List[dict]) -> List[dict]:
+    """Re-run the HLO analyzer over persisted HLO dumps (no recompiles)."""
+    from repro.launch import hlo_analysis
+
+    out = []
+    for r in records:
+        if "hlo_path" in r and os.path.exists(r["hlo_path"]):
+            with gzip.open(r["hlo_path"], "rt") as f:
+                ana = hlo_analysis.analyze(f.read())
+            r = dict(r)
+            r["analysis"] = {
+                "flops_per_device": ana.flops,
+                "bytes_per_device": ana.bytes,
+                "collective_bytes_per_device": ana.collective_bytes,
+                "collective_count": ana.collective_count,
+                "per_collective": ana.per_collective,
+            }
+        out.append(r)
+    return out
+
+
+def analyze_records(records: List[dict], mesh_key: str = "16x16") -> List[dict]:
+    rows = []
+    for r in records:
+        if r.get("mesh") != mesh_key or "error" in r or "analysis" not in r:
+            continue
+        a = r["analysis"]
+        t_c = a["flops_per_device"] / PEAK_FLOPS
+        t_m = a["bytes_per_device"] / HBM_BW
+        t_x = a["collective_bytes_per_device"] / ICI_BW
+        terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+        dominant = max(terms, key=terms.get)
+        bound = terms[dominant]
+        chips = CHIPS.get(mesh_key, 256)
+        mf = model_flops(r["arch"], r["shape"])
+        hlo_total = a["flops_per_device"] * chips
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "mesh": mesh_key,
+            "t_compute_s": t_c,
+            "t_memory_s": t_m,
+            "t_collective_s": t_x,
+            "dominant": dominant,
+            "bound_s": bound,
+            "roofline_fraction": t_c / bound if bound > 0 else 0.0,
+            "model_flops": mf,
+            "attn_flops": attention_flops(r["arch"], r["shape"]),
+            "hlo_flops_total": hlo_total,
+            "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+            "tokens_per_s_bound": _tokens_per_s(r, bound),
+            "collective_count": a.get("collective_count", 0),
+            "per_collective": a.get("per_collective", {}),
+        })
+    return rows
+
+
+def _tokens_per_s(r: dict, bound_s: float) -> float:
+    shape = get_shape(r["shape"])
+    if bound_s <= 0:
+        return 0.0
+    if shape.kind in ("train", "prefill"):
+        return shape.global_batch * shape.seq_len / bound_s
+    return shape.global_batch / bound_s
+
+
+SUGGESTIONS = {
+    "compute": "compute-bound: raise MXU efficiency (larger per-chip tiles, "
+               "fewer pad/wasted flops) or accept — this is the roofline.",
+    "memory": "HBM-bound: fuse elementwise chains, cut remat recompute, "
+              "widen microbatch to raise arithmetic intensity.",
+    "collective": "ICI-bound: reshard to cut all-gather volume, overlap "
+                  "collectives with compute, or move TP axes.",
+}
+
+
+def to_markdown(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | T_comp (s) | T_mem (s) | T_coll (s) | bound | "
+           "roofline frac | useful ratio | suggestion |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.2f} | "
+            f"{r['useful_ratio']:.2f} | {SUGGESTIONS[r['dominant']][:60]} |\n"
+        )
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun.json")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="re-run the HLO analyzer over persisted HLO dumps")
+    args = ap.parse_args()
+    with open(args.dryrun) as f:
+        records = json.load(f)
+    if args.reanalyze:
+        records = reanalyze(records)
+        with open(args.dryrun, "w") as f:
+            json.dump(records, f, indent=1)
+    rows = analyze_records(records, args.mesh)
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(to_markdown(rows))
+    print(f"{len(rows)} cells -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

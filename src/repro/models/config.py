@@ -1,0 +1,172 @@
+"""Model configuration for every supported architecture family."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # "global": one fleet-wide capacity buffer (scatter into a replicated
+    #   (E*C, D) buffer — simple, but the scatter-add forces giant
+    #   all-reduces when experts can't shard the mesh's model axis).
+    # "local": per-sequence-row dispatch (B, E, C_row, D) — every scatter
+    #   stays on the row's own batch shard; no cross-shard reduction.
+    dispatch: str = "global"
+    # Pad the expert dimension (dead experts, never routed to) so it divides
+    # the mesh's model axis and expert-parallelism engages (e.g. 40 -> 48 on
+    # a 16-way axis). Padding waste shows up in the useful-flops ratio.
+    pad_experts_to: Optional[int] = None
+    # "local" dispatch granularity: split each sequence row into this many
+    # sub-blocks and dispatch independently per sub-block. Set to the mesh's
+    # model-axis size to shard dispatch buffers over "model" via the
+    # sequence axis (zero buffer collectives; the capacity is per-sub-block,
+    # raising drop variance slightly).
+    sub_rows: int = 1
+
+    @property
+    def total_experts(self) -> int:
+        return self.pad_experts_to or self.num_experts
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 SSD block configuration."""
+
+    state_dim: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    head_dim: int = 64
+    # chunk=16 keeps the factored per-channel decay exponents fp32-safe
+    # (see models/ssm.py rwkv6_time_mix).
+    chunk: int = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: Mamba2 backbone + a SHARED attention block applied
+    every `attn_every` layers (weights reused at each application)."""
+
+    attn_every: int = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    num_encoder_layers: int = 24
+    # audio/vision frontends are stubs: inputs arrive as frame embeddings.
+    frontend_dim: int = 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class VLMConfig:
+    vision_dim: int = 1024      # stub patch-embedding width
+    num_patches: int = 576      # anyres base tile + thumbnails
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config per assigned architecture (src/repro/configs/<id>.py)."""
+
+    name: str
+    family: str                   # decoder|encdec|moe|hybrid|rwkv|vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None          # default d_model // num_heads
+    qkv_bias: bool = False                  # qwen2
+    qk_norm: bool = False                   # qwen3
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None    # mixtral SWA
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rwkv: Optional[RWKVConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    # training-time knobs
+    remat_policy: str = "nothing_saveable"  # nothing_saveable|dots_saveable|none
+    scan_layers: bool = True
+    # per-arch gradient-accumulation override for train shapes (None = the
+    # shape default); chosen per §Perf so every train cell fits 16GB HBM
+    train_microbatches: Optional[int] = None
+    dtype: str = "bfloat16"                 # activations/weights compute dtype
+    param_dtype: str = "bfloat16"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "rwkv"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Supports the long_500k cell (SSM / linear / windowed attention)."""
+        return self.family in ("hybrid", "rwkv") or self.sliding_window is not None
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """Reduced copy for smoke tests (same family, tiny dims)."""
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + layers), for 6ND rooflines."""
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        q = self.num_heads * hd
+        kv = self.num_kv_heads * hd
+        attn = d * q + 2 * d * kv + q * d
+        mlp = 3 * d * f
+        if self.family in ("moe",) and self.moe:
+            mlp = self.moe.num_experts * 3 * d * f + d * self.moe.num_experts
+        per_layer = attn + mlp + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        if self.family == "rwkv":
+            # time-mix: r,k,v,g,o (5 d^2) + decay/bonus; channel-mix ~ 3 d^2+
+            per_layer = 5 * d * d + 2 * d + d * int(3.5 * d) * 2
+        if self.family == "hybrid" and self.ssm:
+            di = self.ssm.expand * d
+            nheads = di // self.ssm.head_dim
+            per_layer = (
+                d * (2 * di + 2 * self.ssm.state_dim + nheads)
+                + di * self.ssm.conv_width
+                + di * d
+                + 2 * d
+            )
+        n = self.num_layers * per_layer + emb
+        if self.family == "hybrid" and self.hybrid:
+            n += attn + 3 * d * f  # the shared attention block
+        if self.family == "encdec" and self.encdec:
+            n += self.encdec.num_encoder_layers * per_layer
+            n += self.num_layers * (d * q + 2 * d * kv + q * d + d)  # cross-attn
+        if self.family == "vlm" and self.vlm:
+            n += self.vlm.vision_dim * d + d * d  # projector
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """MoE-aware active parameters per token (for 6*N_active*D)."""
+        if self.family != "moe" or not self.moe:
+            return self.param_count()
+        d, f, v = self.d_model, self.d_ff, self.vocab_size
+        hd = self.resolved_head_dim
+        q = self.num_heads * hd
+        kv = self.num_kv_heads * hd
+        attn = d * q + 2 * d * kv + q * d
+        mlp_active = self.moe.top_k * 3 * d * f + d * self.moe.num_experts
+        per_layer = attn + mlp_active + 2 * d
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return int(self.num_layers * per_layer + emb)

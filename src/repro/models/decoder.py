@@ -1,0 +1,187 @@
+"""Decoder-only LM (dense GQA / MoE / sliding-window variants).
+
+Layers are stacked along a leading "layers" axis and executed with
+``lax.scan`` (+ per-layer ``jax.checkpoint`` with a configurable policy), so
+HLO size — and 1-core CPU compile time for the 512-device dry-run — is
+independent of depth. The same forward serves training and prefill; decode
+runs one token against a stacked KV cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import Logical, constrain
+
+F32 = jnp.float32
+
+REMAT_POLICIES = {
+    "none": None,
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots_saveable": jax.checkpoint_policies.dots_saveable,
+    "dots_with_no_batch_dims_saveable": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+class DecoderOutput(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray      # MoE load-balance (0 for dense)
+    cache: Optional[Any]
+
+
+class DecoderLM:
+    """Dense / MoE decoder with GQA (+SWA, qk-norm, qkv-bias options)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.is_moe = cfg.family == "moe" and cfg.moe is not None
+
+    # -- parameters ---------------------------------------------------------
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        lyr = {
+            "attn": L.attention_specs(cfg, layered=True),
+            "ln1": ParamSpec((cfg.num_layers, cfg.d_model), ("layers", None), init="ones"),
+            "ln2": ParamSpec((cfg.num_layers, cfg.d_model), ("layers", None), init="ones"),
+        }
+        if self.is_moe:
+            lyr["moe"] = L.moe_specs(cfg, layered=True)
+        else:
+            lyr["mlp"] = L.mlp_specs(cfg, layered=True)
+        return {"embed": L.embed_specs(cfg), "layers": lyr}
+
+    # -- one transformer block (scanned) -------------------------------------
+    def _block(self, carry, lp, positions, window, cache_kv=None):
+        x, aux = carry
+        cfg = self.cfg
+        h = L.rmsnorm(x, lp["ln1"], cfg.norm_eps)
+        attn_out, new_cache = L.mha(
+            lp["attn"], h, cfg, positions,
+            mode="causal", cache=cache_kv, window=window,
+        )
+        x = x + attn_out
+        h = L.rmsnorm(x, lp["ln2"], cfg.norm_eps)
+        if self.is_moe:
+            mlp_out, moe_aux = L.moe_block(lp["moe"], h, cfg)
+            aux = aux + moe_aux.load_balance_loss
+        else:
+            mlp_out = L.swiglu(lp["mlp"], h)
+        x = x + mlp_out
+        # Seq-parallel archs keep the residual stream sequence-sharded over
+        # "model" (no-op when seq_model rule is None / S==1 decode).
+        x = constrain(x, "batch", "seq_model", "embed_no_fsdp")
+        return (x, aux), new_cache
+
+    def _scan_layers(self, params, x, positions, cache=None):
+        cfg = self.cfg
+        window = cfg.sliding_window
+        policy = REMAT_POLICIES.get(cfg.remat_policy)
+
+        def body(carry, xs):
+            lp, ck = xs
+
+            def inner(c, lp_, ck_):
+                return self._block(c, lp_, positions, window, ck_)
+
+            if policy is not None:
+                inner = jax.checkpoint(inner, policy=policy)
+            new_carry, new_ck = inner(carry, lp, ck)
+            return new_carry, new_ck
+
+        aux0 = jnp.zeros((), F32)
+        if cfg.scan_layers:
+            (x, aux), new_cache = jax.lax.scan(
+                body, (x, aux0), (params["layers"], cache)
+            )
+        else:
+            caches = []
+            carry = (x, aux0)
+            for i in range(cfg.num_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                ck = jax.tree.map(lambda a: a[i], cache) if cache is not None else None
+                carry, ck2 = body(carry, (lp, ck))
+                caches.append(ck2)
+            x, aux = carry
+            new_cache = (
+                jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+                if cache is not None
+                else None
+            )
+        return x, aux, new_cache
+
+    # -- public API -----------------------------------------------------------
+    def forward(
+        self, params, batch: Dict[str, jnp.ndarray], last_only: bool = False
+    ) -> DecoderOutput:
+        """Training / prefill forward. batch: tokens (B,S) [+ positions].
+
+        last_only=True computes logits for the final position only (the
+        serving-prefill contract — avoids the (B,S,V) materialization)."""
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get(
+            "positions", jnp.broadcast_to(jnp.arange(s), (b, s))
+        )
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        x = self._prefix_inject(params, x, batch)
+        x, aux, _ = self._scan_layers(params, x, positions, cache=None)
+        if last_only:
+            x = x[:, -1:]
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return DecoderOutput(logits=logits, aux_loss=aux, cache=None)
+
+    def _prefix_inject(self, params, x, batch):
+        return x  # VLM subclass overrides
+
+    # -- decode ----------------------------------------------------------------
+    def cache_spec(self, batch: int, cache_len: int) -> Dict[str, Any]:
+        """Abstract KV-cache (stacked over layers) + logical axes."""
+        cfg = self.cfg
+        t = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+        hd = cfg.resolved_head_dim
+        shape = (cfg.num_layers, batch, t, cfg.num_kv_heads, hd)
+        axes = ("layers", "batch", "seq_sharded", "kv_heads", None)
+        return {
+            "k": ParamSpec(shape, axes, init="zeros"),
+            "v": ParamSpec(shape, axes, init="zeros"),
+            "index": ParamSpec((cfg.num_layers,), ("layers",), init="zeros"),
+        }
+
+    def init_cache(self, batch: int, cache_len: int, dtype=jnp.bfloat16):
+        sp = self.cache_spec(batch, cache_len)
+        return {
+            "k": jnp.zeros(sp["k"].shape, dtype),
+            "v": jnp.zeros(sp["v"].shape, dtype),
+            "index": jnp.zeros(sp["index"].shape, jnp.int32),
+        }
+
+    def decode_step(
+        self, params, tokens: jnp.ndarray, positions: jnp.ndarray, cache
+    ) -> DecoderOutput:
+        """One-token decode. tokens: (B,1); cache: stacked KV dict."""
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        kv = jax.tree.map(lambda a: a, cache)
+        cache_tuple = L.KVCache(k=kv["k"], v=kv["v"], index=kv["index"])
+        # scan expects per-layer leading axis on cache leaves
+        cache_xs = L.KVCache(
+            k=cache_tuple.k, v=cache_tuple.v,
+            index=cache_tuple.index.astype(jnp.int32),
+        )
+        x, aux, new_cache = self._scan_layers(
+            params, x, positions, cache=cache_xs
+        )
+        logits = L.lm_logits(params["embed"], x, cfg)
+        out_cache = {
+            "k": new_cache.k, "v": new_cache.v, "index": new_cache.index
+        }
+        return DecoderOutput(logits=logits, aux_loss=aux, cache=out_cache)

@@ -1,0 +1,169 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` supplies
+precomputed frame embeddings (B, S_enc, frontend_dim); a learned projector
+maps them into d_model. The decoder is a standard causal stack with
+cross-attention; at decode time the encoder output (and the cross-attention
+K/V) are computed once at prefill and carried in the decode state.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.decoder import REMAT_POLICIES
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+
+
+class EncDecOutput(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+    cache: Optional[Any]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encdec is not None
+        self.cfg = cfg
+
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        ne = cfg.encdec.num_encoder_layers
+        d = cfg.d_model
+
+        def stack(n):
+            import dataclasses as dc
+
+            enc_cfg = dc.replace(cfg, num_layers=n)
+            return {
+                "attn": L.attention_specs(enc_cfg, layered=True),
+                "mlp": L.mlp_specs(enc_cfg, layered=True),
+                "ln1": ParamSpec((n, d), ("layers", None), init="ones"),
+                "ln2": ParamSpec((n, d), ("layers", None), init="ones"),
+            }
+
+        dec = stack(cfg.num_layers)
+        import dataclasses as dc
+
+        dcfg = dc.replace(cfg, num_layers=cfg.num_layers)
+        dec["xattn"] = L.attention_specs(dcfg, layered=True)
+        dec["ln_x"] = ParamSpec(
+            (cfg.num_layers, d), ("layers", None), init="ones"
+        )
+        return {
+            "embed": L.embed_specs(cfg),
+            "frontend_proj": ParamSpec(
+                (cfg.encdec.frontend_dim, d), ("embed", None)
+            ),
+            "enc_final_norm": ParamSpec((d,), (None,), init="ones"),
+            "encoder": stack(ne),
+            "decoder": dec,
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames: jnp.ndarray) -> jnp.ndarray:
+        """frames: (B, S_enc, frontend_dim) from the (stub) audio frontend."""
+        cfg = self.cfg
+        x = jnp.einsum("bsf,fd->bsd", frames, params["frontend_proj"])
+        x = constrain(x, "batch", None, "embed_no_fsdp")
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+        policy = REMAT_POLICIES.get(cfg.remat_policy)
+
+        def body(carry, lp):
+            def inner(h, lp_):
+                a = L.rmsnorm(h, lp_["ln1"], cfg.norm_eps)
+                out, _ = L.mha(lp_["attn"], a, cfg, positions, mode="bidirectional")
+                h = h + out
+                a = L.rmsnorm(h, lp_["ln2"], cfg.norm_eps)
+                h = h + L.swiglu(lp_["mlp"], a)
+                return constrain(h, "batch", None, "embed_no_fsdp")
+
+            if policy is not None:
+                inner = jax.checkpoint(inner, policy=policy)
+            return inner(carry, lp), None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"])
+        return L.rmsnorm(x, params["enc_final_norm"], cfg.norm_eps)
+
+    # -- decoder ----------------------------------------------------------------
+    def _decode_stack(self, params, x, positions, enc_out, cache=None):
+        cfg = self.cfg
+        policy = REMAT_POLICIES.get(cfg.remat_policy)
+
+        def body(carry, xs):
+            lp, ck = xs
+
+            def inner(h, lp_, ck_):
+                a = L.rmsnorm(h, lp_["ln1"], cfg.norm_eps)
+                out, new_ck = L.mha(
+                    lp_["attn"], a, cfg, positions, mode="causal", cache=ck_
+                )
+                h = h + out
+                a = L.rmsnorm(h, lp_["ln_x"], cfg.norm_eps)
+                out, _ = L.mha(lp_["xattn"], a, cfg, positions, mode="cross", kv_x=enc_out)
+                h = h + out
+                a = L.rmsnorm(h, lp_["ln2"], cfg.norm_eps)
+                h = h + L.swiglu(lp_["mlp"], a)
+                return constrain(h, "batch", None, "embed_no_fsdp"), new_ck
+
+            if policy is not None:
+                inner = jax.checkpoint(inner, policy=policy)
+            h, new_ck = inner(carry, lp, ck)
+            return h, new_ck
+
+        x, new_cache = jax.lax.scan(body, x, (params["decoder"], cache))
+        return x, new_cache
+
+    # -- public ------------------------------------------------------------------
+    def forward(
+        self, params, batch: Dict[str, jnp.ndarray], last_only: bool = False
+    ) -> EncDecOutput:
+        """batch: frames (B,S_enc,F) + tokens (B,S_dec)."""
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        enc_out = self.encode(params, batch["frames"].astype(cfg.dtype))
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = batch.get("positions", jnp.broadcast_to(jnp.arange(s), (b, s)))
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        x, _ = self._decode_stack(params, x, positions, enc_out, cache=None)
+        if last_only:
+            x = x[:, -1:]
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return EncDecOutput(logits=logits, aux_loss=jnp.zeros((), F32), cache=None)
+
+    def cache_spec(self, batch: int, cache_len: int, enc_len: int):
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        shape = (cfg.num_layers, batch, cache_len, cfg.num_kv_heads, hd)
+        axes = ("layers", "batch", "seq_sharded", "kv_heads", None)
+        return {
+            "k": ParamSpec(shape, axes, init="zeros"),
+            "v": ParamSpec(shape, axes, init="zeros"),
+            "index": ParamSpec((cfg.num_layers,), ("layers",), init="zeros"),
+            "enc_out": ParamSpec(
+                (batch, enc_len, cfg.d_model), ("batch", "seq_sharded", None),
+                init="zeros",
+            ),
+        }
+
+    def decode_step(self, params, tokens, positions, cache) -> EncDecOutput:
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        kv = L.KVCache(k=cache["k"], v=cache["v"], index=cache["index"].astype(jnp.int32))
+        x, new_kv = self._decode_stack(
+            params, x, positions, cache["enc_out"], cache=kv
+        )
+        logits = L.lm_logits(params["embed"], x, cfg)
+        out = dict(cache)
+        out.update({"k": new_kv.k, "v": new_kv.v, "index": new_kv.index})
+        return EncDecOutput(logits=logits, aux_loss=jnp.zeros((), F32), cache=out)

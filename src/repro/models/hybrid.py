@@ -1,0 +1,199 @@
+"""Zamba2-style hybrid: Mamba2 backbone + SHARED attention block.
+
+38 Mamba2 layers in three scanned segments; one attention+MLP block with
+SHARED weights is applied between segments (two applications — the Zamba
+trick: global-context mixing without per-layer attention cost). At decode
+the Mamba states update in O(1) and only the shared block maintains KV
+caches (one per application site), which is what keeps the long_500k cell
+sub-quadratic.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.decoder import REMAT_POLICIES
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+NUM_SHARED_SITES = 2
+
+
+class HybridOutput(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+    cache: Optional[Any]
+
+
+def _segments(n_layers: int) -> Tuple[Tuple[int, int], ...]:
+    """Split layers into NUM_SHARED_SITES+1 contiguous segments."""
+    k = NUM_SHARED_SITES + 1
+    base = n_layers // k
+    sizes = [base] * k
+    for i in range(n_layers - base * k):
+        sizes[i] += 1
+    out, start = [], 0
+    for s in sizes:
+        out.append((start, start + s))
+        start += s
+    return tuple(out)
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.ssm is not None and cfg.hybrid is not None
+        self.cfg = cfg
+        self.segments = _segments(cfg.num_layers)
+
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+        shared = {
+            "attn": L.attention_specs(cfg, layered=False),
+            "mlp": L.mlp_specs(cfg, layered=False),
+            "ln1": ParamSpec((d,), (None,), init="ones"),
+            "ln2": ParamSpec((d,), (None,), init="ones"),
+        }
+        return {
+            "embed": L.embed_specs(cfg),
+            "mamba": {
+                **ssm.mamba2_specs(cfg, layered=True),
+                "ln": ParamSpec((cfg.num_layers, d), ("layers", None), init="ones"),
+            },
+            "shared": shared,
+        }
+
+    # -- segment scan over mamba layers ----------------------------------------
+    def _mamba_segment(self, params, x, lo, hi, states=None):
+        cfg = self.cfg
+        policy = REMAT_POLICIES.get(cfg.remat_policy)
+        seg_params = jax.tree.map(lambda a: a[lo:hi], params["mamba"])
+        seg_states = (
+            jax.tree.map(lambda a: a[lo:hi], states) if states is not None else None
+        )
+
+        def body(carry, xs):
+            lp, st = xs
+
+            def inner(h, lp_, st_):
+                a = L.rmsnorm(h, lp_["ln"], cfg.norm_eps)
+                mp = {k: v for k, v in lp_.items() if k != "ln"}
+                if st_ is None:
+                    out, new_st = ssm.mamba2_forward(mp, a, cfg)
+                else:
+                    out, new_st = ssm.mamba2_decode_step(mp, a, st_, cfg)
+                return h + out, new_st
+
+            if policy is not None:
+                inner = jax.checkpoint(inner, policy=policy)
+            h, new_st = inner(carry, lp, st)
+            return h, new_st
+
+        x, new_states = jax.lax.scan(body, x, (seg_params, seg_states))
+        return x, new_states
+
+    def _shared_block(self, params, x, positions, cache=None):
+        cfg = self.cfg
+        sp = params["shared"]
+        h = L.rmsnorm(x, sp["ln1"], cfg.norm_eps)
+        out, new_cache = L.mha(sp["attn"], h, cfg, positions, mode="causal", cache=cache)
+        x = x + out
+        h = L.rmsnorm(x, sp["ln2"], cfg.norm_eps)
+        x = x + L.swiglu(sp["mlp"], h)
+        return constrain(x, "batch", None, "embed_no_fsdp"), new_cache
+
+    # -- public -------------------------------------------------------------------
+    def forward(
+        self, params, batch: Dict[str, jnp.ndarray], last_only: bool = False
+    ) -> HybridOutput:
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        pad = (-s) % cfg.ssm.chunk
+        positions = batch.get("positions", jnp.broadcast_to(jnp.arange(s), (b, s)))
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+            positions = jnp.pad(positions, ((0, 0), (0, pad)), mode="edge")
+        for i, (lo, hi) in enumerate(self.segments):
+            x, _ = self._mamba_segment(params, x, lo, hi)
+            if i < NUM_SHARED_SITES:
+                x, _ = self._shared_block(params, x, positions)
+        if pad:
+            x = x[:, :s]
+        if last_only:
+            x = x[:, -1:]
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return HybridOutput(logits=logits, aux_loss=jnp.zeros((), F32), cache=None)
+
+    # -- decode ---------------------------------------------------------------------
+    def cache_spec(self, batch: int, cache_len: int):
+        cfg = self.cfg
+        di, nheads, conv_ch = ssm.mamba2_dims(cfg)
+        hd = cfg.resolved_head_dim
+        nl = cfg.num_layers
+        return {
+            "ssm": ParamSpec(
+                (nl, batch, nheads, cfg.ssm.head_dim, cfg.ssm.state_dim),
+                ("layers", "batch", "ff", None, None), init="zeros",
+            ),
+            "conv": ParamSpec(
+                (nl, batch, cfg.ssm.conv_width - 1, conv_ch),
+                ("layers", "batch", None, "ff"), init="zeros",
+            ),
+            "k": ParamSpec(
+                (NUM_SHARED_SITES, batch, cache_len, cfg.num_kv_heads, hd),
+                (None, "batch", "seq_sharded", "kv_heads", None), init="zeros",
+            ),
+            "v": ParamSpec(
+                (NUM_SHARED_SITES, batch, cache_len, cfg.num_kv_heads, hd),
+                (None, "batch", "seq_sharded", "kv_heads", None), init="zeros",
+            ),
+            "index": ParamSpec((NUM_SHARED_SITES,), (None,), init="zeros"),
+        }
+
+    def decode_step(self, params, tokens, positions, cache) -> HybridOutput:
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        new_ssm, new_conv, new_k, new_v, new_idx = [], [], [], [], []
+        for i, (lo, hi) in enumerate(self.segments):
+            x, seg_new = self._mamba_segment(
+                params, x, lo, hi,
+                states=ssm.Mamba2State(ssm=cache["ssm"], conv=cache["conv"]),
+            )
+            new_ssm.append((lo, hi, seg_new.ssm))
+            new_conv.append((lo, hi, seg_new.conv))
+            if i < NUM_SHARED_SITES:
+                kv = L.KVCache(
+                    k=cache["k"][i], v=cache["v"][i],
+                    index=cache["index"][i].astype(jnp.int32),
+                )
+                x, nkv = self._shared_block(params, x, positions, cache=kv)
+                new_k.append(nkv.k)
+                new_v.append(nkv.v)
+                new_idx.append(nkv.index)
+        ssm_full = cache["ssm"]
+        conv_full = cache["conv"]
+        for lo, hi, val in new_ssm:
+            ssm_full = jax.lax.dynamic_update_slice_in_dim(ssm_full, val, lo, axis=0)
+        for lo, hi, val in new_conv:
+            conv_full = jax.lax.dynamic_update_slice_in_dim(
+                conv_full, val.astype(conv_full.dtype), lo, axis=0
+            )
+        logits = L.lm_logits(params["embed"], x, cfg)
+        new_cache = {
+            "ssm": ssm_full,
+            "conv": conv_full,
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "index": jnp.stack(new_idx),
+        }
+        return HybridOutput(logits=logits, aux_loss=jnp.zeros((), F32), cache=new_cache)

@@ -1,0 +1,540 @@
+"""Transformer building blocks: norms, RoPE, GQA attention, SwiGLU, MoE.
+
+All blocks are pure functions over (params, activations); params follow the
+spec trees declared by each model. Sharding is annotated with logical axes
+(`parallel.sharding.constrain`) so the same code runs on 1 CPU device
+(constraints no-op) and the 512-chip production mesh (GSPMD partitioning).
+
+Einsum accumulations that feed softmax/losses use
+``preferred_element_type=float32`` — bf16 weights, fp32 accumulation, the
+standard TPU MXU mixed-precision contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+
+
+def cast_params(params, dtype) -> dict:
+    """Mixed precision: cast float params to the compute dtype at use-site
+    (master copies stay fp32 in the optimizer)."""
+    dt = jnp.dtype(dtype)
+    return jax.tree.map(
+        lambda a: a.astype(dt) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        params,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(F32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(F32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=F32) / head_dim)
+    )
+
+
+def apply_rope(
+    x: jnp.ndarray, positions: jnp.ndarray, theta: float
+) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) absolute token positions."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(F32) * freqs         # (B, S, hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA, optional bias / qk-norm / sliding window / cross)
+# ---------------------------------------------------------------------------
+
+
+def attention_specs(cfg: ModelConfig, layered: bool = True, cross: bool = False):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    lead = (cfg.num_layers,) if layered else ()
+    lax_ = ("layers",) if layered else ()
+    sp = {
+        "wq": ParamSpec(lead + (d, hq * hd), lax_ + ("embed", "heads")),
+        "wk": ParamSpec(lead + (d, hkv * hd), lax_ + ("embed", "kv_heads")),
+        "wv": ParamSpec(lead + (d, hkv * hd), lax_ + ("embed", "kv_heads")),
+        "wo": ParamSpec(lead + (hq * hd, d), lax_ + ("heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        sp["bq"] = ParamSpec(lead + (hq * hd,), lax_ + ("heads",), init="zeros")
+        sp["bk"] = ParamSpec(lead + (hkv * hd,), lax_ + ("kv_heads",), init="zeros")
+        sp["bv"] = ParamSpec(lead + (hkv * hd,), lax_ + ("kv_heads",), init="zeros")
+    if cfg.qk_norm:
+        sp["q_norm"] = ParamSpec(lead + (hd,), lax_ + (None,), init="ones")
+        sp["k_norm"] = ParamSpec(lead + (hd,), lax_ + (None,), init="ones")
+    return sp
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache. k/v: (B, T, Hkv, hd); index: scalar write pos.
+
+    For sliding-window layers T == window and writes wrap (ring buffer).
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    index: jnp.ndarray  # () int32 — next write position (pre-wrap)
+
+
+def _project_qkv(p, x, cfg: ModelConfig):
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    b, s, _ = x.shape
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """(B,S,Hq,hd) x (B,T,Hkv,hd) -> (B,Hkv,G,S,T) fp32."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    q = q.reshape(b, s, hkv, g, hd)
+    return jnp.einsum(
+        "bskgh,btkh->bkgst", q, k, preferred_element_type=F32
+    ) / (hd ** 0.5)
+
+
+# Threshold above which full S x T score materialization is replaced by the
+# blockwise online-softmax (flash-style) path. 4k trains fit comfortably;
+# 32k prefills do not (scores would be ~GBs/device even sharded).
+BLOCKWISE_MIN_SEQ = 8192
+Q_CHUNK = 2048
+KV_CHUNK = 2048
+NEG_INF = -1e30
+
+
+def _blockwise_attention(
+    q, k, v, cfg: ModelConfig, positions, window: Optional[int],
+    causal: bool = True,
+) -> jnp.ndarray:
+    """Causal attention with online softmax over (q-chunk, kv-chunk) tiles.
+
+    TPU adaptation of FlashAttention's tiling: tiles are einsums feeding the
+    MXU; the running (max, sum, acc) statistics live in fp32. Double
+    ``lax.scan`` keeps HLO size O(1) in sequence length. Fully-masked tiles
+    (beyond causal horizon / outside the sliding window) still execute —
+    acceptable waste at window==chunk granularity, noted in EXPERIMENTS.
+    """
+    b, s, hq, hd = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = hq // hkv
+    qc = min(Q_CHUNK, s)
+    kc = min(KV_CHUNK, t)
+    nq, nk = s // qc, t // kc
+    assert s % qc == 0 and t % kc == 0, (s, t)
+
+    qr = q.reshape(b, nq, qc, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    pr = positions.reshape(b, nq, qc).transpose(1, 0, 2)
+    kr = k.reshape(b, nk, kc, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vr = v.reshape(b, nk, kc, hkv, hd).transpose(1, 0, 2, 3, 4)
+    kpos = jnp.broadcast_to(jnp.arange(t), (b, t)).reshape(b, nk, kc)
+    kpos = kpos.transpose(1, 0, 2)
+    scale = hd ** -0.5
+
+    def q_step(_, qi):
+        q_i, qpos_i = qi                       # (B,qc,K,G,hd), (B,qc)
+        q_i = constrain(q_i, "batch", "seq_model", "kv_heads", None, None)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            k_j, v_j, kpos_j = kj              # (B,kc,K,hd), (B,kc)
+            sc = jnp.einsum(
+                "bqkgh,bckh->bkgqc", q_i, k_j, preferred_element_type=F32
+            ) * scale                           # (B,K,G,qc,kc)
+            if causal:
+                mask = kpos_j[:, None, :] <= qpos_i[:, :, None]  # (B,qc,kc)
+                if window is not None:
+                    mask &= kpos_j[:, None, :] > qpos_i[:, :, None] - window
+                sc = jnp.where(mask[:, None, None, :, :], sc, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum(
+                "bkgqc,bckh->bkgqh", p.astype(v_j.dtype), v_j,
+                preferred_element_type=F32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, F32)
+        l0 = jnp.zeros((b, hkv, g, qc), F32)
+        a0 = jnp.zeros((b, hkv, g, qc, hd), F32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kr, vr, kpos))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, hq * hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qr, pr))   # (nq,B,qc,H*hd)
+    return outs.transpose(1, 0, 2, 3).reshape(b, s, hq * hd)
+
+
+def mha(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    positions: jnp.ndarray,
+    *,
+    mode: str = "causal",            # causal | bidirectional | cross
+    kv_x: Optional[jnp.ndarray] = None,
+    cache: Optional[KVCache] = None,
+    window: Optional[int] = None,
+) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Full multi-head attention with GQA and optional KV cache.
+
+    Train/prefill: cache is None -> attends within x (or kv_x for cross).
+    Decode: cache given, x is (B, 1, D); returns updated cache.
+    """
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if mode == "cross":
+        q, _, _ = _project_qkv(p, x, cfg)
+        _, k, v = _project_qkv(p, kv_x, cfg)
+        if s >= BLOCKWISE_MIN_SEQ and k.shape[1] >= BLOCKWISE_MIN_SEQ:
+            out = _blockwise_attention(q, k, v, cfg, positions, None, causal=False)
+            y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+            return constrain(y, "batch", None, "embed_no_fsdp"), None
+    else:
+        q, k, v = _project_qkv(p, x, cfg)
+        if mode != "bidirectional":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    # Heads-TP when head counts divide the model axis; otherwise the rules
+    # route "seq_model" -> "model" (Megatron sequence-parallel attention:
+    # queries sharded by sequence block, K/V all-gathered).
+    q = constrain(q, "batch", "seq_model", "heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if cache is not None:
+        t_max = cache.k.shape[1]
+        write = (
+            jnp.mod(cache.index, t_max) if window is not None else cache.index
+        )
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), write, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), write, axis=1)
+        new_cache = KVCache(k=k_all, v=v_all, index=cache.index + s)
+        k, v = k_all, v_all
+        t = t_max
+        # Key absolute positions for masking/rope-consistency: ring or linear.
+        slots = jnp.arange(t)
+        if window is not None:
+            # slot holds absolute position p if p ≡ slot (mod t) and p <= cur.
+            cur = cache.index + s - 1
+            wraps = (cur - slots) // t_max
+            key_pos = cur - jnp.mod(cur - slots, t_max)
+            key_pos = jnp.broadcast_to(key_pos, (b, t))
+        else:
+            key_pos = jnp.broadcast_to(slots, (b, t))
+    else:
+        t = k.shape[1]
+        key_pos = (
+            jnp.broadcast_to(jnp.arange(t), (b, t))
+            if mode != "cross"
+            else None
+        )
+        # Long-sequence path: blockwise online softmax (causal or bidi).
+        if mode in ("causal", "bidirectional") and s >= BLOCKWISE_MIN_SEQ and s == t:
+            out = _blockwise_attention(
+                q, k, v, cfg, positions, window, causal=(mode == "causal")
+            )
+            y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+            return constrain(y, "batch", None, "embed_no_fsdp"), None
+
+    scores = _gqa_scores(q, k, cfg)                     # (B,K,G,S,T)
+
+    if mode == "causal" or (mode == "decode"):
+        qpos = positions[:, :, None]                    # (B,S,1)
+        kpos = key_pos[:, None, :]                      # (B,1,T)
+        mask = (kpos <= qpos) & (kpos >= 0)
+        if window is not None:
+            mask &= kpos > qpos - window
+        if cache is not None:
+            mask &= kpos[..., :] <= (cache.index + s - 1)[None, None]
+            # unwritten slots (pos beyond current) already excluded above
+        scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    elif mode == "bidirectional" and cache is None:
+        pass  # full attention over the sequence
+
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    return constrain(y, "batch", None, "embed_no_fsdp"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ModelConfig, layered: bool = True, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    lead = (cfg.num_layers,) if layered else ()
+    lax_ = ("layers",) if layered else ()
+    return {
+        "wi": ParamSpec(lead + (d, f), lax_ + ("embed", "ff")),
+        "wg": ParamSpec(lead + (d, f), lax_ + ("embed", "ff")),
+        "wo": ParamSpec(lead + (f, d), lax_ + ("ff", "embed")),
+    }
+
+
+def swiglu(p, x: jnp.ndarray) -> jnp.ndarray:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    h = h * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    h = constrain(h, "batch", None, "ff")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (capacity-based dispatch, EP/TP shardable)
+# ---------------------------------------------------------------------------
+
+
+def moe_specs(cfg: ModelConfig, layered: bool = True):
+    assert cfg.moe is not None
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.total_experts
+    lead = (cfg.num_layers,) if layered else ()
+    lax_ = ("layers",) if layered else ()
+    return {
+        "router": ParamSpec(lead + (d, e), lax_ + ("embed", None)),
+        "wi": ParamSpec(lead + (e, d, f), lax_ + ("experts", "embed", "ff")),
+        "wg": ParamSpec(lead + (e, d, f), lax_ + ("experts", "embed", "ff")),
+        "wo": ParamSpec(lead + (e, f, d), lax_ + ("experts", "ff", "embed")),
+    }
+
+
+class MoEAux(NamedTuple):
+    load_balance_loss: jnp.ndarray
+    dropped_fraction: jnp.ndarray
+
+
+def moe_block(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, MoEAux]:
+    if cfg.moe.dispatch == "local":
+        return moe_block_local(p, x, cfg)
+    return moe_block_global(p, x, cfg)
+
+
+def moe_block_global(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, MoEAux]:
+    """Top-k MoE with static capacity (sort-based dispatch, no host ragged).
+
+    Dispatch: flatten tokens, stable-sort (expert, entry) pairs, compute each
+    entry's slot within its expert, scatter into an (E, C, D) buffer, run all
+    expert FFNs as one batched einsum, gather back weighted by gates.
+    """
+    assert cfg.moe is not None
+    e, k_top = cfg.moe.num_experts, cfg.moe.top_k
+    b, s, d = x.shape
+    n = b * s
+    cap = int(max(1, round(n * k_top * cfg.moe.capacity_factor / e)))
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"], preferred_element_type=F32)
+    top_val, top_idx = jax.lax.top_k(logits, k_top)           # (B,S,K)
+    gates = jax.nn.softmax(top_val, axis=-1)                   # renormalized
+
+    flat_e = top_idx.reshape(n * k_top)                        # (NK,)
+    flat_tok = jnp.repeat(jnp.arange(n), k_top)                # (NK,)
+    flat_gate = gates.reshape(n * k_top)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e))         # (E,)
+    slot = jnp.arange(n * k_top) - starts[sorted_e]            # rank in expert
+    keep = slot < cap
+    flat_slot = jnp.where(keep, sorted_e * cap + slot, e * cap)  # drop bucket
+
+    x_flat = x.reshape(n, d)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[flat_slot].add(x_flat[flat_tok[order]])
+    buf = buf[: e * cap].reshape(e, cap, d)
+    buf = constrain(buf, "experts", None, "embed_no_fsdp")
+
+    h = jnp.einsum("ecd,edf->ecf", buf, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wg"])
+    h = h * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    h = constrain(h, "experts", None, "ff")
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(e * cap, d)
+    y_buf = jnp.concatenate([y_buf, jnp.zeros((1, d), y_buf.dtype)], axis=0)
+
+    contrib = y_buf[flat_slot] * flat_gate[order][:, None].astype(y_buf.dtype)
+    y = jnp.zeros((n, d), x.dtype).at[flat_tok[order]].add(contrib)
+
+    # Aux telemetry: Switch-style load-balance loss + drop rate.
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B,S,E)
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_idx, e).sum(axis=2)).reshape(n, e), axis=0
+    )
+    frac_probs = jnp.mean(probs.reshape(n, e), axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs) / k_top
+    dropped = 1.0 - jnp.sum(keep) / (n * k_top)
+    return y.reshape(b, s, d), MoEAux(lb_loss, dropped)
+
+
+def moe_block_local(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, MoEAux]:
+    """Per-row MoE dispatch: every scatter stays on its own batch shard.
+
+    The global dispatch scatters all tokens into ONE (E*C, D) buffer; when
+    the expert count cannot shard the model axis that buffer is replicated
+    and XLA must all-reduce it per layer (TBs of ICI on the 16x16 mesh —
+    the dominant collective in the MoE baselines). Here each sequence row
+    dispatches into its own (E, C_row, D) buffer: buffers are sharded over
+    the batch axes exactly like activations, sorting/scattering is row-local,
+    and the only collectives left are the FSDP weight gathers. Capacity is
+    per-row (C_row = S*k*cf/E), trading slightly higher drop variance for
+    locality — the standard per-device-capacity MoE trade.
+    """
+    assert cfg.moe is not None
+    e_real, k_top = cfg.moe.num_experts, cfg.moe.top_k
+    e = cfg.moe.total_experts
+    b, s, d = x.shape
+    sub = cfg.moe.sub_rows
+    if sub > 1 and s % sub == 0:
+        # Sub-row dispatch: (B, S, D) -> (B, sub, S/sub, D); the sub axis
+        # carries "seq_model" so buffers shard over the model axis with no
+        # buffer collectives at all.
+        xs = x.reshape(b, sub, s // sub, d)
+        xs = constrain(xs, "batch", "moe_seq", None, "embed_no_fsdp")
+        y4, aux = _moe_local_core(p, xs, cfg)
+        return y4.reshape(b, s, d), aux
+    y, aux = _moe_local_core(p, x[:, None], cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_local_core(p, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, MoEAux]:
+    """x: (B, U, S_u, D) — dispatch independently per (row, sub-block)."""
+    e_real, k_top = cfg.moe.num_experts, cfg.moe.top_k
+    e = cfg.moe.total_experts
+    b, u, s, d = x.shape
+    nk = s * k_top
+    cap = int(max(1, round(nk * cfg.moe.capacity_factor / e_real)))
+
+    logits = jnp.einsum("busd,de->buse", x, p["router"], preferred_element_type=F32)
+    if e != e_real:  # padded (dead) experts are never routed to
+        pad_mask = jnp.arange(e) >= e_real
+        logits = jnp.where(pad_mask[None, None, None, :], -1e30, logits)
+    top_val, top_idx = jax.lax.top_k(logits, k_top)            # (B,U,S,K)
+    gates = jax.nn.softmax(top_val, axis=-1)
+
+    def dispatch_row(xr, er, gr):
+        # xr: (S,D); er, gr: (S*K,)
+        order = jnp.argsort(er, stable=True)
+        se = er[order]
+        starts = jnp.searchsorted(se, jnp.arange(e))
+        slot = jnp.arange(nk) - starts[se]
+        keep = slot < cap
+        fs = jnp.where(keep, se * cap + slot, e * cap)
+        buf = jnp.zeros((e * cap + 1, d), xr.dtype).at[fs].add(xr[order // k_top])
+        return buf[: e * cap].reshape(e, cap, d), order, fs, jnp.sum(keep)
+
+    dispatch = jax.vmap(jax.vmap(dispatch_row))
+    buf, order, fs, kept = dispatch(
+        x, top_idx.reshape(b, u, nk), gates.reshape(b, u, nk)
+    )
+    buf = constrain(buf, "batch", "moe_seq", "experts", None, "embed_no_fsdp")
+
+    h = jnp.einsum("buecd,edf->buecf", buf, p["wi"])
+    g = jnp.einsum("buecd,edf->buecf", buf, p["wg"])
+    h = h * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    h = constrain(h, "batch", "moe_seq", "experts", None, "ff")
+    y_buf = jnp.einsum("buecf,efd->buecd", h, p["wo"])
+    y_buf = y_buf.reshape(b, u, e * cap, d)
+    y_buf = jnp.concatenate(
+        [y_buf, jnp.zeros((b, u, 1, d), y_buf.dtype)], axis=2
+    )
+
+    def combine_row(ybr, order_r, fs_r, gr):
+        contrib = ybr[fs_r] * gr[order_r][:, None].astype(ybr.dtype)
+        return jnp.zeros((s, d), ybr.dtype).at[order_r // k_top].add(contrib)
+
+    y = jax.vmap(jax.vmap(combine_row))(
+        y_buf, order, fs, gates.reshape(b, u, nk)
+    )
+
+    probs = jax.nn.softmax(logits, axis=-1)
+    n = b * u * s
+    frac_tokens = jnp.mean(
+        (jax.nn.one_hot(top_idx, e).sum(axis=3)).reshape(n, e), axis=0
+    )
+    frac_probs = jnp.mean(probs.reshape(n, e), axis=0)
+    lb_loss = e * jnp.sum(frac_tokens * frac_probs) / k_top
+    dropped = 1.0 - jnp.sum(kept) / (n * k_top)
+    y = constrain(y, "batch", "moe_seq", None, "embed_no_fsdp")
+    return y, MoEAux(lb_loss, dropped)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / LM head
+# ---------------------------------------------------------------------------
+
+
+def embed_specs(cfg: ModelConfig):
+    sp = {
+        "embedding": ParamSpec(
+            (cfg.vocab_size, cfg.d_model), ("vocab", "embed"), scale=1.0
+        ),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed_no_fsdp",), init="ones"),
+    }
+    if not cfg.tie_embeddings:
+        sp["lm_head"] = ParamSpec(
+            (cfg.d_model, cfg.vocab_size), ("embed", "vocab")
+        )
+    return sp
+
+
+def embed_tokens(p, tokens: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = p["embedding"][tokens]
+    return constrain(x, "batch", None, "embed_no_fsdp")
+
+
+def lm_logits(p, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    x = rmsnorm(x, p["final_norm"], cfg.norm_eps)
+    w = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w, preferred_element_type=F32)
+    return constrain(logits, "batch", None, "vocab")

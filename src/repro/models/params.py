@@ -1,0 +1,80 @@
+"""Parameter specification system.
+
+Every model declares its parameters as a nested dict of ``ParamSpec`` (shape
++ logical axes + initializer). From one spec tree we derive:
+
+  * materialized params (PRNG init) — smoke tests / examples / training;
+  * ShapeDtypeStructs — the dry-run path (never allocates);
+  * NamedShardings — via the logical->mesh rule table (parallel/sharding).
+
+Layer stacks are declared with a leading "layers" axis so the forward pass
+can ``lax.scan`` over stacked weights (bounded HLO size for 62-layer
+models, which is what keeps 512-device CPU compiles tractable).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import Logical
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axes, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones | scaled
+    scale: Optional[float] = None     # stddev; default fan-in scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Params = Dict[str, Any]   # nested dict of jnp arrays
+Specs = Dict[str, Any]    # nested dict of ParamSpec
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Specs, key: jax.Array, dtype=jnp.float32) -> Params:
+    """Materialize parameters with per-leaf PRNG splits."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, dtype))
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            std = spec.scale if spec.scale is not None else fan_in ** -0.5
+            out.append(jax.random.normal(k, spec.shape, dtype) * std)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs: Specs, dtype=jnp.bfloat16) -> Params:
+    """ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs, is_leaf=_is_spec
+    )
+
+
+def logical_tree(specs: Specs) -> Any:
+    """Tree of Logical annotations (same structure as params)."""
+    return jax.tree.map(lambda s: Logical(s.axes), specs, is_leaf=_is_spec)
+
+
+def param_count(specs: Specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def param_bytes(specs: Specs, bytes_per: int = 2) -> int:
+    return param_count(specs) * bytes_per

@@ -1,0 +1,65 @@
+"""Model registry: family string -> model class; arch id -> config."""
+from __future__ import annotations
+
+import importlib
+from typing import Any, Dict
+
+from repro.models.config import ModelConfig
+from repro.models.decoder import DecoderLM
+from repro.models.encdec import EncDecLM
+from repro.models.hybrid import HybridLM
+from repro.models.rwkv import RWKVLM
+from repro.models.vlm import VLMDecoderLM
+
+FAMILIES = {
+    "decoder": DecoderLM,
+    "dense": DecoderLM,
+    "moe": DecoderLM,
+    "hybrid": HybridLM,
+    "rwkv": RWKVLM,
+    "vlm": VLMDecoderLM,
+    "encdec": EncDecLM,
+}
+
+ARCHS = (
+    "seamless_m4t_large_v2",
+    "qwen2_7b",
+    "qwen3_0_6b",
+    "deepseek_coder_33b",
+    "yi_6b",
+    "granite_moe_3b_a800m",
+    "mixtral_8x22b",
+    "zamba2_1_2b",
+    "llava_next_mistral_7b",
+    "rwkv6_7b",
+)
+
+_ALIAS = {a.replace("_", "-"): a for a in ARCHS}
+
+
+def canonical(arch: str) -> str:
+    a = arch.replace("-", "_").replace(".", "_")
+    if a in ARCHS:
+        return a
+    if arch in _ALIAS:
+        return _ALIAS[arch]
+    raise KeyError(f"unknown arch {arch!r}; known: {', '.join(ARCHS)}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE_CONFIG
+
+
+def build_model(cfg: ModelConfig):
+    return FAMILIES[cfg.family](cfg)
+
+
+def build(arch: str):
+    cfg = get_config(arch)
+    return build_model(cfg), cfg

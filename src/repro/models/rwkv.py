@@ -1,0 +1,118 @@
+"""RWKV-6 "Finch" LM: attention-free, per-channel data-dependent decay."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.decoder import REMAT_POLICIES
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+
+
+class RWKVOutput(NamedTuple):
+    logits: jnp.ndarray
+    aux_loss: jnp.ndarray
+    cache: Optional[Any]
+
+
+class RWKVLM:
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.rwkv is not None
+        self.cfg = cfg
+
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        d = cfg.d_model
+        return {
+            "embed": L.embed_specs(cfg),
+            "layers": {
+                **ssm.rwkv6_specs(cfg, layered=True),
+                "ln1": ParamSpec((cfg.num_layers, d), ("layers", None), init="ones"),
+                "ln2": ParamSpec((cfg.num_layers, d), ("layers", None), init="ones"),
+            },
+        }
+
+    def _scan_layers(self, params, x, decode_states=None):
+        cfg = self.cfg
+        policy = REMAT_POLICIES.get(cfg.remat_policy)
+        b = x.shape[0]
+
+        def body(carry, xs):
+            lp, st = xs
+
+            def inner(h, lp_, st_):
+                if st_ is None:
+                    st_ = ssm.rwkv6_init_state(cfg, b, h.dtype)
+                a = L.rmsnorm(h, lp_["ln1"], cfg.norm_eps)
+                if h.shape[1] == 1 and decode_states is not None:
+                    tm_out, st_ = ssm.rwkv6_decode_step(lp_, a, st_, cfg)
+                else:
+                    tm_out, st_ = ssm.rwkv6_time_mix(lp_, a, cfg, st_)
+                h = h + tm_out
+                a = L.rmsnorm(h, lp_["ln2"], cfg.norm_eps)
+                cm_out, st_ = ssm.rwkv6_channel_mix(lp_, a, cfg, st_)
+                h = h + cm_out
+                return constrain(h, "batch", None, "embed_no_fsdp"), st_
+
+            if policy is not None:
+                inner = jax.checkpoint(inner, policy=policy)
+            h, new_st = inner(carry, lp, st)
+            return h, new_st
+
+        x, new_states = jax.lax.scan(body, x, (params["layers"], decode_states))
+        return x, new_states
+
+    def forward(
+        self, params, batch: Dict[str, jnp.ndarray], last_only: bool = False
+    ) -> RWKVOutput:
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        pad = (-s) % cfg.rwkv.chunk
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        x, _ = self._scan_layers(params, x)
+        if pad:
+            x = x[:, :s]
+        if last_only:
+            x = x[:, -1:]
+        logits = L.lm_logits(params["embed"], x, cfg)
+        return RWKVOutput(logits=logits, aux_loss=jnp.zeros((), F32), cache=None)
+
+    # -- decode -----------------------------------------------------------------
+    def cache_spec(self, batch: int, cache_len: int):
+        """RWKV decode state is O(1) — cache_len is irrelevant (linear attn)."""
+        cfg = self.cfg
+        nheads, hd = ssm.rwkv6_dims(cfg)
+        nl = cfg.num_layers
+        return {
+            "tm_x": ParamSpec((nl, batch, cfg.d_model), ("layers", "batch", None), init="zeros"),
+            "cm_x": ParamSpec((nl, batch, cfg.d_model), ("layers", "batch", None), init="zeros"),
+            "wkv": ParamSpec(
+                (nl, batch, nheads, hd, hd),
+                ("layers", "batch", "heads", None, None), init="zeros",
+            ),
+        }
+
+    def decode_step(self, params, tokens, positions, cache) -> RWKVOutput:
+        cfg = self.cfg
+        params = L.cast_params(params, cfg.dtype)
+        x = L.embed_tokens(params["embed"], tokens, cfg)
+        states = ssm.RWKVState(
+            tm_x=cache["tm_x"], cm_x=cache["cm_x"], wkv=cache["wkv"]
+        )
+        x, new_states = self._scan_layers(params, x, decode_states=states)
+        logits = L.lm_logits(params["embed"], x, cfg)
+        new_cache = {
+            "tm_x": new_states.tm_x, "cm_x": new_states.cm_x, "wkv": new_states.wkv
+        }
+        return RWKVOutput(logits=logits, aux_loss=jnp.zeros((), F32), cache=new_cache)

@@ -1,0 +1,420 @@
+"""SSM / linear-attention blocks: Mamba2 (SSD) and RWKV-6 (Finch).
+
+Both are implemented in the CHUNKED form (the TPU-native formulation):
+within-chunk terms are dense einsums that feed the MXU; cross-chunk terms
+carry an O(d_state) recurrent state through a ``lax.scan`` over chunks. This
+is the standard hardware adaptation of the papers' CUDA scans — no warp
+primitives involved, and compile size stays constant in sequence length.
+
+Decode uses the exact O(1)-per-token recurrences (`*_decode_step`), which is
+what makes the ``long_500k`` cell feasible for these families.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+F32 = jnp.float32
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def mamba2_dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    di = ssm.expand * cfg.d_model
+    nheads = di // ssm.head_dim
+    conv_ch = di + 2 * ssm.state_dim
+    return di, nheads, conv_ch
+
+
+def mamba2_specs(cfg: ModelConfig, layered: bool = True):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    di, nheads, conv_ch = mamba2_dims(cfg)
+    lead = (cfg.num_layers,) if layered else ()
+    lx = ("layers",) if layered else ()
+    return {
+        "in_proj": ParamSpec(
+            lead + (d, 2 * di + 2 * ssm.state_dim + nheads), lx + ("embed", "ff")
+        ),
+        "conv_w": ParamSpec(lead + (ssm.conv_width, conv_ch), lx + (None, "ff")),
+        "conv_b": ParamSpec(lead + (conv_ch,), lx + ("ff",), init="zeros"),
+        "A_log": ParamSpec(lead + (nheads,), lx + ("ff",), init="zeros"),
+        "D": ParamSpec(lead + (nheads,), lx + ("ff",), init="ones"),
+        "dt_bias": ParamSpec(lead + (nheads,), lx + ("ff",), init="zeros"),
+        "norm": ParamSpec(lead + (di,), lx + ("ff",), init="ones"),
+        "out_proj": ParamSpec(lead + (di, d), lx + ("ff", "embed")),
+    }
+
+
+class Mamba2State(NamedTuple):
+    ssm: jnp.ndarray   # (B, H, head_dim, state)
+    conv: jnp.ndarray  # (B, conv_width-1, conv_ch)
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv1d. xbc: (B,S,C); w: (W,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    return jax.nn.silu((out + b).astype(F32)).astype(xbc.dtype)
+
+
+def _split_zxbcdt(p, x, cfg: ModelConfig):
+    ssm = cfg.ssm
+    di, nheads, _ = mamba2_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * ssm.state_dim]
+    dt = zxbcdt[..., 2 * di + 2 * ssm.state_dim :]
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :di]
+    Bm = xbc[..., di : di + ssm.state_dim]
+    Cm = xbc[..., di + ssm.state_dim :]
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,H)
+    return z, xs, Bm, Cm, dt
+
+
+def mamba2_forward(
+    p,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    initial_state: Optional[Mamba2State] = None,
+) -> Tuple[jnp.ndarray, Mamba2State]:
+    """Chunked SSD scan. x: (B,S,D) with S % chunk == 0 (caller pads)."""
+    ssm = cfg.ssm
+    di, nheads, conv_ch = mamba2_dims(cfg)
+    hd, ns, L = ssm.head_dim, ssm.state_dim, ssm.chunk
+    b, s, _ = x.shape
+    nc = s // L
+
+    z, xs, Bm, Cm, dt = _split_zxbcdt(p, x, cfg)
+    A = -jnp.exp(p["A_log"].astype(F32))                      # (H,) negative
+    dA = dt * A                                                # (B,S,H) log-decay
+
+    xh = xs.reshape(b, nc, L, nheads, hd)
+    dtc = dt.reshape(b, nc, L, nheads)
+    dAc = dA.reshape(b, nc, L, nheads)
+    Bc = Bm.reshape(b, nc, L, ns).astype(F32)
+    Cc = Cm.reshape(b, nc, L, ns).astype(F32)
+    xdt = xh.astype(F32) * dtc[..., None]                      # discretized input
+
+    cum = jnp.cumsum(dAc, axis=2)                              # (B,nc,L,H)
+    total = cum[:, :, -1, :]                                   # (B,nc,H)
+
+    # Within-chunk (quadratic in L, masked): G[t,s] = exp(cum_t - cum_s), s<=t
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), bool))
+    G = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    att = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)                # (B,nc,L,L)
+    y_intra = jnp.einsum("bclm,bclmh,bcmhp->bclhp", att, G, xdt)
+
+    # Cross-chunk state scan: S' = exp(total) S + sum_s exp(total-cum_s) B_s x_s
+    carry_in = jnp.einsum(
+        "bclh,bcln,bclhp->bchpn", jnp.exp(total[:, :, None, :] - cum), Bc, xdt
+    )                                                           # (B,nc,H,P,N)
+    init = (
+        initial_state.ssm.astype(F32)
+        if initial_state is not None
+        else jnp.zeros((b, nheads, hd, ns), F32)
+    )
+
+    def step(state, inputs):
+        tot_c, inc_c = inputs                                   # (B,H), (B,H,P,N)
+        new = state * jnp.exp(tot_c)[:, :, None, None] + inc_c
+        return new, state                                       # emit PRE-state
+
+    totals = jnp.moveaxis(total, 1, 0)                          # (nc,B,H)
+    incs = jnp.moveaxis(carry_in, 1, 0)                         # (nc,B,H,P,N)
+    final_state, prior = jax.lax.scan(step, init, (totals, incs))
+    prior = jnp.moveaxis(prior, 0, 1)                           # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bcln,bclh,bchpn->bclhp", Cc, jnp.exp(cum), prior
+    )
+    y = (y_intra + y_inter).reshape(b, s, nheads, hd)
+    y = y + p["D"].astype(F32)[None, None, :, None] * xh.reshape(b, s, nheads, hd).astype(F32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)          # gate
+    # grouped rmsnorm over di
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+
+    conv_tail_src = jnp.concatenate(
+        [
+            jnp.zeros((b, cfg.ssm.conv_width - 1, conv_ch), x.dtype),
+            _conv_input(p, x, cfg),
+        ],
+        axis=1,
+    )[:, -(cfg.ssm.conv_width - 1) :, :]
+    return constrain(out, "batch", None, "embed_no_fsdp"), Mamba2State(
+        ssm=final_state, conv=conv_tail_src
+    )
+
+
+def _conv_input(p, x, cfg):
+    """Pre-conv xBC stream (needed to seed the decode conv cache)."""
+    ssm = cfg.ssm
+    di, _, _ = mamba2_dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    return zxbcdt[..., di : 2 * di + 2 * ssm.state_dim]
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> Mamba2State:
+    di, nheads, conv_ch = mamba2_dims(cfg)
+    return Mamba2State(
+        ssm=jnp.zeros((batch, nheads, cfg.ssm.head_dim, cfg.ssm.state_dim), F32),
+        conv=jnp.zeros((batch, cfg.ssm.conv_width - 1, conv_ch), dtype),
+    )
+
+
+def mamba2_decode_step(
+    p, x: jnp.ndarray, state: Mamba2State, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, Mamba2State]:
+    """O(1) recurrence. x: (B,1,D)."""
+    ssm = cfg.ssm
+    di, nheads, conv_ch = mamba2_dims(cfg)
+    hd, ns = ssm.head_dim, ssm.state_dim
+    b = x.shape[0]
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    z = zxbcdt[..., :di]
+    xbc_new = zxbcdt[:, 0, di : 2 * di + 2 * ns]               # (B,C)
+    dt = zxbcdt[..., 2 * di + 2 * ns :]
+
+    conv_buf = jnp.concatenate([state.conv, xbc_new[:, None, :]], axis=1)
+    w = p["conv_w"]
+    acc = sum(conv_buf[:, i, :] * w[i][None, :] for i in range(w.shape[0]))
+    xbc = jax.nn.silu((acc + p["conv_b"]).astype(F32)).astype(x.dtype)
+
+    xs = xbc[:, :di].reshape(b, nheads, hd)
+    Bm = xbc[:, di : di + ns].astype(F32)
+    Cm = xbc[:, di + ns :].astype(F32)
+    dt = jax.nn.softplus(dt[:, 0, :].astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+    decay = jnp.exp(dt * A)                                     # (B,H)
+
+    xdt = xs.astype(F32) * dt[..., None]                        # (B,H,P)
+    new_ssm = state.ssm * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xdt, Bm
+    )
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, Cm)
+    y = y + p["D"].astype(F32)[None, :, None] * xs.astype(F32)
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(F32)).astype(x.dtype)
+    var = jnp.mean(jnp.square(y.astype(F32)), axis=-1, keepdims=True)
+    y = (y.astype(F32) * jax.lax.rsqrt(var + 1e-6) * p["norm"].astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, Mamba2State(ssm=new_ssm, conv=conv_buf[:, 1:, :])
+
+
+# ===========================================================================
+# RWKV-6 (Finch)
+# ===========================================================================
+
+
+def rwkv6_dims(cfg: ModelConfig):
+    hd = cfg.rwkv.head_dim
+    nheads = cfg.d_model // hd
+    return nheads, hd
+
+
+def rwkv6_specs(cfg: ModelConfig, layered: bool = True):
+    d = cfg.d_model
+    nheads, hd = rwkv6_dims(cfg)
+    f = cfg.d_ff
+    lead = (cfg.num_layers,) if layered else ()
+    lx = ("layers",) if layered else ()
+    lora = 64
+    return {
+        # time-mix
+        "mu_r": ParamSpec(lead + (d,), lx + (None,), init="ones", scale=0.5),
+        "mu_k": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        "mu_v": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        "mu_w": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        "mu_g": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        "wr": ParamSpec(lead + (d, d), lx + ("embed", "heads")),
+        "wk": ParamSpec(lead + (d, d), lx + ("embed", "heads")),
+        "wv": ParamSpec(lead + (d, d), lx + ("embed", "heads")),
+        "wg": ParamSpec(lead + (d, d), lx + ("embed", "heads")),
+        "wo": ParamSpec(lead + (d, d), lx + ("heads", "embed")),
+        "w_base": ParamSpec(lead + (d,), lx + (None,), init="zeros"),
+        "w_lora1": ParamSpec(lead + (d, lora), lx + ("embed", None)),
+        "w_lora2": ParamSpec(lead + (lora, d), lx + (None, "heads")),
+        "u_bonus": ParamSpec(lead + (nheads, hd), lx + ("heads", None), init="zeros"),
+        "ln_x": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        # channel-mix
+        "cm_mu_k": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        "cm_mu_r": ParamSpec(lead + (d,), lx + (None,), init="ones"),
+        "cm_k": ParamSpec(lead + (d, f), lx + ("embed", "ff")),
+        "cm_v": ParamSpec(lead + (f, d), lx + ("ff", "embed")),
+        "cm_r": ParamSpec(lead + (d, d), lx + ("embed", "heads")),
+    }
+
+
+class RWKVState(NamedTuple):
+    tm_x: jnp.ndarray   # (B, D) last input to time-mix (token shift)
+    cm_x: jnp.ndarray   # (B, D) last input to channel-mix
+    wkv: jnp.ndarray    # (B, H, hd, hd) linear-attention state
+
+
+def rwkv6_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> RWKVState:
+    nheads, hd = rwkv6_dims(cfg)
+    return RWKVState(
+        tm_x=jnp.zeros((batch, cfg.d_model), dtype),
+        cm_x=jnp.zeros((batch, cfg.d_model), dtype),
+        wkv=jnp.zeros((batch, nheads, hd, hd), F32),
+    )
+
+
+def _token_shift(x: jnp.ndarray, last: jnp.ndarray) -> jnp.ndarray:
+    """prev-token stream: [last, x_0 .. x_{S-2}]."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, prev, mu):
+    return x + (prev - x) * mu
+
+
+def rwkv6_time_mix(
+    p, x: jnp.ndarray, cfg: ModelConfig, state: RWKVState
+) -> Tuple[jnp.ndarray, RWKVState]:
+    """Chunked RWKV-6 WKV with data-dependent per-channel decay."""
+    nheads, hd = rwkv6_dims(cfg)
+    b, s, d = x.shape
+    L = min(cfg.rwkv.chunk, s)
+    assert s % L == 0, (s, L)
+    nc = s // L
+
+    prev = _token_shift(x, state.tm_x)
+    r = jnp.einsum("bsd,dh->bsh", _lerp(x, prev, p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dh->bsh", _lerp(x, prev, p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", _lerp(x, prev, p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dh->bsh", _lerp(x, prev, p["mu_g"]), p["wg"])
+    xw = _lerp(x, prev, p["mu_w"])
+    w_dd = p["w_base"] + jnp.einsum(
+        "bsl,lh->bsh", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["w_lora1"])),
+        p["w_lora2"],
+    )
+    # Per-channel log decay in (-e, -e^-6). The clamp bounds the factored
+    # exp(±cum) within a chunk to e^(chunk * e) — fp32-safe for chunk <= 16
+    # (this is why RWKVConfig.chunk defaults to 16; the cross-chunk scan
+    # carries exact state so semantics are unaffected across chunks).
+    logw = -jnp.exp(jnp.clip(w_dd.astype(F32), -6.0, 1.0))      # (B,S,D)
+
+    rh = r.reshape(b, nc, L, nheads, hd).astype(F32)
+    kh = k.reshape(b, nc, L, nheads, hd).astype(F32)
+    vh = v.reshape(b, nc, L, nheads, hd).astype(F32)
+    lw = logw.reshape(b, nc, L, nheads, hd)
+
+    cum = jnp.cumsum(lw, axis=2)                                 # inclusive
+    cum_excl = cum - lw                                          # exclusive
+    total = cum[:, :, -1]                                        # (B,nc,H,hd)
+
+    # within-chunk: y_t = r_t . sum_{s<t} exp(cumx_t - cum_s... ) k_s v_s + u.k_t v_t
+    # decay from s (exclusive of s) to t (exclusive of t): cum_excl_t - cum_s
+    r_dec = rh * jnp.exp(cum_excl)                               # (B,nc,L,H,hd)
+    k_dec = kh * jnp.exp(-cum)                                   # 1/prod decay
+    scores = jnp.einsum("bclhd,bcmhd->bchlm", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)                 # strictly lower
+    scores = jnp.where(tri[None, None, None], scores, 0.0)
+    diag = jnp.einsum("bclhd,bclhd->bclh", rh * p["u_bonus"].astype(F32)[None, None], kh)
+    y = jnp.einsum("bchlm,bcmhd->bclhd", scores, vh)
+    y = y + diag[..., None] * vh
+
+    # cross-chunk
+    carry_in = jnp.einsum(
+        "bclhd,bclhe->bchde", kh * jnp.exp(total[:, :, None] - cum), vh
+    )                                                             # (B,nc,H,hd,hd)
+
+    def step(wkv, inputs):
+        tot_c, inc_c = inputs
+        new = wkv * jnp.exp(tot_c)[..., None] + inc_c
+        return new, wkv
+
+    totals = jnp.moveaxis(total, 1, 0)                            # (nc,B,H,hd)
+    incs = jnp.moveaxis(carry_in, 1, 0)
+    final_wkv, prior = jax.lax.scan(step, state.wkv, (totals, incs))
+    prior = jnp.moveaxis(prior, 0, 1)                             # (B,nc,H,hd,hd)
+    y = y + jnp.einsum("bclhd,bchde->bclhe", rh * jnp.exp(cum_excl), prior)
+
+    y = y.reshape(b, s, d)
+    # per-head group norm
+    yh = y.reshape(b, s, nheads, hd)
+    mean = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (yh.reshape(b, s, d) * p["ln_x"].astype(F32)).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    out = jnp.einsum("bsh,hd->bsd", y, p["wo"])
+    new_state = RWKVState(tm_x=x[:, -1, :], cm_x=state.cm_x, wkv=final_wkv)
+    return constrain(out, "batch", None, "embed_no_fsdp"), new_state
+
+
+def rwkv6_channel_mix(
+    p, x: jnp.ndarray, cfg: ModelConfig, state: RWKVState
+) -> Tuple[jnp.ndarray, RWKVState]:
+    prev = _token_shift(x, state.cm_x)
+    xk = _lerp(x, prev, p["cm_mu_k"])
+    xr = _lerp(x, prev, p["cm_mu_r"])
+    k = jnp.einsum("bsd,df->bsf", xk, p["cm_k"])
+    k = jnp.square(jax.nn.relu(k.astype(F32))).astype(x.dtype)
+    k = constrain(k, "batch", None, "ff")
+    v = jnp.einsum("bsf,fd->bsd", k, p["cm_v"])
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsd,dh->bsh", xr, p["cm_r"]).astype(F32)
+    ).astype(x.dtype)
+    out = r * v
+    return out, RWKVState(tm_x=state.tm_x, cm_x=x[:, -1, :], wkv=state.wkv)
+
+
+def rwkv6_decode_step(
+    p, x: jnp.ndarray, state: RWKVState, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, RWKVState]:
+    """Single-token recurrence for BOTH mixes. x: (B,1,D) block input."""
+    nheads, hd = rwkv6_dims(cfg)
+    b = x.shape[0]
+    xt = x[:, 0, :]
+    prev = state.tm_x
+
+    def proj(mu, w):
+        return jnp.einsum("bd,dh->bh", _lerp(xt, prev, mu), w)
+
+    r = proj(p["mu_r"], p["wr"]).reshape(b, nheads, hd).astype(F32)
+    k = proj(p["mu_k"], p["wk"]).reshape(b, nheads, hd).astype(F32)
+    v = proj(p["mu_v"], p["wv"]).reshape(b, nheads, hd).astype(F32)
+    g = proj(p["mu_g"], p["wg"])
+    xw = _lerp(xt, prev, p["mu_w"])
+    w_dd = p["w_base"] + jnp.einsum(
+        "bl,lh->bh", jnp.tanh(jnp.einsum("bd,dl->bl", xw, p["w_lora1"])),
+        p["w_lora2"],
+    )
+    logw = -jnp.exp(jnp.clip(w_dd.astype(F32), -6.0, 1.0)).reshape(b, nheads, hd)
+
+    kv = jnp.einsum("bhd,bhe->bhde", k, v)
+    ru = r * p["u_bonus"].astype(F32)[None]
+    y = jnp.einsum("bhd,bhde->bhe", r, state.wkv) + jnp.einsum(
+        "bhd,bhde->bhe", ru, kv
+    )
+    new_wkv = state.wkv * jnp.exp(logw)[..., None] + kv
+
+    mean = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 1e-5)
+    y = (y.reshape(b, cfg.d_model) * p["ln_x"].astype(F32)).astype(x.dtype)
+    y = y * jax.nn.silu(g.astype(F32)).astype(x.dtype)
+    out_tm = jnp.einsum("bh,hd->bd", y, p["wo"])
+    return out_tm[:, None, :], RWKVState(tm_x=xt, cm_x=state.cm_x, wkv=new_wkv)

@@ -1,0 +1,45 @@
+"""LLaVA-NeXT-style VLM: Mistral decoder backbone + anyres vision stub.
+
+The vision tower is a STUB per the assignment: ``input_specs`` provides
+precomputed patch embeddings (B, P, vision_dim). A 2-layer MLP projector
+maps them into d_model and they replace the first P token positions
+(image-prefix convention). Everything else is the dense decoder.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.decoder import DecoderLM
+from repro.models.params import ParamSpec
+from repro.parallel.sharding import constrain
+
+
+class VLMDecoderLM(DecoderLM):
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.vlm is not None
+        super().__init__(cfg)
+
+    def specs(self) -> Dict[str, Any]:
+        sp = super().specs()
+        v, d = self.cfg.vlm.vision_dim, self.cfg.d_model
+        sp["projector"] = {
+            "w1": ParamSpec((v, d), ("embed", None)),
+            "w2": ParamSpec((d, d), ("embed", None)),
+        }
+        return sp
+
+    def _prefix_inject(self, params, x, batch):
+        """Replace the first P positions with projected patch embeddings."""
+        patches = batch.get("patches")
+        if patches is None:
+            return x
+        pr = params["projector"]
+        h = jnp.einsum("bpv,vd->bpd", patches.astype(x.dtype), pr["w1"])
+        h = jnp.einsum("bpd,de->bpe", jnp.tanh(h), pr["w2"])
+        h = constrain(h, "batch", None, "embed_no_fsdp")
+        p = h.shape[1]
+        return jnp.concatenate([h, x[:, p:, :]], axis=1)

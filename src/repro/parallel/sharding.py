@@ -1,0 +1,206 @@
+"""Logical-axis sharding: one rule table maps every weight/activation axis
+onto mesh axes (GSPMD via NamedSharding + with_sharding_constraint).
+
+Conventions (see DESIGN.md §5):
+
+  mesh axes: ("pod", "data", "model")   [single-pod: ("data", "model")]
+
+  logical axes:
+    "batch"    -> ("pod", "data")   activations' leading dim
+    "seq"      -> None (or "data" for sequence parallelism on long context)
+    "embed"    -> "data"            FSDP: parameters' d_model dim
+    "heads"    -> "model"           TP: attention heads
+    "kv_heads" -> "model"           TP: KV heads (GQA)
+    "ff"       -> "model"           TP: MLP hidden
+    "vocab"    -> "model"           TP: embedding/vocab rows
+    "experts"  -> "model"           EP: MoE experts
+    "state"    -> None              SSM state dims stay local
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Any]  # logical axis -> mesh axis | tuple | None
+
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",          # FSDP
+    "embed_no_fsdp": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "seq_sharded": "data",    # KV-cache / long-context time axis
+    "seq_model": None,        # Megatron-style attention sequence parallelism
+    "moe_seq": None,          # MoE dispatch-buffer sub-row axis (tunable
+                              # independently of attention seq-parallelism)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Logical:
+    """A logical sharding annotation attached to a param spec."""
+
+    axes: Tuple[Optional[str], ...]
+
+
+def resolve_spec(axes: Sequence[Optional[str]], rules: Rules, mesh: Mesh) -> P:
+    """Logical axes -> PartitionSpec, dropping mesh axes that don't exist
+    and axes whose size doesn't divide the dim (caller validates dims)."""
+    names = set(mesh.axis_names)
+    out = []
+    for ax in axes:
+        if ax is None:
+            out.append(None)
+            continue
+        m = rules.get(ax, None)
+        if m is None:
+            out.append(None)
+        elif isinstance(m, tuple):
+            kept = tuple(a for a in m if a in names)
+            out.append(kept if kept else None)
+        else:
+            out.append(m if m in names else None)
+    # PartitionSpec trailing Nones are fine.
+    return P(*out)
+
+
+def named_sharding(
+    mesh: Mesh, axes: Sequence[Optional[str]], rules: Optional[Rules] = None
+) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(axes, rules or DEFAULT_RULES, mesh))
+
+
+def tree_shardings(
+    mesh: Mesh,
+    logical_tree: Any,
+    rules: Optional[Rules] = None,
+) -> Any:
+    """Map a pytree of Logical specs to a pytree of NamedShardings."""
+    rules = rules or DEFAULT_RULES
+    return jax.tree.map(
+        lambda sp: named_sharding(mesh, sp.axes, rules),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, Logical),
+    )
+
+
+def checked_sharding(
+    mesh: Mesh,
+    shape: Tuple[int, ...],
+    axes: Sequence[Optional[str]],
+    rules: Optional[Rules] = None,
+) -> NamedSharding:
+    """NamedSharding that silently DROPS mesh axes a dim cannot divide.
+
+    This is what makes one rule table serve every architecture: e.g.
+    "experts" -> "model" applies to a 16-expert model on a 16-way axis and
+    falls back to replication for 8- or 40-expert models.
+    """
+    rules = rules or DEFAULT_RULES
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    used: set = set()  # a mesh axis may appear at most once per spec (FCFS)
+    for dim, ax in zip(shape, axes):
+        m = rules.get(ax) if ax is not None else None
+        if m is None:
+            out.append(None)
+            continue
+        cand = m if isinstance(m, tuple) else (m,)
+        kept = []
+        rem = dim
+        for a in cand:
+            if (
+                a in names and a not in used and sizes[a] > 1
+                and rem % sizes[a] == 0
+            ):
+                kept.append(a)
+                used.add(a)
+                rem //= sizes[a]
+        out.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return NamedSharding(mesh, P(*out))
+
+
+def spec_shardings(mesh: Mesh, specs_tree: Any, rules: Optional[Rules] = None):
+    """ParamSpec tree -> divisibility-checked NamedSharding tree."""
+    from repro.models.params import ParamSpec  # local import to avoid cycle
+
+    return jax.tree.map(
+        lambda sp: checked_sharding(mesh, sp.shape, sp.axes, rules),
+        specs_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+_ACTIVE_RULES: Optional[Rules] = None
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    """Install per-cell rule overrides for the duration of a trace."""
+    global _ACTIVE_RULES
+    old = _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES = old
+
+
+def active_rules() -> Rules:
+    return _ACTIVE_RULES if _ACTIVE_RULES is not None else DEFAULT_RULES
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The Mesh installed via ``with mesh:`` in the calling (trace) context."""
+    try:
+        from jax._src import mesh as mesh_lib
+
+        phys = mesh_lib.thread_resources.env.physical_mesh
+        if phys is not None and phys.axis_names:
+            return phys
+    except Exception:
+        pass
+    return None
+
+
+def constrain(x, *axes: Optional[str], rules: Optional[Rules] = None):
+    """with_sharding_constraint using logical axes (no-op outside a mesh).
+
+    Divisibility- and duplicate-axis-checked: axes that cannot legally
+    shard this value are dropped rather than erroring, so layer code can
+    annotate intent unconditionally.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    sharding = checked_sharding(mesh, x.shape, axes, rules or active_rules())
+    return jax.lax.with_sharding_constraint(x, sharding.spec)
+
+
+def validate_divisibility(shape: Tuple[int, ...], spec: P, mesh: Mesh) -> bool:
+    """True if every sharded dim divides evenly on the mesh."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, ax in zip(shape, spec):
+        if ax is None:
+            continue
+        axs = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([sizes[a] for a in axs]))
+        if dim % total != 0:
+            return False
+    return True

@@ -1,0 +1,110 @@
+"""Batched serving engine: continuous-batching decode over a shared cache.
+
+`serve_step` is the jit program the decode_32k / long_500k cells lower:
+one new token for every active slot against the persistent cache/state.
+The host-side `ServeEngine` does slot management (admit/evict/finished)
+around it — the standard continuous-batching split (device step stays
+shape-stable; the host mutates slot metadata only).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def make_serve_step(model, cfg: ModelConfig, *, temperature: float = 0.0):
+    """Build the jit-able one-token decode step (greedy or sampled)."""
+
+    def serve_step(params, tokens, positions, cache, rng):
+        out = model.decode_step(params, tokens, positions, cache)
+        logits = out.logits[:, -1, :]                      # (B, V)
+        if temperature > 0.0:
+            rng, sub = jax.random.split(rng)
+            next_tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(logits, axis=-1)
+        return next_tok.astype(jnp.int32)[:, None], out.cache, rng
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous batching over a fixed number of slots."""
+
+    def __init__(self, model, cfg: ModelConfig, params, *, slots: int = 8,
+                 cache_len: int = 1024, temperature: float = 0.0):
+        self.model = model
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        sp = model.cache_spec(slots, cache_len)
+        self.cache = {
+            k: jnp.zeros(
+                v.shape, jnp.int32 if "index" in k else jnp.dtype(cfg.dtype)
+            )
+            for k, v in sp.items()
+        }
+        self.positions = np.zeros(slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * slots
+        self.step_fn = jax.jit(make_serve_step(model, cfg, temperature=temperature))
+        self.rng = jax.random.PRNGKey(0)
+        self.last_tok = np.zeros((slots, 1), np.int32)
+
+    def _admit(self, queue: List[Request]):
+        for i in range(self.slots):
+            if self.active[i] is None and queue:
+                req = queue.pop(0)
+                self.active[i] = req
+                # prefill token-by-token (simple; prefill fusion is in
+                # launch/serve.py for the batched path)
+                for t, tok in enumerate(req.prompt):
+                    toks = self.last_tok.copy()
+                    toks[i, 0] = tok
+                    pos = np.zeros((self.slots, 1), np.int32)
+                    pos[i, 0] = t
+                    nt, self.cache, self.rng = self.step_fn(
+                        self.params, jnp.asarray(toks), jnp.asarray(pos),
+                        self.cache, self.rng,
+                    )
+                self.positions[i] = len(req.prompt)
+                self.last_tok[i, 0] = int(np.asarray(nt)[i, 0])
+
+    def run(self, requests: List[Request], eos: int = -1) -> List[Request]:
+        queue = list(requests)
+        finished: List[Request] = []
+        while queue or any(r is not None for r in self.active):
+            self._admit(queue)
+            pos = self.positions.reshape(-1, 1).astype(np.int32)
+            nt, self.cache, self.rng = self.step_fn(
+                self.params, jnp.asarray(self.last_tok), jnp.asarray(pos),
+                self.cache, self.rng,
+            )
+            nt = np.asarray(nt)
+            for i, req in enumerate(self.active):
+                if req is None:
+                    continue
+                tok = int(nt[i, 0])
+                req.generated.append(tok)
+                self.positions[i] += 1
+                self.last_tok[i, 0] = tok
+                if len(req.generated) >= req.max_new_tokens or tok == eos:
+                    req.done = True
+                    finished.append(req)
+                    self.active[i] = None
+        return finished

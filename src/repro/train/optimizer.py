@@ -1,0 +1,108 @@
+"""Optimizers: AdamW (fp32 master + moments) and Adafactor-lite.
+
+Implemented from scratch (no optax in this container). The optimizer state
+lives in fp32 regardless of the bf16 compute params — the standard mixed
+precision recipe — and every state leaf inherits the parameter's logical
+sharding, so FSDP shards optimizer state for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: Optional[float] = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray       # () int32
+    mu: Any                 # fp32 first moment, like params
+    nu: Any                 # fp32 second moment
+    master: Any             # fp32 master params
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32))) for x in leaves))
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+    master = jax.tree.map(lambda p: p.astype(F32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+
+def adamw_abstract_state(param_structs) -> AdamWState:
+    """ShapeDtypeStruct mirror for the dry-run path."""
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, F32)  # noqa: E731
+    return AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+        mu=jax.tree.map(f32, param_structs),
+        nu=jax.tree.map(f32, param_structs),
+        master=jax.tree.map(f32, param_structs),
+    )
+
+
+def adamw_update(
+    grads, state: AdamWState, cfg: AdamWConfig, lr_scale: jnp.ndarray
+) -> Tuple[Any, AdamWState]:
+    """One AdamW step. Returns (new bf16-castable params, new state).
+
+    grads are in params dtype (bf16-safe): they are upcast here once.
+    """
+    step = state.step + 1
+    g32 = jax.tree.map(lambda g: g.astype(F32), grads)
+    if cfg.grad_clip_norm is not None:
+        norm = global_norm(g32)
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / (norm + 1e-9))
+        g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    b1, b2 = cfg.b1, cfg.b2
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, g32)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, g32)
+    bc1 = 1 - b1 ** step.astype(F32)
+    bc2 = 1 - b2 ** step.astype(F32)
+    lr = cfg.lr * lr_scale
+
+    def upd(master, m, v):
+        mhat = m / bc1
+        vhat = v / bc2
+        return master - lr * (
+            mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * master
+        )
+
+    master = jax.tree.map(upd, state.master, mu, nu)
+    return master, AdamWState(step=step, mu=mu, nu=nu, master=master)
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+
+def cosine_schedule(
+    warmup_steps: int, total_steps: int, min_ratio: float = 0.1
+) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def fn(step):
+        step = step.astype(F32)
+        warm = jnp.minimum(step / max(warmup_steps, 1), 1.0)
+        frac = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return warm * cos
+
+    return fn

@@ -1,0 +1,149 @@
+"""The jit-compiled training step: microbatched grad accumulation + AdamW.
+
+Structure (all inside ONE jit program so XLA can overlap the backward's
+gradient reduce-scatter with compute):
+
+  scan over microbatches:
+      value_and_grad(loss(params_bf16, microbatch))   [remat inside layers]
+      accumulate fp32 grads
+  psum over ("pod","data") is implicit — GSPMD inserts the hierarchical
+  all-reduce from the batch sharding; grads of FSDP-sharded params become
+  reduce-scatters fused with the accumulation.
+  AdamW update on fp32 master; emit bf16 params for the next step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.parallel.sharding import constrain
+from repro.train import optimizer as opt
+
+F32 = jnp.float32
+
+
+class TrainState(NamedTuple):
+    params: Any            # compute-dtype params (bf16)
+    opt: opt.AdamWState    # fp32 moments + master
+    rng: jnp.ndarray
+
+
+class StepMetrics(NamedTuple):
+    loss: jnp.ndarray
+    aux_loss: jnp.ndarray
+    grad_norm: jnp.ndarray
+    tokens: jnp.ndarray
+
+
+def cross_entropy(
+    logits: jnp.ndarray, labels: jnp.ndarray, mask: Optional[jnp.ndarray]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean masked token cross-entropy in fp32. logits: (B,S,V).
+
+    The gold-logit gather is written as a one-hot masked reduction so it
+    stays partitioned when the vocab axis is TP-sharded (a take_along_axis
+    would force an all-gather of the full logits).
+    """
+    logits = logits.astype(F32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, len(logits.shape) - 1)
+    onehot = vocab_iota == labels[..., None]
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is None:
+        mask = jnp.ones_like(labels, F32)
+    mask = mask.astype(F32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / total, total
+
+
+def make_loss_fn(model, cfg: ModelConfig, aux_weight: float = 0.01):
+    def loss_fn(params, batch):
+        out = model.forward(params, batch)
+        labels = batch.get("labels", batch["tokens"])
+        # next-token shift: predict t+1 from <=t
+        logits = out.logits[:, :-1]
+        tgt = labels[:, 1:]
+        mask = batch.get("loss_mask")
+        mask = mask[:, 1:] if mask is not None else None
+        ce, ntok = cross_entropy(logits, tgt, mask)
+        loss = ce + aux_weight * out.aux_loss
+        return loss, (ce, out.aux_loss, ntok)
+
+    return loss_fn
+
+
+def make_train_step(
+    model,
+    cfg: ModelConfig,
+    opt_cfg: opt.AdamWConfig,
+    schedule: Callable,
+    num_microbatches: int = 1,
+) -> Callable[[TrainState, Dict[str, jnp.ndarray]], Tuple[TrainState, StepMetrics]]:
+    """Build the jit-able train step (microbatched over the batch dim)."""
+    loss_fn = make_loss_fn(model, cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def split_mb(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+
+    def train_step(state: TrainState, batch) -> Tuple[TrainState, StepMetrics]:
+        params = state.params
+
+        if num_microbatches == 1:
+            (loss, (ce, aux, ntok)), grads = grad_fn(params, batch)
+        else:
+            mbs = jax.tree.map(split_mb, batch)
+
+            def body(carry, mb):
+                g_acc, l_acc, a_acc, n_acc = carry
+                mb = jax.tree.map(
+                    lambda x: constrain(x, "batch"), mb
+                )
+                (l, (ce_i, a, n)), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda acc, gi: acc + gi.astype(F32), g_acc, g
+                )
+                return (g_acc, l_acc + ce_i, a_acc + a, n_acc + n), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+            (grads, ce_sum, aux_sum, ntok), _ = jax.lax.scan(
+                body,
+                (g0, jnp.zeros((), F32), jnp.zeros((), F32), jnp.zeros((), F32)),
+                mbs,
+            )
+            inv = 1.0 / num_microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            ce, aux = ce_sum * inv, aux_sum * inv
+            loss = ce
+
+        gnorm = opt.global_norm(grads)
+        lr_scale = schedule(state.opt.step)
+        master, new_opt = opt.adamw_update(grads, state.opt, opt_cfg, lr_scale)
+        new_params = jax.tree.map(
+            lambda m, p: m.astype(p.dtype), master, params
+        )
+        new_state = TrainState(params=new_params, opt=new_opt, rng=state.rng)
+        return new_state, StepMetrics(
+            loss=loss, aux_loss=aux, grad_norm=gnorm,
+            tokens=jnp.asarray(ntok, F32),
+        )
+
+    return train_step
+
+
+def init_train_state(model, cfg: ModelConfig, seed: int = 0) -> TrainState:
+    from repro.models import params as P
+
+    key = jax.random.PRNGKey(seed)
+    params = P.init_params(model.specs(), key, jnp.dtype(cfg.param_dtype))
+    return TrainState(
+        params=params, opt=opt.adamw_init(params), rng=jax.random.PRNGKey(seed + 1)
+    )

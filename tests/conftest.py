@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Tests run on the single real CPU device (the dry-run sets its own flags
+# in a separate process). Keep threads bounded for the 1-core container.
+os.environ.setdefault("XLA_FLAGS", "--xla_cpu_multi_thread_eigen=false")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,66 @@
+"""Batch memory prediction (paper §8) — unit + property tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ndv.batch_memory import expected_batch_dictionary, predict_batch_memory
+from repro.core.ndv.types import Layout
+
+
+def test_eq16_against_simulation():
+    rng = np.random.default_rng(0)
+    ndv, mean_len = 1000, 8.0
+    batch_bytes = 16384
+    rows_per_batch = int(batch_bytes / mean_len)
+    sims = []
+    for _ in range(200):
+        draw = rng.integers(0, ndv, rows_per_batch)
+        sims.append(np.unique(draw).size * mean_len)
+    pred = float(expected_batch_dictionary(
+        jnp.float32(batch_bytes), jnp.float32(ndv * mean_len)
+    ))
+    assert abs(np.mean(sims) - pred) / pred < 0.02
+
+
+@given(
+    ndv=st.floats(1, 1e7),
+    mean_len=st.floats(1, 128),
+    rows=st.floats(1e3, 1e9),
+    batch_mb=st.floats(0.1, 512),
+)
+@settings(max_examples=60, deadline=None)
+def test_properties(ndv, mean_len, rows, batch_mb):
+    batch = batch_mb * 1e6
+    out = predict_batch_memory(
+        jnp.asarray([ndv], jnp.float32),
+        jnp.asarray([mean_len], jnp.float32),
+        jnp.asarray([rows], jnp.float32),
+        float(batch),
+    )
+    d_global = float(out.d_global[0])
+    d_batch = float(out.d_batch[0])
+    # 0 <= D_batch <= min(D_global, B)
+    assert -1e-3 <= d_batch <= min(d_global, batch) * (1 + 1e-4) + 1e-3
+    # totals: n_batches * d_batch
+    assert abs(float(out.d_total[0]) - float(out.n_batches[0]) * d_batch) < 1e-2 * max(float(out.d_total[0]), 1)
+
+
+def test_sorted_uses_conservative_bound():
+    out = predict_batch_memory(
+        jnp.asarray([1e6], jnp.float32),
+        jnp.asarray([8.0], jnp.float32),
+        jnp.asarray([1e8], jnp.float32),
+        1e6,
+        layout=jnp.asarray([int(Layout.SORTED)], jnp.int32),
+    )
+    # conservative: min(D_global, B) = 1e6 (B), not the Eq16 expectation
+    assert abs(float(out.d_batch[0]) - 1e6) < 1.0
+
+
+def test_batch_monotone_in_batch_size():
+    sizes = [1e4, 1e5, 1e6, 1e7]
+    preds = [
+        float(expected_batch_dictionary(jnp.float32(b), jnp.float32(8e6)))
+        for b in sizes
+    ]
+    assert all(b > a for a, b in zip(preds, preds[1:]))

@@ -1,0 +1,91 @@
+"""Unit tests for dictionary size inversion (paper §4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ndv import dict_inversion as di
+
+
+def forward_size(ndv, rows, nulls, mean_len):
+    bits = max(np.ceil(np.log2(max(ndv, 1)) - 1e-9), 1)
+    return ndv * mean_len + (rows - nulls) * bits / 8.0
+
+
+def test_exact_recovery_simple():
+    ndv, rows, nulls, ln = 1000.0, 100000.0, 0.0, 8.0
+    s = forward_size(ndv, rows, nulls, ln)
+    res = di.invert_dict_size(
+        jnp.array([s]), jnp.array([rows]), jnp.array([nulls]), jnp.array([ln])
+    )
+    assert abs(float(res.ndv[0]) - ndv) / ndv < 1e-3
+    assert not bool(res.likely_fallback[0])
+
+
+def test_convergence_iterations_reasonable():
+    """Paper: 5-10 iterations to 1e-6 typically."""
+    rng = np.random.default_rng(0)
+    ndv = rng.integers(2, 1_000_000, 256).astype(np.float64)
+    rows = ndv * rng.uniform(2, 50, 256)
+    ln = rng.uniform(1, 64, 256)
+    s = np.array([forward_size(n, r, 0, l) for n, r, l in zip(ndv, rows, ln)])
+    res = di.invert_dict_size(
+        jnp.asarray(s, jnp.float32), jnp.asarray(rows, jnp.float32),
+        jnp.zeros(256, jnp.float32), jnp.asarray(ln, jnp.float32),
+    )
+    med_iters = float(np.median(np.asarray(res.iterations)))
+    assert med_iters <= 12, med_iters
+    err = np.abs(np.asarray(res.ndv) - ndv) / ndv
+    assert np.median(err) < 0.01
+
+
+@given(
+    ndv=st.integers(2, 10**7),
+    mult=st.floats(1.5, 1000.0),
+    mean_len=st.floats(1.0, 256.0),
+    null_frac=st.floats(0.0, 0.5),
+)
+@settings(max_examples=60, deadline=None)
+def test_inversion_property(ndv, mult, mean_len, null_frac):
+    """Round-trip: forward Eq 1 then invert recovers ndv within a few %."""
+    rows = float(np.ceil(ndv * mult))
+    # realistic metadata: can't have fewer non-null rows than distincts
+    nulls = min(float(np.floor(rows * null_frac)), rows - float(ndv))
+    s = forward_size(ndv, rows, nulls, mean_len)
+    res = di.invert_dict_size(
+        jnp.array([s], jnp.float32), jnp.array([rows], jnp.float32),
+        jnp.array([nulls], jnp.float32), jnp.array([mean_len], jnp.float32),
+    )
+    got = float(res.ndv[0])
+    assert got >= 1.0
+    assert abs(got - ndv) / ndv < 0.05
+
+
+def test_fallback_detection():
+    """Plain-encoded chunk: S ~ rows*len -> Eq 5 fires."""
+    rows, ln = 100000.0, 8.0
+    s = rows * ln
+    res = di.invert_dict_size(
+        jnp.array([s]), jnp.array([rows]), jnp.array([0.0]), jnp.array([ln])
+    )
+    assert bool(res.likely_fallback[0])
+
+
+def test_no_false_fallback_low_ndv():
+    s = forward_size(100, 100000, 0, 8.0)
+    res = di.invert_dict_size(
+        jnp.array([s]), jnp.array([100000.0]), jnp.array([0.0]), jnp.array([8.0])
+    )
+    assert not bool(res.likely_fallback[0])
+
+
+def test_monotonic_in_size():
+    """Bigger S (same rows/len) must never decrease estimated ndv."""
+    rows, ln = 50000.0, 10.0
+    sizes = [forward_size(n, rows, 0, ln) for n in (10, 100, 1000, 10000)]
+    res = di.invert_dict_size(
+        jnp.asarray(sizes, jnp.float32), jnp.full(4, rows, jnp.float32),
+        jnp.zeros(4, jnp.float32), jnp.full(4, ln, jnp.float32),
+    )
+    vals = np.asarray(res.ndv)
+    assert np.all(np.diff(vals) > 0)

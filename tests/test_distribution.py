@@ -1,0 +1,65 @@
+"""Distribution detector tests (paper §6)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ndv import distribution as dd
+from repro.core.ndv.types import Layout
+
+
+def _metrics(mins, maxs):
+    mins = jnp.asarray([mins], jnp.float32)
+    maxs = jnp.asarray([maxs], jnp.float32)
+    valid = jnp.ones_like(mins, bool)
+    return dd.detect_distribution(mins, maxs, valid)
+
+
+def test_sorted_layout():
+    mins = np.arange(0, 100, 10.0)
+    maxs = mins + 9.0
+    m = _metrics(mins, maxs)
+    assert Layout(int(m.layout[0])) == Layout.SORTED
+    assert float(m.overlap_ratio[0]) < 0.1
+    assert float(m.monotonicity[0]) > 0.9
+
+
+def test_well_spread_layout():
+    mins = np.full(10, 0.0) + np.random.default_rng(0).uniform(0, 1, 10)
+    maxs = np.full(10, 100.0) - np.random.default_rng(1).uniform(0, 1, 10)
+    m = _metrics(mins, maxs)
+    assert Layout(int(m.layout[0])) == Layout.WELL_SPREAD
+    assert float(m.overlap_ratio[0]) > 0.7
+
+
+def test_pseudo_sorted_layout():
+    # drifting ranges with moderate overlap
+    mins = np.arange(0, 100, 10.0)
+    maxs = mins + 12.0
+    m = _metrics(mins, maxs)
+    assert Layout(int(m.layout[0])) in (Layout.PSEUDO_SORTED, Layout.SORTED)
+
+
+def test_mixed_layout():
+    rng = np.random.default_rng(2)
+    mins = rng.uniform(0, 50, 12)
+    maxs = mins + rng.uniform(5, 15, 12)
+    m = _metrics(mins, maxs)
+    # shuffled medium ranges: not sorted, not fully overlapping
+    assert Layout(int(m.layout[0])) in (Layout.MIXED, Layout.PSEUDO_SORTED)
+
+
+def test_single_group_defaults_well_spread():
+    m = _metrics([5.0], [10.0])
+    assert Layout(int(m.layout[0])) == Layout.WELL_SPREAD
+
+
+def test_constant_column():
+    m = _metrics([7.0] * 8, [7.0] * 8)
+    assert Layout(int(m.layout[0])) == Layout.WELL_SPREAD
+
+
+def test_masking_ignores_padding():
+    mins = jnp.asarray([[0, 10, 20, 99, 99]], jnp.float32)
+    maxs = jnp.asarray([[9, 19, 29, 0, 0]], jnp.float32)
+    valid = jnp.asarray([[True, True, True, False, False]])
+    m = dd.detect_distribution(mins, maxs, valid)
+    assert Layout(int(m.layout[0])) == Layout.SORTED

@@ -1,0 +1,120 @@
+"""End-to-end estimator tests against ground truth (paper §10 claims)."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.columnar import (
+    column_metadata_from_footer,
+    read_footer,
+    write_file,
+)
+from repro.columnar.generator import (
+    int_domain,
+    partitioned_column,
+    sorted_column,
+    string_domain,
+    uniform_column,
+    zipf_column,
+)
+from repro.columnar.writer import WriterOptions
+from repro.core import Layout, estimate_columns
+
+ROWS = 1 << 16
+RG = 4096
+
+
+def _estimate(tmp_path, cols, mode="paper"):
+    write_file(str(tmp_path / "f"), cols, options=WriterOptions(row_group_size=RG))
+    footer = read_footer(str(tmp_path / "f"))
+    metas = [column_metadata_from_footer(footer, n) for n in footer.column_names]
+    return {e.column_name: e for e in estimate_columns(metas, mode=mode)}
+
+
+def test_well_spread_under_10pct(tmp_path):
+    """Paper §10.1: errors typically below 10% for well-spread columns.
+
+    Paper mode needs rows-per-group >> ndv (chunk dictionaries then cover
+    the domain: the regime the paper's production data was in). The
+    coverage-limited regime is characterized in benchmarks/accuracy.py,
+    where the improved mode repairs it.
+    """
+    dom = int_domain(1000, seed=1)
+    vals, truth = uniform_column(dom, ROWS, seed=2)
+    # uniform-length strings: representative extrema lengths (Eq 4's
+    # assumption; the heavy-tailed case is characterized in benchmarks)
+    sdom = string_domain(500, seed=3, dist="uniform")
+    svals, struth = zipf_column(sdom, ROWS, seed=4)
+    for mode in ("paper", "improved"):
+        est = _estimate(tmp_path, {"u": vals, "z": svals}, mode=mode)
+        assert abs(est["u"].ndv - truth) / truth < 0.10, (mode, est["u"])
+        assert abs(est["z"].ndv - struth) / struth < 0.10, (mode, est["z"])
+    # the improved coverage correction is accurate even at ratio ~2
+    dom2 = int_domain(2000, seed=5)
+    vals2, truth2 = uniform_column(dom2, ROWS, seed=6)
+    est2 = _estimate(tmp_path, {"u": vals2}, mode="improved")["u"]
+    assert abs(est2.ndv - truth2) / truth2 < 0.05, est2
+
+
+def test_sorted_underestimation_and_repair(tmp_path):
+    """Paper Table 1: dict inversion underestimates sorted data; the
+    improved layout-aware aggregation repairs it."""
+    dom = int_domain(3000, seed=5)
+    vals, truth = sorted_column(dom, ROWS, seed=6)
+    paper = _estimate(tmp_path, {"s": vals}, mode="paper")["s"]
+    improved = _estimate(tmp_path, {"s": vals}, mode="improved")["s"]
+    assert paper.layout == Layout.SORTED
+    # dictionary inversion alone underestimates on sorted layouts
+    assert paper.ndv_dict < 0.5 * truth
+    # improved disjoint-sum aggregation is tight
+    assert abs(improved.ndv - truth) / truth < 0.05, improved
+
+
+def test_partitioned_improved(tmp_path):
+    dom = int_domain(3000, seed=7)
+    vals, truth = partitioned_column(dom, ROWS, partitions=16, seed=8)
+    improved = _estimate(tmp_path, {"p": vals}, mode="improved")["p"]
+    assert abs(improved.ndv - truth) / truth < 0.15, improved
+
+
+def test_final_never_exceeds_rows(tmp_path):
+    dom = int_domain(50, seed=9)
+    vals, truth = uniform_column(dom, 256, seed=10)
+    est = _estimate(tmp_path, {"t": vals})["t"]
+    assert est.ndv <= 256
+
+
+def test_unique_column_flags_lower_bound(tmp_path):
+    """All-distinct int64 column: dictionary page overflows the 1MiB limit
+    -> plain fallback -> estimate marked as a lower bound (Eq 5)."""
+    vals = (np.random.default_rng(0).permutation(1 << 18) * 3 + 7).astype(np.int64)
+    write_file(
+        str(tmp_path / "u"), {"ids": vals},
+        options=WriterOptions(row_group_size=1 << 18),
+    )
+    footer = read_footer(str(tmp_path / "u"))
+    meta = column_metadata_from_footer(footer, "ids")
+    est = estimate_columns([meta])[0]
+    assert est.is_lower_bound
+
+
+def test_range_bound_integer(tmp_path):
+    """Eq 14: dense integer range caps the estimate."""
+    vals = np.random.default_rng(1).integers(0, 100, ROWS).astype(np.int64)
+    est = _estimate(tmp_path, {"r": vals})["r"]
+    assert est.ndv <= 100.0 + 1
+
+
+def test_nulls_respected(tmp_path):
+    dom = int_domain(500, seed=11)
+    vals, truth = uniform_column(dom, ROWS, seed=12)
+    mask = np.random.default_rng(2).uniform(size=ROWS) < 0.3
+    write_file(
+        str(tmp_path / "n"), {"c": vals}, null_masks={"c": mask},
+        options=WriterOptions(row_group_size=RG),
+    )
+    footer = read_footer(str(tmp_path / "n"))
+    meta = column_metadata_from_footer(footer, "c")
+    assert meta.null_count == int(mask.sum())
+    est = estimate_columns([meta])[0]
+    assert abs(est.ndv - truth) / truth < 0.15

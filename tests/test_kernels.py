@@ -1,0 +1,88 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize("m", [1, 7, 128, 1000, 8192, 10000])
+@pytest.mark.parametrize("len_scale", [1.0, 32.0])
+def test_dict_newton_sweep(m, len_scale):
+    ndv = RNG.integers(1, 1_000_000, m).astype(np.float64)
+    rows = ndv * RNG.uniform(1.5, 80, m)
+    nulls = (rows * RNG.uniform(0, 0.2, m))
+    mean_len = RNG.uniform(1, 8, m) * len_scale
+    bits = np.maximum(np.ceil(np.log2(np.maximum(ndv, 1)) - 1e-9), 1)
+    S = ndv * mean_len + (rows - nulls) * bits / 8
+
+    args = [jnp.asarray(a, jnp.float32) for a in (S, rows, nulls, mean_len)]
+    k = np.asarray(ops.dict_newton(*args))
+    r = np.asarray(ops.dict_newton(*args, backend="ref"))
+    np.testing.assert_allclose(k, r, rtol=1e-4)
+    rel = np.abs(k - ndv) / ndv
+    assert np.quantile(rel, 0.99) < 0.02
+
+
+@pytest.mark.parametrize("m", [1, 65, 4096])
+def test_coupon_newton_sweep(m):
+    n = RNG.integers(2, 4096, m).astype(np.float32)
+    D = RNG.uniform(1, 1e6, m).astype(np.float32)
+    obs = D * (1 - np.exp(-n / D))
+    k = np.asarray(ops.coupon_newton(jnp.asarray(obs), jnp.asarray(n)))
+    r = np.asarray(ops.coupon_newton(jnp.asarray(obs), jnp.asarray(n), backend="ref"))
+    np.testing.assert_allclose(k, r, rtol=1e-3)
+
+
+@pytest.mark.parametrize("b,r", [(1, 2), (3, 17), (32, 250), (65, 513)])
+def test_minmax_scan_sweep(b, r):
+    mins = RNG.normal(size=(b, r)).astype(np.float32)
+    maxs = mins + np.abs(RNG.normal(size=(b, r))).astype(np.float32)
+    valid = RNG.uniform(size=(b, r)) < 0.85
+    k = ops.minmax_scan(jnp.asarray(mins), jnp.asarray(maxs), jnp.asarray(valid))
+    o = ops.minmax_scan(
+        jnp.asarray(mins), jnp.asarray(maxs), jnp.asarray(valid), backend="ref"
+    )
+    for f in ("overlap_sum", "gmin", "gmax", "sign_changes", "n_valid", "shared_bounds"):
+        np.testing.assert_allclose(
+            np.asarray(getattr(k, f)), np.asarray(getattr(o, f)),
+            rtol=1e-5, atol=1e-5, err_msg=f,
+        )
+
+
+@pytest.mark.parametrize("b,r,p", [(2, 64, 6), (8, 128, 8), (17, 300, 8), (4, 1024, 10)])
+def test_hll_fold_sweep(b, r, p):
+    keys = RNG.integers(0, 2**32, size=(b, r), dtype=np.uint32)
+    valid = RNG.uniform(size=(b, r)) < 0.9
+    k = np.asarray(ops.hll_fold(jnp.asarray(keys), jnp.asarray(valid), p=p))
+    o = np.asarray(ops.hll_fold(jnp.asarray(keys), jnp.asarray(valid), p=p, backend="ref"))
+    assert np.array_equal(k, o)
+
+
+def test_hll_count_accuracy():
+    b, r = 16, 2048
+    keys = RNG.integers(0, 2**32, size=(b, r), dtype=np.uint32)
+    valid = np.ones((b, r), bool)
+    regs = ops.hll_fold(jnp.asarray(keys), jnp.asarray(valid), p=10)
+    est = np.asarray(ops.hll_count(regs))
+    true = np.array([len(np.unique(keys[i])) for i in range(b)])
+    rel = np.abs(est - true) / true
+    # sigma ~ 1.04/sqrt(1024) ~ 3.3%; allow 4 sigma
+    assert np.max(rel) < 0.14, rel
+
+
+def test_estimator_matches_kernel_path():
+    """core dict inversion == kernel dict_newton on the same metadata."""
+    from repro.core.ndv import dict_inversion
+
+    ndv = RNG.integers(2, 100000, 512).astype(np.float64)
+    rows = ndv * RNG.uniform(2, 40, 512)
+    ln = RNG.uniform(2, 30, 512)
+    bits = np.maximum(np.ceil(np.log2(ndv) - 1e-9), 1)
+    S = ndv * ln + rows * bits / 8
+    a = [jnp.asarray(x, jnp.float32) for x in (S, rows, np.zeros(512), ln)]
+    core = np.asarray(dict_inversion.invert_dict_size(*a).ndv)
+    kern = np.asarray(ops.dict_newton(*a))
+    np.testing.assert_allclose(core, kern, rtol=5e-3)

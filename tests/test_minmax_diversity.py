@@ -1,0 +1,63 @@
+"""Unit + property tests for coupon-collector inversion (paper §5)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ndv import minmax_diversity as mm
+
+
+def test_forward_model_matches_simulation():
+    """Eq 6 against Monte-Carlo draws."""
+    rng = np.random.default_rng(0)
+    N, k = 500, 300
+    sims = [
+        np.unique(rng.integers(0, N, k)).size for _ in range(300)
+    ]
+    expected = float(mm.coupon_expected(jnp.float32(N), jnp.float32(k)))
+    assert abs(np.mean(sims) - expected) / expected < 0.02
+
+
+def test_exact_inversion_unsaturated():
+    n = jnp.full((64,), 256.0)
+    true_ndv = jnp.asarray(np.geomspace(4, 5000, 64), jnp.float32)
+    m = mm.coupon_expected(true_ndv, n)
+    res = mm.invert_coupon(m, n)
+    err = np.abs(np.asarray(res.ndv) - np.asarray(true_ndv)) / np.asarray(true_ndv)
+    # near-saturation (m ~ n) is ill-conditioned; check the well-posed region
+    ok = np.asarray(m) < 0.95 * np.asarray(n)
+    assert np.max(err[ok]) < 0.02, err[ok].max()
+
+
+def test_saturated_flagged():
+    res = mm.invert_coupon(jnp.array([50.0]), jnp.array([50.0]))
+    assert bool(res.saturated[0])
+    assert float(res.ndv[0]) >= 50.0
+
+
+@given(
+    ndv=st.integers(2, 10**6),
+    n=st.integers(4, 4096),
+)
+@settings(max_examples=60, deadline=None)
+def test_inversion_property(ndv, n):
+    m = float(mm.coupon_expected(jnp.float32(ndv), jnp.float32(n)))
+    res = mm.invert_coupon(jnp.array([m], jnp.float32), jnp.array([float(n)], jnp.float32))
+    got = float(res.ndv[0])
+    assert got >= 1.0
+    if m < 0.9 * n:  # well-conditioned regime
+        assert abs(got - ndv) / ndv < 0.1
+
+
+def test_minmax_takes_larger_side():
+    res = mm.estimate_minmax_diversity(
+        jnp.array([10.0]), jnp.array([40.0]), jnp.array([64.0])
+    )
+    assert float(res.ndv[0]) == float(res.ndv_from_max[0])
+    assert float(res.ndv_from_max[0]) > float(res.ndv_from_min[0])
+
+
+def test_monotonic_in_m():
+    n = jnp.full(5, 128.0)
+    m = jnp.asarray([10.0, 30.0, 60.0, 90.0, 110.0])
+    res = mm.invert_coupon(m, n)
+    assert np.all(np.diff(np.asarray(res.ndv)) > 0)

@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests (reduced configs, one forward + train step)
+and decode-vs-forward consistency for every family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import params as P
+from repro.models import registry
+from repro.models.config import MoEConfig
+from repro.train import optimizer as opt
+from repro.train.train_step import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32):
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab_size)
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.ones((b, 16, cfg.encdec.frontend_dim), jnp.float32)
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.ones(
+            (b, cfg.vlm.num_patches, cfg.vlm.vision_dim), jnp.float32
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_forward(arch):
+    cfg = registry.get_smoke_config(arch).scaled(dtype="float32", param_dtype="float32")
+    model = registry.build_model(cfg)
+    prm = P.init_params(model.specs(), KEY, jnp.float32)
+    batch = _batch(cfg)
+    out = model.forward(prm, batch)
+    assert out.logits.shape == (2, 32, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(out.logits)))
+
+
+@pytest.mark.parametrize("arch", registry.ARCHS)
+def test_smoke_train_step(arch):
+    cfg = registry.get_smoke_config(arch).scaled(dtype="float32", param_dtype="float32")
+    model = registry.build_model(cfg)
+    step = jax.jit(make_train_step(
+        model, cfg, opt.AdamWConfig(lr=1e-3), schedule=lambda s: jnp.float32(1.0)
+    ))
+    state = init_train_state(model, cfg)
+    batch = _batch(cfg)
+    batch["labels"] = batch["tokens"]
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics.loss))
+    assert float(metrics.grad_norm) > 0
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2_7b", "qwen3_0_6b", "yi_6b", "deepseek_coder_33b",
+             "rwkv6_7b", "zamba2_1_2b", "llava_next_mistral_7b"]
+)
+def test_decode_matches_forward(arch):
+    cfg = registry.get_smoke_config(arch).scaled(dtype="float32", param_dtype="float32")
+    model = registry.build_model(cfg)
+    prm = P.init_params(model.specs(), KEY, jnp.float32)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    full = model.forward(prm, {"tokens": toks}).logits
+    sp = model.cache_spec(b, s)
+    cache = {
+        k: jnp.zeros(v.shape, jnp.int32 if "index" in k else jnp.float32)
+        for k, v in sp.items()
+    }
+    outs = []
+    for t in range(s):
+        o = model.decode_step(
+            prm, toks[:, t:t + 1], jnp.full((b, 1), t, jnp.int32), cache
+        )
+        cache = o.cache
+        outs.append(o.logits[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4)
+
+
+def test_moe_decode_matches_forward_high_capacity():
+    cfg = registry.get_smoke_config("mixtral_8x22b").scaled(
+        dtype="float32", param_dtype="float32",
+        moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=16.0),
+    )
+    model = registry.build_model(cfg)
+    prm = P.init_params(model.specs(), KEY, jnp.float32)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, cfg.vocab_size)
+    full = model.forward(prm, {"tokens": toks}).logits
+    cache = {
+        k: jnp.zeros(v.shape, jnp.int32 if "index" in k else jnp.float32)
+        for k, v in model.cache_spec(b, s).items()
+    }
+    outs = []
+    for t in range(s):
+        o = model.decode_step(prm, toks[:, t:t+1], jnp.full((b, 1), t, jnp.int32), cache)
+        cache = o.cache
+        outs.append(o.logits[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1)), np.asarray(full), atol=2e-4
+    )
+
+
+def test_swa_ring_buffer_wrap():
+    cfg = registry.get_smoke_config("mixtral_8x22b").scaled(
+        dtype="float32", param_dtype="float32", sliding_window=8,
+        moe=MoEConfig(num_experts=4, top_k=2, capacity_factor=16.0),
+    )
+    model = registry.build_model(cfg)
+    prm = P.init_params(model.specs(), KEY, jnp.float32)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab_size)
+    full = model.forward(prm, {"tokens": toks}).logits
+    cache = {
+        k: jnp.zeros(v.shape, jnp.int32 if "index" in k else jnp.float32)
+        for k, v in model.cache_spec(b, s).items()
+    }
+    assert cache["k"].shape[2] == 8  # ring buffer sized to the window
+    outs = []
+    for t in range(s):
+        o = model.decode_step(prm, toks[:, t:t+1], jnp.full((b, 1), t, jnp.int32), cache)
+        cache = o.cache
+        outs.append(o.logits[:, 0])
+    np.testing.assert_allclose(
+        np.asarray(jnp.stack(outs, 1)), np.asarray(full), atol=2e-4
+    )
+
+
+def test_blockwise_attention_equals_dense():
+    import repro.models.layers as L
+
+    cfg = registry.get_smoke_config("qwen2_7b").scaled(dtype="float32", param_dtype="float32")
+    model = registry.build_model(cfg)
+    prm = P.init_params(model.specs(), KEY, jnp.float32)
+    toks = jax.random.randint(jax.random.PRNGKey(4), (2, 64), 0, cfg.vocab_size)
+    dense = model.forward(prm, {"tokens": toks}).logits
+    old = (L.BLOCKWISE_MIN_SEQ, L.Q_CHUNK, L.KV_CHUNK)
+    try:
+        L.BLOCKWISE_MIN_SEQ, L.Q_CHUNK, L.KV_CHUNK = 32, 16, 16
+        blk = model.forward(prm, {"tokens": toks}).logits
+    finally:
+        L.BLOCKWISE_MIN_SEQ, L.Q_CHUNK, L.KV_CHUNK = old
+    np.testing.assert_allclose(np.asarray(blk), np.asarray(dense), atol=2e-4)
+
+
+def test_param_count_analytic_close_to_specs():
+    """ModelConfig.param_count() (used for 6ND roofline) tracks real specs."""
+    from repro.models.params import param_count
+
+    for arch in registry.ARCHS:
+        cfg = registry.get_config(arch)
+        model = registry.build_model(cfg)
+        spec_n = param_count(model.specs())
+        analytic = cfg.param_count()
+        ratio = spec_n / analytic
+        assert 0.8 < ratio < 1.25, (arch, spec_n, analytic, ratio)

@@ -1,0 +1,43 @@
+"""Schema constraints (§7.3) + multi-file dataset estimation."""
+import numpy as np
+
+from repro.columnar import (
+    column_metadata_from_footer,
+    dataset_column_metadata,
+    read_footer,
+    write_dataset,
+    write_file,
+)
+from repro.columnar.generator import int_domain, uniform_column
+from repro.columnar.writer import WriterOptions
+from repro.core import estimate_columns
+
+
+def test_fk_schema_bound_caps_estimate(tmp_path):
+    """FK column: ndv <= row_count(referenced table) (Eq in §7.3)."""
+    dom = int_domain(5000, seed=1)
+    vals, truth = uniform_column(dom, 1 << 15, seed=2)
+    write_file(str(tmp_path / "f"), {"fk": vals},
+               options=WriterOptions(row_group_size=2048))
+    meta = column_metadata_from_footer(read_footer(str(tmp_path / "f")), "fk")
+    unbounded = estimate_columns([meta])[0]
+    bounded = estimate_columns([meta], schema_bounds=[100.0])[0]
+    assert bounded.ndv <= 100.0
+    assert unbounded.ndv > 100.0
+
+
+def test_multi_file_dataset_metadata(tmp_path):
+    dom = int_domain(800, seed=3)
+    shards = []
+    for i in range(3):
+        vals, _ = uniform_column(dom, 1 << 14, seed=4 + i)
+        shards.append({"c": vals})
+    write_dataset(str(tmp_path), shards,
+                  options=WriterOptions(row_group_size=2048))
+    metas = dataset_column_metadata(str(tmp_path), "c")
+    assert len(metas) == 3
+    # estimating per file then combining conservatively: max is a lower
+    # bound of global ndv; each file alone should already be close
+    ests = estimate_columns(metas, mode="improved")
+    for e in ests:
+        assert abs(e.ndv - 800) / 800 < 0.1, e

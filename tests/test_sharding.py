@@ -1,0 +1,105 @@
+"""Sharding rules, writer round-trips, columnar invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.columnar import read_footer, write_file
+from repro.columnar.reader import DataReader, column_metadata_from_footer
+from repro.columnar.writer import WriterOptions, _ceil_log2
+
+
+# --- columnar writer invariants ---------------------------------------------
+
+
+@given(
+    rows=st.integers(10, 3000),
+    ndv=st.integers(1, 500),
+    rg=st.sampled_from([64, 256, 1024]),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=25, deadline=None)
+def test_writer_metadata_invariants(tmp_path_factory, rows, ndv, rg, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, ndv, rows).astype(np.int64)
+    d = tmp_path_factory.mktemp("wf")
+    write_file(str(d / "f"), {"c": vals}, options=WriterOptions(row_group_size=rg))
+    footer = read_footer(str(d / "f"))
+    meta = column_metadata_from_footer(footer, "c")
+
+    # row counts partition the file
+    assert int(meta.chunk_rows.sum()) == rows
+    # stats bracket the data per chunk
+    reader = DataReader(str(d / "f"))
+    for i in range(footer.num_row_groups):
+        chunk = reader.read_row_group("c", i)
+        assert meta.mins[i] == chunk.min()
+        assert meta.maxs[i] == chunk.max()
+        # Eq 1 exactness for dictionary-encoded chunks
+        cm = footer.row_groups[i].columns["c"]
+        if cm.dictionary_encoded:
+            local = np.unique(chunk).size
+            bits = _ceil_log2(local)
+            expect = local * 8 + int(np.ceil(len(chunk) * bits / 8))
+            assert cm.total_uncompressed_size == expect
+    # distinct min/max counts match exact recomputation
+    assert meta.distinct_min_count == np.unique(meta.mins).size
+    assert meta.distinct_max_count == np.unique(meta.maxs).size
+
+
+def test_estimate_never_exceeds_non_null(tmp_path):
+    """Hybrid invariant (Eq 13): ndv <= N - nulls, any input."""
+    rng = np.random.default_rng(1)
+    vals = rng.integers(0, 50, 500).astype(np.int64)
+    mask = rng.uniform(size=500) < 0.5
+    write_file(str(tmp_path / "f"), {"c": vals}, null_masks={"c": mask},
+               options=WriterOptions(row_group_size=100))
+    from repro.core import estimate_columns
+
+    meta = column_metadata_from_footer(read_footer(str(tmp_path / "f")), "c")
+    for mode in ("paper", "improved"):
+        est = estimate_columns([meta], mode=mode)[0]
+        assert est.ndv <= meta.non_null + 1e-6
+
+
+# --- sharding rule resolution -------------------------------------------------
+
+
+def test_checked_sharding_drops_indivisible_and_dupes():
+    import jax
+    from repro.parallel.sharding import checked_sharding
+
+    if jax.device_count() < 1:
+        pytest.skip("no devices")
+    # single-device mesh: every axis has size 1 -> all dropped
+    mesh = jax.make_mesh((1,), ("model",))
+    s = checked_sharding(mesh, (40, 512), ("experts", "ff"))
+    assert all(a is None for a in s.spec)
+
+
+def test_rules_for_seq_parallel_selection():
+    import jax
+    from repro.configs.shapes import get_shape
+    from repro.launch.cells import rules_for
+    from repro.models import registry
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+
+        class devices:
+            shape = (16, 16)
+
+    shape = get_shape("train_4k")
+    r_qwen = rules_for(registry.get_config("qwen2_7b"), FakeMesh, shape)
+    assert r_qwen["heads"] is None and r_qwen["seq_model"] == "model"
+    r_seam = rules_for(registry.get_config("seamless_m4t_large_v2"), FakeMesh, shape)
+    assert r_seam["heads"] == "model" and r_seam["seq_model"] is None
+    r_mix = rules_for(registry.get_config("mixtral_8x22b"), FakeMesh, shape)
+    assert r_mix["moe_seq"] is None  # big experts -> TP-gathered buffers
+    r_gran = rules_for(registry.get_config("granite_moe_3b_a800m"), FakeMesh, shape)
+    assert r_gran["ff"] is None      # small experts -> replicate over model
+
+    dec = get_shape("decode_32k")
+    r_dec = rules_for(registry.get_config("qwen2_7b"), FakeMesh, dec)
+    assert r_dec["seq_sharded"] == ("model",)
