@@ -1,0 +1,138 @@
+"""Catalog-scale behavior: cold vs warm vs incremental estimation latency,
+and jit retrace counts under shape bucketing.
+
+What a fleet cares about (ROADMAP north star) is not one estimate call but
+the steady state: footers arrive continuously, most estimate() calls hit a
+warm catalog, and the jit cache must not grow with the number of distinct
+dataset shapes. Four measurements:
+
+  catalog/cold         first estimate(): footer scan + merge + pack + trace
+  catalog/warm         same fingerprint set: pure cache hit (no pack/trace)
+  catalog/incremental  one new shard arrives: update() re-reads ONLY the new
+                       footer and re-merges incrementally, then estimates
+  catalog/retraces     estimate_batch traces consumed by R=1..MAX_R datasets
+                       through the bucketing packer vs the naive one-shape-
+                       per-dataset count
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from repro.catalog import BatchPacker, StatsCatalog
+from repro.core.ndv.estimator import estimate_batch
+from repro.core.ndv.types import ColumnMetadata, PhysicalType
+from repro.data.pipeline import synthesize_token_dataset
+
+NUM_SHARDS = 6
+ROWS_PER_SHARD = 1 << 12
+ROW_GROUP = 512
+MAX_R = 12
+
+
+def _write_shard(root: str, index: int) -> None:
+    """Append one shard with the same schema synthesize_token_dataset uses."""
+    from repro.columnar.generator import int_domain, zipf_column  # noqa: F401
+    from repro.columnar.writer import WriterOptions, write_file
+
+    dom = np.arange(2048, dtype=np.int64)
+    toks, _ = zipf_column(dom, ROWS_PER_SHARD, s=1.1, seed=index)
+    doc_id = np.repeat(
+        np.arange(ROWS_PER_SHARD // ROW_GROUP + 1), ROW_GROUP
+    )[:ROWS_PER_SHARD]
+    write_file(
+        os.path.join(root, f"shard_{index:05d}"),
+        {"tokens": toks, "doc_id": doc_id.astype(np.int64)},
+        options=WriterOptions(row_group_size=ROW_GROUP),
+    )
+
+
+def _synthetic_column(r: int, seed: int) -> ColumnMetadata:
+    """Metadata-only synthetic column with r row groups (no file IO)."""
+    rng = np.random.default_rng(seed)
+    rows = np.full(r, 1000.0)
+    mins = np.sort(rng.integers(0, 1 << 16, r).astype(np.float64))
+    maxs = mins + rng.integers(100, 5000, r).astype(np.float64)
+    return ColumnMetadata(
+        chunk_sizes=rng.uniform(2_000.0, 9_000.0, r),
+        chunk_rows=rows,
+        chunk_nulls=np.zeros(r),
+        chunk_dict_encoded=np.ones(r, bool),
+        mins=mins,
+        maxs=maxs,
+        min_lengths=np.full(r, 8.0),
+        max_lengths=np.full(r, 8.0),
+        distinct_min_count=float(np.unique(mins).size),
+        distinct_max_count=float(np.unique(maxs).size),
+        physical_type=PhysicalType.INT64,
+        column_name=f"synthetic_{seed}",
+    )
+
+
+def run() -> List[tuple]:
+    rows: List[tuple] = []
+    root = tempfile.mkdtemp()
+    synthesize_token_dataset(
+        root,
+        vocab_size=2048,
+        num_shards=NUM_SHARDS,
+        rows_per_shard=ROWS_PER_SHARD,
+        row_group_size=ROW_GROUP,
+    )
+
+    catalog = StatsCatalog(root)
+    t0 = time.perf_counter()
+    cold = catalog.estimate(mode="improved")
+    cold_us = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        "catalog/cold", cold_us,
+        f"files={catalog.num_files};cols={len(cold)};"
+        f"footers_read={catalog.stats.footers_read};packs={catalog.stats.packs}",
+    ))
+
+    t0 = time.perf_counter()
+    warm = catalog.estimate(mode="improved")
+    warm_us = (time.perf_counter() - t0) * 1e6
+    assert catalog.stats.packs == 1, "warm call must not re-pack"
+    assert warm.keys() == cold.keys()
+    rows.append((
+        "catalog/warm", warm_us,
+        f"hits={catalog.stats.estimate_cache_hits};"
+        f"packs={catalog.stats.packs};speedup={cold_us / max(warm_us, 1e-9):.0f}x",
+    ))
+
+    reads_before = catalog.stats.footers_read
+    _write_shard(root, NUM_SHARDS)
+    # only the new shard's footer is ingested; the other fingerprints match
+    t0 = time.perf_counter()
+    summary = catalog.update()
+    catalog.estimate(mode="improved")
+    incr_us = (time.perf_counter() - t0) * 1e6
+    rows.append((
+        "catalog/incremental", incr_us,
+        f"added={summary.added};updated={summary.updated};"
+        f"footers_read={catalog.stats.footers_read - reads_before};"
+        f"files={catalog.num_files}",
+    ))
+
+    # -- retrace count: O(log R) shapes across MAX_R distinct datasets ------
+    packer = BatchPacker()
+    before = estimate_batch._cache_size()
+    bucketed_shapes = set()
+    for r in range(1, MAX_R + 1):
+        cols = [_synthetic_column(r, seed=100 * r + i) for i in range(4)]
+        batch = packer.pack(cols)
+        bucketed_shapes.add((batch.batch, batch.max_groups))
+        estimate_batch(batch, mode="paper")
+    traced = estimate_batch._cache_size() - before
+    rows.append((
+        "catalog/retraces", 0.0,
+        f"datasets={MAX_R};naive_shapes={MAX_R};"
+        f"bucketed_shapes={len(bucketed_shapes)};traces={traced}",
+    ))
+    assert traced <= len(bucketed_shapes) <= int(np.log2(MAX_R)) + 2
+    return rows

@@ -5,9 +5,10 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   accuracy.py     — Table 1 regime grid + coverage/rowgroup/length sweeps
   baselines.py    — zero-cost vs data-access estimators (§11 positioning)
   batch_memory.py — §8 batch dictionary prediction vs measured
+  catalog_scale.py— StatsCatalog cold/warm/incremental latency + retraces
   complexity.py   — §10.2 single-pass complexity table
   kernels.py      — Pallas kernel suite throughput
-  warehouse.py    — TPC-H-shaped lineitem column accuracy (§10.1 setting)
+  warehouse.py    — TPC-H-shaped lineitem accuracy via the catalog (§10.1)
 """
 from __future__ import annotations
 
@@ -20,6 +21,7 @@ def main() -> None:
         accuracy,
         baselines,
         batch_memory,
+        catalog_scale,
         complexity,
         kernels,
         warehouse,
@@ -28,6 +30,7 @@ def main() -> None:
     modules = [
         ("accuracy", accuracy),
         ("warehouse", warehouse),
+        ("catalog_scale", catalog_scale),
         ("baselines", baselines),
         ("batch_memory", batch_memory),
         ("complexity", complexity),

@@ -1,5 +1,11 @@
 """Warehouse-shaped accuracy: TPC-H-style lineitem columns (paper §10.1's
-production setting reconstructed with ground truth)."""
+production setting reconstructed with ground truth).
+
+Unlike the single-file variant this now runs the production-shaped path: a
+multi-shard lineitem dataset estimated through `StatsCatalog` (footer scan
+-> cross-file metadata merge -> bucketed batch estimation), with ground
+truth computed over the union of all shards.
+"""
 from __future__ import annotations
 
 import os
@@ -7,32 +13,43 @@ import tempfile
 import time
 from typing import List
 
-from repro.columnar import column_metadata_from_footer, read_footer, write_file
+import numpy as np
+
+from repro.catalog import StatsCatalog
 from repro.columnar.datasets import lineitem
-from repro.columnar.writer import WriterOptions
-from repro.core import estimate_columns
+from repro.columnar.writer import WriterOptions, write_file
+
+NUM_SHARDS = 2
 
 
 def run() -> List[tuple]:
-    data = lineitem(rows=1 << 17, seed=0)
-    cols = {k: v for k, (v, _) in data.items()}
+    shards = [lineitem(rows=1 << 16, seed=s) for s in range(NUM_SHARDS)]
     tmp = tempfile.mkdtemp()
-    write_file(os.path.join(tmp, "lineitem"), cols,
-               options=WriterOptions(row_group_size=8192))
-    footer = read_footer(os.path.join(tmp, "lineitem"))
-    metas = [column_metadata_from_footer(footer, n) for n in footer.column_names]
+    for i, data in enumerate(shards):
+        write_file(
+            os.path.join(tmp, f"lineitem_{i:03d}"),
+            {k: v for k, (v, _) in data.items()},
+            options=WriterOptions(row_group_size=8192),
+        )
+    truth = {
+        name: int(
+            np.unique(np.concatenate([d[name][0] for d in shards])).size
+        )
+        for name in shards[0]
+    }
 
+    catalog = StatsCatalog(tmp)
     rows: List[tuple] = []
-    t0 = time.perf_counter()
     for mode in ("paper", "improved"):
-        ests = estimate_columns(metas, mode=mode)
-        us = (time.perf_counter() - t0) * 1e6 / len(ests)
-        for e in ests:
-            truth = data[e.column_name][1]
-            err = abs(e.ndv - truth) / max(truth, 1)
+        t0 = time.perf_counter()
+        ests = catalog.estimate(mode=mode)
+        us = (time.perf_counter() - t0) * 1e6 / max(len(ests), 1)
+        for name, e in ests.items():
+            err = abs(e.ndv - truth[name]) / max(truth[name], 1)
             rows.append((
-                f"warehouse/{mode}/{e.column_name}", us,
-                f"est={e.ndv:.0f};true={truth};err={err:.4f};"
-                f"layout={e.layout.name};lb={int(e.is_lower_bound)}",
+                f"warehouse/{mode}/{name}", us,
+                f"est={e.ndv:.0f};true={truth[name]};err={err:.4f};"
+                f"layout={e.layout.name};lb={int(e.is_lower_bound)};"
+                f"files={catalog.num_files}",
             ))
     return rows

@@ -13,7 +13,7 @@ import tempfile
 import numpy as np
 
 from repro.columnar import format as fmt
-from repro.columnar import list_files, read_footer, column_metadata_from_footer
+from repro.columnar import column_metadata_from_footer, scan_dataset
 from repro.core import estimate_columns
 from repro.core.planner import NDVPlanner
 
@@ -40,13 +40,12 @@ def main():
         ensure_demo_dataset(root)
         print(f"(no root given — generated demo dataset at {root})")
 
-    files = list_files(root)
-    print(f"profiling {len(files)} files under {root}\n")
+    scanned = scan_dataset(root)
+    print(f"profiling {len(scanned)} files under {root}\n")
     planner = NDVPlanner()
     meta_bytes = 0
     data_bytes = 0
-    for f in files:
-        footer = read_footer(f)
+    for f, footer in scanned:
         meta_bytes += os.path.getsize(fmt.footer_path(f))
         data_bytes += os.path.getsize(fmt.data_path(f))
         metas = [column_metadata_from_footer(footer, n) for n in footer.column_names]

@@ -1,0 +1,44 @@
+"""Stats catalog: the system artifact around zero-cost NDV estimation.
+
+The paper's pitch is fleet-scale NDV from footers alone (§1, §10.1); what a
+production warehouse actually maintains is not a one-shot estimator call but
+a *statistics catalog* — incremental, mergeable, cached per-dataset column
+statistics (cf. PLM4NDV and distributed-sampling NDV, which both treat the
+catalog as the deliverable). This package is that seam. It owns the whole
+path from "directory of columnar files" to "cached dataset-level NDV
+estimates and memory plans":
+
+  ingestion   `MetadataSource` — pluggable footer scanning (PQLite today;
+              any Parquet/ORC-shaped footer adapter later) with per-file
+              *fingerprints* so re-scans skip unchanged footers.
+  merging     `merge_column_metadata` — one logical `ColumnMetadata` per
+              column across files. Chunk-level arrays concatenate; the
+              distinct-min/max counts (§5's m_min/m_max) are re-deduped
+              across files, including BYTE_ARRAY stats that collide in the
+              truncated 8-byte key space (disambiguated by length + repr).
+  packing     `BatchPacker` — vectorized struct-of-arrays packing (numpy
+              scatter over all chunks at once, no per-column Python loop)
+              with power-of-two *shape bucketing*: the padded (B, R) shape
+              fed to the jit'd `estimate_batch` is rounded up to the next
+              power of two, so the number of distinct traces is
+              O(log B · log R) across a whole fleet instead of one trace
+              per dataset shape. Padding lanes are masked out and never
+              affect estimates.
+  caching     `StatsCatalog` — packed batches are cached per fingerprint
+              set, estimates per (fingerprint set, mode, schema bounds).
+              Warm calls re-pack nothing and re-trace nothing; `update()`
+              ingests only new/changed files and merges them into the
+              existing per-column view instead of re-reading the fleet.
+
+Everything downstream (data/pipeline planning, NDVPlanner, benchmarks, and
+the future sharded-estimation / async-ingestion / stats-serving work) talks
+to this package instead of touching footers directly.
+"""
+from repro.catalog.catalog import CatalogStats, FileEntry, StatsCatalog  # noqa: F401
+from repro.catalog.merge import merge_column_metadata  # noqa: F401
+from repro.catalog.packer import BatchPacker, bucket_size  # noqa: F401
+from repro.catalog.source import (  # noqa: F401
+    InMemoryMetadataSource,
+    MetadataSource,
+    PQLiteMetadataSource,
+)

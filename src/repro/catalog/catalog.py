@@ -1,0 +1,290 @@
+"""`StatsCatalog`: cached, incremental dataset-level NDV estimation.
+
+The catalog's contract (see the package docstring for the design):
+
+  * `update()` scans the source, re-reading only footers whose fingerprint
+    changed, and maintains one merged `ColumnMetadata` per column. Pure
+    additions merge into the existing view (O(new files)); any rewrite or
+    removal triggers a full re-merge.
+  * `estimate()` packs the merged view through the bucketing `BatchPacker`
+    and runs the jit'd `estimate_batch`. Packed batches are cached per
+    fingerprint set, estimates per (fingerprint set, mode, schema bounds) —
+    a warm call performs zero packing and zero tracing, just a dict hit.
+  * `plan()` turns estimates into `NDVPlanner` memory plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.catalog.merge import merge_column_metadata
+from repro.catalog.packer import BatchPacker
+from repro.catalog.source import MetadataSource, PQLiteMetadataSource
+from repro.core.ndv.estimator import estimate_batch, estimates_from_batch
+from repro.core.ndv.types import ColumnBatch, ColumnMetadata, NDVEstimate
+
+
+@dataclasses.dataclass(frozen=True)
+class FileEntry:
+    """One ingested file: identity, change token, parsed footer."""
+
+    file_id: str
+    fingerprint: str
+    footer: object  # FileFooter-shaped
+
+
+class UpdateSummary(NamedTuple):
+    added: int
+    updated: int
+    removed: int
+    total: int
+
+    @property
+    def changed(self) -> bool:
+        return bool(self.added or self.updated or self.removed)
+
+
+@dataclasses.dataclass
+class CatalogStats:
+    """Observability counters (asserted by tests and benchmarks)."""
+
+    footers_read: int = 0
+    merges: int = 0
+    packs: int = 0
+    estimate_cache_hits: int = 0
+    estimate_cache_misses: int = 0
+
+
+class StatsCatalog:
+    """Dataset-level statistics catalog over a `MetadataSource`."""
+
+    def __init__(
+        self,
+        source: Union[MetadataSource, str],
+        *,
+        packer: Optional[BatchPacker] = None,
+        max_cache_entries: int = 64,
+    ):
+        if isinstance(source, str):
+            source = PQLiteMetadataSource(source)
+        self.source = source
+        self.packer = packer or BatchPacker()
+        self.stats = CatalogStats()
+        self._entries: "OrderedDict[str, FileEntry]" = OrderedDict()
+        self._merged: Optional[Dict[str, ColumnMetadata]] = None
+        self._column_names: List[str] = []
+        self._batch_cache: "OrderedDict[frozenset, ColumnBatch]" = OrderedDict()
+        self._estimate_cache: "OrderedDict[tuple, Dict[str, NDVEstimate]]" = (
+            OrderedDict()
+        )
+        self._max_cache_entries = max_cache_entries
+        self._scanned = False
+        self._fp_key: Optional[frozenset] = None
+
+    # -- ingestion -----------------------------------------------------------
+
+    def update(self) -> UpdateSummary:
+        """Re-scan the source; ingest new/changed footers, drop removed ones.
+
+        All catalog state (entries, merged view, cached fingerprint key) is
+        committed only after merging succeeds, so a failed update — e.g. a
+        schema-mismatched file — leaves the previous consistent view intact.
+        """
+        ids = self.source.list_files()
+        added = updated = 0
+        new_entries: "OrderedDict[str, FileEntry]" = OrderedDict()
+        fresh: List[FileEntry] = []
+        for fid in ids:
+            fp = self.source.fingerprint(fid)
+            prev = self._entries.get(fid)
+            if prev is not None and prev.fingerprint == fp:
+                new_entries[fid] = prev
+                continue
+            footer = self.source.read_footer(fid)
+            self.stats.footers_read += 1
+            entry = FileEntry(fid, fp, footer)
+            new_entries[fid] = entry
+            fresh.append(entry)
+            if prev is None:
+                added += 1
+            else:
+                updated += 1
+        removed = len(set(self._entries) - set(new_entries))
+        pure_addition = updated == 0 and removed == 0
+        if not new_entries:
+            merged, names = {}, []
+        elif self._merged is not None and pure_addition and not fresh:
+            merged, names = self._merged, self._column_names
+        elif self._merged and pure_addition:
+            merged, names = self._merge_into(fresh)
+        else:
+            merged, names = self._merge_all(list(new_entries.values()))
+        # commit point: merge succeeded, swap the whole view atomically
+        self._scanned = True
+        self._entries = new_entries
+        self._merged, self._column_names = merged, names
+        self._fp_key = None
+        return UpdateSummary(added, updated, removed, len(new_entries))
+
+    def _per_file(self, entry: FileEntry, names: Sequence[str]) -> List[ColumnMetadata]:
+        try:
+            return [self.source.column_metadata(entry.footer, n) for n in names]
+        except KeyError as e:
+            raise ValueError(
+                f"file {entry.file_id!r} is missing column {e.args[0]!r} "
+                f"expected by the dataset schema {list(names)}"
+            ) from e
+
+    @staticmethod
+    def _check_schema(names: Sequence[str], entry: FileEntry) -> None:
+        got = set(entry.footer.column_names)
+        if got != set(names):
+            missing = sorted(set(names) - got)
+            extra = sorted(got - set(names))
+            raise ValueError(
+                f"file {entry.file_id!r} does not match the dataset schema: "
+                f"missing columns {missing}, unexpected columns {extra}"
+            )
+
+    def _merge_all(self, entries: List[FileEntry]) -> tuple:
+        names = list(entries[0].footer.column_names)
+        for e in entries[1:]:
+            self._check_schema(names, e)
+        per_file = [self._per_file(e, names) for e in entries]
+        merged = {
+            name: merge_column_metadata([pf[i] for pf in per_file])
+            for i, name in enumerate(names)
+        }
+        self.stats.merges += 1
+        return merged, names
+
+    def _merge_into(self, fresh: List[FileEntry]) -> tuple:
+        names = self._column_names
+        for e in fresh:
+            self._check_schema(names, e)
+        per_file = [self._per_file(e, names) for e in fresh]
+        merged = dict(self._merged)
+        for i, name in enumerate(names):
+            merged[name] = merge_column_metadata(
+                [merged[name]] + [pf[i] for pf in per_file]
+            )
+        self.stats.merges += 1
+        return merged, names
+
+    def _ensure_scanned(self) -> None:
+        if not self._scanned:
+            self.update()
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def num_files(self) -> int:
+        self._ensure_scanned()
+        return len(self._entries)
+
+    @property
+    def column_names(self) -> List[str]:
+        self._ensure_scanned()
+        return list(self._column_names)
+
+    @property
+    def files(self) -> List[str]:
+        self._ensure_scanned()
+        return list(self._entries)
+
+    def fingerprint_key(self) -> frozenset:
+        """Identity of the current dataset state (the cache key).
+
+        Computed once per `update()` — warm `estimate()` calls stay O(1)
+        in file count (update() is the only mutation point).
+        """
+        self._ensure_scanned()
+        if self._fp_key is None:
+            self._fp_key = frozenset(
+                f"{e.file_id}@{e.fingerprint}" for e in self._entries.values()
+            )
+        return self._fp_key
+
+    def merged_metadata(self) -> Dict[str, ColumnMetadata]:
+        """One logical ColumnMetadata per column, across all files."""
+        self._ensure_scanned()
+        return dict(self._merged or {})
+
+    def non_nulls(self) -> Dict[str, float]:
+        return {n: m.non_null for n, m in self.merged_metadata().items()}
+
+    # -- estimation ----------------------------------------------------------
+
+    def _packed(self, key: frozenset) -> ColumnBatch:
+        batch = self._batch_cache.get(key)
+        if batch is None:
+            cols = [self._merged[n] for n in self._column_names]
+            batch = self.packer.pack(cols)
+            self.stats.packs += 1
+            self._cache_put(self._batch_cache, key, batch)
+        else:
+            self._batch_cache.move_to_end(key)
+        return batch
+
+    def _cache_put(self, cache: OrderedDict, key, value) -> None:
+        cache[key] = value
+        cache.move_to_end(key)
+        while len(cache) > self._max_cache_entries:
+            cache.popitem(last=False)
+
+    def estimate(
+        self,
+        *,
+        mode: str = "paper",
+        schema_bounds: Optional[Dict[str, float]] = None,
+    ) -> Dict[str, NDVEstimate]:
+        """Dataset-level NDV estimates for every column (cached).
+
+        Args:
+          mode: "paper" or "improved" — threaded to `estimate_batch`.
+          schema_bounds: optional column -> upper-bound NDV (Eq 14-15 family
+            of schema knowledge, e.g. an enum's domain size).
+        """
+        self._ensure_scanned()
+        fp_key = self.fingerprint_key()
+        sb_key = (
+            tuple(sorted(schema_bounds.items())) if schema_bounds else None
+        )
+        key = (fp_key, mode, sb_key)
+        cached = self._estimate_cache.get(key)
+        if cached is not None:
+            self.stats.estimate_cache_hits += 1
+            self._estimate_cache.move_to_end(key)
+            return dict(cached)
+        self.stats.estimate_cache_misses += 1
+        if not self._column_names:
+            return {}
+        batch = self._packed(fp_key)
+        sb = None
+        if schema_bounds:
+            # padded lanes get +inf (no bound) — masked out downstream anyway
+            arr = np.full(batch.batch, np.inf, np.float32)
+            for i, name in enumerate(self._column_names):
+                if name in schema_bounds:
+                    arr[i] = float(schema_bounds[name])
+            sb = jnp.asarray(arr)
+        out = estimate_batch(batch, sb, mode=mode)
+        ests = estimates_from_batch(out, batch, self._column_names)
+        result = {e.column_name: e for e in ests}
+        self._cache_put(self._estimate_cache, key, result)
+        return dict(result)
+
+    def estimate_column(self, name: str, *, mode: str = "paper") -> NDVEstimate:
+        return self.estimate(mode=mode)[name]
+
+    # -- planning ------------------------------------------------------------
+
+    def plan(self, planner=None, *, mode: str = "paper"):
+        """Memory plans for every column via `NDVPlanner.plan_catalog`."""
+        from repro.core.planner import NDVPlanner
+
+        return (planner or NDVPlanner()).plan_catalog(self, mode=mode)

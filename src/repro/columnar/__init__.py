@@ -5,5 +5,6 @@ from repro.columnar.reader import (  # noqa: F401
     dataset_column_metadata,
     list_files,
     read_footer,
+    scan_dataset,
 )
 from repro.columnar.writer import WriterOptions, write_dataset, write_file  # noqa: F401

@@ -55,8 +55,10 @@ def column_metadata_from_footer(
     min_lens = np.array([c.min_len for c in chunks], np.float64)
     max_lens = np.array([c.max_len for c in chunks], np.float64)
     if ptype == PhysicalType.BYTE_ARRAY:
-        m_min = len({(c.min_key, c.min_repr) for c in chunks})
-        m_max = len({(c.max_key, c.max_repr) for c in chunks})
+        # (key, len, repr) — same identity repro.catalog.merge uses, so the
+        # single-file counts are exact fixed points of cross-file merging.
+        m_min = len({(c.min_key, c.min_len, c.min_repr) for c in chunks})
+        m_max = len({(c.max_key, c.max_len, c.max_repr) for c in chunks})
     else:
         m_min = int(np.unique(mins).size)
         m_max = int(np.unique(maxs).size)
@@ -73,6 +75,8 @@ def column_metadata_from_footer(
         distinct_max_count=float(m_max),
         physical_type=ptype,
         column_name=name,
+        min_reprs=np.array([c.min_repr for c in chunks], object),
+        max_reprs=np.array([c.max_repr for c in chunks], object),
     )
 
 
@@ -81,6 +85,17 @@ def dataset_column_metadata(root: str, name: str) -> List[ColumnMetadata]:
     return [
         column_metadata_from_footer(read_footer(d), name) for d in list_files(root)
     ]
+
+
+def scan_dataset(root: str) -> List[tuple]:
+    """Footer scan of a whole dataset: [(file_dir, FileFooter), ...].
+
+    Still the zero-cost path — one footer read per file, no data pages.
+    Convenience for whole-dataset consumers (profiling, ad-hoc analysis)
+    that want every footer eagerly; `repro.catalog.StatsCatalog` instead
+    reads footers selectively via fingerprints.
+    """
+    return [(d, read_footer(d)) for d in list_files(root)]
 
 
 # ---------------------------------------------------------------------------

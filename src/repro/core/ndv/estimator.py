@@ -148,24 +148,16 @@ def estimate_batch(
     )
 
 
-def estimate_columns(
-    cols: Sequence[ColumnMetadata],
-    schema_bounds: Optional[Sequence[float]] = None,
-    *,
-    mode: str = "paper",
+def estimates_from_batch(
+    out: BatchEstimates, batch: ColumnBatch, names: Sequence[str]
 ) -> List[NDVEstimate]:
-    """Object API: list of ColumnMetadata -> list of NDVEstimate."""
-    if not cols:
-        return []
-    batch = ColumnBatch.from_columns(cols)
-    sb = (
-        jnp.asarray(np.asarray(schema_bounds, np.float32))
-        if schema_bounds is not None
-        else None
-    )
-    out = estimate_batch(batch, sb, mode=mode)
+    """Materialize per-column NDVEstimate objects from batched output.
+
+    `names` may be shorter than the batch axis: the packer pads B up to a
+    shape bucket, and the padding lanes carry no column.
+    """
     res: List[NDVEstimate] = []
-    for i, c in enumerate(cols):
+    for i, name in enumerate(names):
         res.append(
             NDVEstimate(
                 ndv=float(out.ndv[i]),
@@ -178,13 +170,41 @@ def estimate_columns(
                 overlap_ratio=float(out.overlap_ratio[i]),
                 monotonicity=float(out.monotonicity[i]),
                 confidence=float(out.confidence[i]),
-                column_name=c.column_name,
+                column_name=name,
             )
         )
     return res
 
 
-def estimate_file(file_meta, schema_bounds=None) -> List[NDVEstimate]:
+def estimate_columns(
+    cols: Sequence[ColumnMetadata],
+    schema_bounds: Optional[Sequence[float]] = None,
+    *,
+    mode: str = "paper",
+) -> List[NDVEstimate]:
+    """Object API: list of ColumnMetadata -> list of NDVEstimate.
+
+    Packs through the bucketing `BatchPacker`, so repeated calls with
+    different column counts / row-group counts reuse O(log B · log R)
+    jit traces of `estimate_batch` instead of one per distinct shape.
+    """
+    from repro.catalog.packer import BatchPacker  # local: avoid import cycle
+
+    if not cols:
+        return []
+    batch = BatchPacker().pack(cols)
+    sb = None
+    if schema_bounds is not None:
+        arr = np.full(batch.batch, np.inf, np.float32)
+        arr[: len(cols)] = np.asarray(schema_bounds, np.float32)
+        sb = jnp.asarray(arr)
+    out = estimate_batch(batch, sb, mode=mode)
+    return estimates_from_batch(out, batch, [c.column_name for c in cols])
+
+
+def estimate_file(
+    file_meta, schema_bounds=None, *, mode: str = "paper"
+) -> List[NDVEstimate]:
     """Estimate every column of a PQLite file from its footer only."""
     from repro.columnar.reader import column_metadata_from_footer
 
@@ -192,4 +212,4 @@ def estimate_file(file_meta, schema_bounds=None) -> List[NDVEstimate]:
         column_metadata_from_footer(file_meta, name)
         for name in file_meta.column_names
     ]
-    return estimate_columns(cols, schema_bounds)
+    return estimate_columns(cols, schema_bounds, mode=mode)

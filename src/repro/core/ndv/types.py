@@ -87,6 +87,10 @@ class ColumnMetadata:
       distinct_min_count / distinct_max_count: m_min, m_max — number of
         distinct min (max) values across row groups (computed exactly for
         small n, via HLL sketch at fleet scale).
+      min_reprs / max_reprs: optional per-row-group human-readable stat
+        values. Not consumed by the estimator; carried so that cross-file
+        merging (repro.catalog.merge) can dedup BYTE_ARRAY statistics that
+        collide in the truncated 8-byte key space.
       physical_type: the column's physical type.
     """
 
@@ -102,6 +106,8 @@ class ColumnMetadata:
     distinct_max_count: float
     physical_type: PhysicalType
     column_name: str = ""
+    min_reprs: Optional[np.ndarray] = None
+    max_reprs: Optional[np.ndarray] = None
 
     @property
     def num_row_groups(self) -> int:
@@ -181,69 +187,15 @@ class ColumnBatch:
 
     @classmethod
     def from_columns(cls, cols: Sequence[ColumnMetadata]) -> "ColumnBatch":
-        """Pack per-column metadata into padded struct-of-arrays."""
-        b = len(cols)
-        r = max((c.num_row_groups for c in cols), default=1)
-        r = max(r, 1)
-        f = lambda: np.zeros((b,), np.float32)  # noqa: E731
-        g = lambda: np.zeros((b, r), np.float32)  # noqa: E731
-        chunk_S, chunk_rows, chunk_nulls = g(), g(), g()
-        chunk_dict = np.zeros((b, r), bool)
-        N, nulls, m_min, m_max, mean_len = f(), f(), f(), f(), f()
-        n_groups = np.zeros((b,), np.int32)
-        len_sample = np.zeros((b,), np.int32)
-        mins, maxs = g(), g()
-        valid = np.zeros((b, r), bool)
-        fixed_width = np.zeros((b,), bool)
-        int_like = np.zeros((b,), bool)
-        single_byte = np.zeros((b,), bool)
-        for i, c in enumerate(cols):
-            n = c.num_row_groups
-            chunk_S[i, :n] = np.asarray(c.chunk_sizes, np.float32)
-            chunk_rows[i, :n] = np.asarray(c.chunk_rows, np.float32)
-            chunk_nulls[i, :n] = np.asarray(c.chunk_nulls, np.float32)
-            chunk_dict[i, :n] = np.asarray(c.chunk_dict_encoded, bool)
-            N[i] = c.num_values
-            nulls[i] = c.null_count
-            n_groups[i] = n
-            mins[i, :n] = np.asarray(c.mins, np.float32)[:n]
-            maxs[i, :n] = np.asarray(c.maxs, np.float32)[:n]
-            valid[i, :n] = True
-            m_min[i] = c.distinct_min_count
-            m_max[i] = c.distinct_max_count
-            w = c.physical_type.fixed_width
-            if w is not None:
-                mean_len[i] = float(w)
-                len_sample[i] = n * 2
-                fixed_width[i] = True
-            elif n == 1:
-                # single row group fallback: (|min| + |max|)/2 (paper §4.3)
-                mean_len[i] = float(
-                    (float(c.min_lengths[0]) + float(c.max_lengths[0])) / 2.0
-                )
-                len_sample[i] = 2
-            else:
-                lens = np.concatenate([
-                    np.asarray(c.min_lengths, np.float64)[:n],
-                    np.asarray(c.max_lengths, np.float64)[:n],
-                ])
-                mean_len[i] = float(lens.mean()) if lens.size else 1.0
-                len_sample[i] = int(c.distinct_min_count + c.distinct_max_count)
-            int_like[i] = c.physical_type.is_integer_like
-            single_byte[i] = (
-                c.physical_type == PhysicalType.BYTE_ARRAY
-                and float(np.max(np.asarray(c.max_lengths)[:n], initial=0.0)) <= 1.0
-            )
-        J = jnp.asarray
-        return cls(
-            chunk_S=J(chunk_S), chunk_rows=J(chunk_rows),
-            chunk_nulls=J(chunk_nulls), chunk_dict_encoded=J(chunk_dict),
-            N=J(N), nulls=J(nulls), n_groups=J(n_groups),
-            mins=J(mins), maxs=J(maxs), valid=J(valid),
-            m_min=J(m_min), m_max=J(m_max), mean_len=J(mean_len),
-            len_sample=J(len_sample), fixed_width=J(fixed_width),
-            int_like=J(int_like), single_byte=J(single_byte),
-        )
+        """Pack per-column metadata into padded struct-of-arrays.
+
+        Delegates to the vectorized ``repro.catalog.packer.BatchPacker`` with
+        shape bucketing disabled, preserving this method's historical shape
+        contract: (B, R) == (len(cols), max row groups).
+        """
+        from repro.catalog.packer import BatchPacker  # local: avoid cycle
+
+        return BatchPacker(bucket_rows=False, bucket_cols=False).pack(cols)
 
 
 # Register ColumnBatch as a pytree so it can cross jit boundaries.

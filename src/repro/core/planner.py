@@ -171,3 +171,16 @@ class NDVPlanner:
             e.column_name: self.memory_plan(e, nn)
             for e, nn in zip(estimates, non_nulls)
         }
+
+    def plan_catalog(self, catalog, *, mode: str = "paper") -> Dict[str, MemoryPlan]:
+        """Memory plans for every column of a `repro.catalog.StatsCatalog`.
+
+        Estimates come from the catalog's cache (warm after the first call);
+        non-null counts from its merged per-column metadata.
+        """
+        estimates = catalog.estimate(mode=mode)
+        non_nulls = catalog.non_nulls()
+        return {
+            name: self.memory_plan(est, non_nulls[name])
+            for name, est in estimates.items()
+        }

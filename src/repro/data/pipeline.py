@@ -18,8 +18,8 @@ from typing import Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
+from repro.catalog import StatsCatalog
 from repro.columnar import reader as rd
-from repro.core import estimate_columns
 from repro.core.ndv.types import NDVEstimate
 from repro.core.planner import MemoryPlan, NDVPlanner
 
@@ -51,49 +51,16 @@ class TokenPipeline:
         self.files = rd.list_files(cfg.root)
         if not self.files:
             raise FileNotFoundError(f"no PQLite files under {cfg.root}")
+        self.catalog = StatsCatalog(cfg.root)
         self.plan = self._plan()
 
     # -- metadata-only planning (the paper's zero-cost path) -----------------
     def _plan(self) -> PipelinePlan:
-        footers = [rd.read_footer(f) for f in self.files]
-        names = footers[0].column_names
-        metas, non_nulls = [], []
-        for name in names:
-            per_file = [rd.column_metadata_from_footer(ft, name) for ft in footers]
-            # merge multi-file metadata into one logical column view
-            import numpy as _np
-
-            merged = per_file[0]
-            if len(per_file) > 1:
-                merged = dataclasses.replace(
-                    merged,
-                    chunk_sizes=_np.concatenate([m.chunk_sizes for m in per_file]),
-                    chunk_rows=_np.concatenate([m.chunk_rows for m in per_file]),
-                    chunk_nulls=_np.concatenate([m.chunk_nulls for m in per_file]),
-                    chunk_dict_encoded=_np.concatenate(
-                        [m.chunk_dict_encoded for m in per_file]
-                    ),
-                    mins=_np.concatenate([m.mins for m in per_file]),
-                    maxs=_np.concatenate([m.maxs for m in per_file]),
-                    min_lengths=_np.concatenate([m.min_lengths for m in per_file]),
-                    max_lengths=_np.concatenate([m.max_lengths for m in per_file]),
-                    distinct_min_count=float(
-                        len({(float(x)) for m in per_file for x in m.mins})
-                    ),
-                    distinct_max_count=float(
-                        len({(float(x)) for m in per_file for x in m.maxs})
-                    ),
-                )
-            metas.append(merged)
-            non_nulls.append(merged.non_null)
-        ests = estimate_columns(metas, mode=self.cfg.mode)
-        planner = NDVPlanner()
-        memory = {
-            e.column_name: planner.memory_plan(e, nn)
-            for e, nn in zip(ests, non_nulls)
-        }
+        """Plan memory from the stats catalog (merged multi-file metadata)."""
+        ests = self.catalog.estimate(mode=self.cfg.mode)
+        memory = self.catalog.plan(NDVPlanner(), mode=self.cfg.mode)
         return PipelinePlan(
-            estimates={e.column_name: e for e in ests},
+            estimates=ests,
             memory=memory,
             total_staging_bytes=float(
                 sum(m.d_batch_bytes for m in memory.values())

@@ -1,6 +1,8 @@
 """Data-access baseline estimators (HLL / CVM / sampling) sanity tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.baselines import (

@@ -1,6 +1,9 @@
 """Batch memory prediction (paper §8) — unit + property tests."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ndv.batch_memory import expected_batch_dictionary, predict_batch_memory

@@ -1,0 +1,342 @@
+"""StatsCatalog subsystem: packing, caching, incremental ingestion, parity.
+
+Covers the acceptance criteria of the catalog refactor:
+  * catalog estimates == estimate_columns on the merged metadata (exact)
+  * warm calls perform no re-packing and hit the estimate cache
+  * update() ingests only new/changed footers and merges incrementally
+  * shape bucketing keeps jit traces shared across nearby shapes
+  * the vectorized packer reproduces the legacy per-column loop bit-exactly
+  * estimate_file threads mode through to the estimator
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.catalog import (
+    BatchPacker,
+    InMemoryMetadataSource,
+    StatsCatalog,
+    bucket_size,
+)
+from repro.columnar import read_footer, write_file
+from repro.columnar.writer import WriterOptions
+from repro.core import estimate_columns, estimate_file
+from repro.core.ndv.estimator import estimate_batch
+from repro.core.ndv.types import ColumnBatch, ColumnMetadata, PhysicalType
+
+
+def _shard(seed, rows=512, vocab=64):
+    rng = np.random.default_rng(seed)
+    return {
+        "tok": rng.integers(0, vocab, rows).astype(np.int64),
+        "val": np.round(rng.uniform(0, 100, rows), 1),
+        "tag": rng.choice(np.array(["red", "green", "blue", "cyan"]), rows),
+    }
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    for i in range(3):
+        write_file(
+            str(tmp_path / f"shard_{i:03d}"), _shard(i),
+            options=WriterOptions(row_group_size=128),
+        )
+    return str(tmp_path)
+
+
+def test_estimate_matches_estimate_columns_exactly(dataset):
+    catalog = StatsCatalog(dataset)
+    merged = catalog.merged_metadata()
+    cols = [merged[n] for n in catalog.column_names]
+    for mode in ("paper", "improved"):
+        got = catalog.estimate(mode=mode)
+        ref = {e.column_name: e for e in estimate_columns(cols, mode=mode)}
+        assert got.keys() == ref.keys()
+        for name in got:
+            assert got[name] == ref[name], name
+
+
+def test_warm_cache_no_repack_no_rescan(dataset):
+    catalog = StatsCatalog(dataset)
+    first = catalog.estimate(mode="improved")
+    assert catalog.stats.packs == 1
+    assert catalog.stats.estimate_cache_misses == 1
+    second = catalog.estimate(mode="improved")
+    assert second == first
+    assert catalog.stats.packs == 1               # no re-pack
+    assert catalog.stats.estimate_cache_hits == 1
+    # a different mode re-estimates but still reuses the packed batch
+    catalog.estimate(mode="paper")
+    assert catalog.stats.packs == 1
+    assert catalog.stats.estimate_cache_misses == 2
+
+
+def test_incremental_update_reads_only_new_footers(dataset, tmp_path):
+    catalog = StatsCatalog(dataset)
+    catalog.estimate()
+    reads = catalog.stats.footers_read
+    assert reads == 3
+    key_before = catalog.fingerprint_key()
+
+    write_file(
+        str(tmp_path / "shard_099"), _shard(99),
+        options=WriterOptions(row_group_size=128),
+    )
+    summary = catalog.update()
+    assert summary.added == 1 and summary.updated == 0 and summary.removed == 0
+    assert catalog.stats.footers_read == reads + 1   # only the new footer
+    assert catalog.fingerprint_key() != key_before
+    assert catalog.num_files == 4
+
+    # merged view covers the new chunks; estimates recompute (cache miss)
+    misses = catalog.stats.estimate_cache_misses
+    ests = catalog.estimate()
+    assert catalog.stats.estimate_cache_misses == misses + 1
+    merged = catalog.merged_metadata()
+    assert merged["tok"].num_row_groups == 16  # 4 files x 4 row groups
+    cols = [merged[n] for n in catalog.column_names]
+    ref = {e.column_name: e for e in estimate_columns(cols)}
+    for name in ests:
+        assert ests[name] == ref[name]
+
+
+def test_update_detects_rewrites_via_fingerprint():
+    f0 = write_file_footer(_shard(0))
+    f1 = write_file_footer(_shard(1))
+    src = InMemoryMetadataSource({"a": f0, "b": f1})
+    catalog = StatsCatalog(src)
+    before = catalog.estimate()
+    src.add("a", write_file_footer(_shard(7)))  # rewrite file "a"
+    summary = catalog.update()
+    assert summary.updated == 1 and summary.added == 0
+    after = catalog.estimate()
+    assert catalog.stats.estimate_cache_misses == 2
+    assert set(after) == set(before)
+
+
+def test_failed_update_preserves_consistent_state(dataset, tmp_path):
+    catalog = StatsCatalog(dataset)
+    before = catalog.estimate()
+    files_before = catalog.num_files
+    # a schema-mismatched file arrives: update() must fail...
+    write_file(
+        str(tmp_path / "shard_bad"), {"other": np.arange(64)},
+        options=WriterOptions(row_group_size=32),
+    )
+    with pytest.raises(ValueError, match="schema"):
+        catalog.update()
+    # ...and every subsequent retry must fail the same way (the bad file's
+    # fingerprint must not be committed as 'seen'),
+    with pytest.raises(ValueError, match="schema"):
+        catalog.update()
+    # ...while the previous consistent view keeps serving.
+    assert catalog.num_files == files_before
+    assert catalog.estimate() == before
+
+
+def test_schema_mismatch_raises_regardless_of_order(tmp_path):
+    write_file(str(tmp_path / "a"), {"x": np.arange(50), "y": np.arange(50)})
+    write_file(str(tmp_path / "b"), {"x": np.arange(50)})
+    with pytest.raises(ValueError, match="missing columns \\['y'\\]"):
+        StatsCatalog(str(tmp_path)).estimate()
+    # reversed listing order: the extra-column direction must also raise,
+    # not silently drop column y from the dataset view
+    f_a = read_footer(str(tmp_path / "a"))
+    f_b = read_footer(str(tmp_path / "b"))
+    with pytest.raises(ValueError, match="unexpected columns \\['y'\\]"):
+        StatsCatalog(InMemoryMetadataSource({"1b": f_b, "2a": f_a})).estimate()
+
+
+def write_file_footer(cols, rg=128):
+    import tempfile
+
+    d = tempfile.mkdtemp()
+    return write_file(d, cols, options=WriterOptions(row_group_size=rg))
+
+
+# -- packer ------------------------------------------------------------------
+
+
+def _legacy_pack(cols):
+    """The historical per-column Python loop, kept as a reference oracle."""
+    import jax.numpy as jnp
+
+    b = len(cols)
+    r = max(max((c.num_row_groups for c in cols), default=1), 1)
+    f = lambda: np.zeros((b,), np.float32)  # noqa: E731
+    g = lambda: np.zeros((b, r), np.float32)  # noqa: E731
+    chunk_S, chunk_rows, chunk_nulls = g(), g(), g()
+    chunk_dict = np.zeros((b, r), bool)
+    N, nulls, m_min, m_max, mean_len = f(), f(), f(), f(), f()
+    n_groups = np.zeros((b,), np.int32)
+    len_sample = np.zeros((b,), np.int32)
+    mins, maxs = g(), g()
+    valid = np.zeros((b, r), bool)
+    fixed_width = np.zeros((b,), bool)
+    int_like = np.zeros((b,), bool)
+    single_byte = np.zeros((b,), bool)
+    for i, c in enumerate(cols):
+        n = c.num_row_groups
+        chunk_S[i, :n] = np.asarray(c.chunk_sizes, np.float32)
+        chunk_rows[i, :n] = np.asarray(c.chunk_rows, np.float32)
+        chunk_nulls[i, :n] = np.asarray(c.chunk_nulls, np.float32)
+        chunk_dict[i, :n] = np.asarray(c.chunk_dict_encoded, bool)
+        N[i] = c.num_values
+        nulls[i] = c.null_count
+        n_groups[i] = n
+        mins[i, :n] = np.asarray(c.mins, np.float32)[:n]
+        maxs[i, :n] = np.asarray(c.maxs, np.float32)[:n]
+        valid[i, :n] = True
+        m_min[i] = c.distinct_min_count
+        m_max[i] = c.distinct_max_count
+        w = c.physical_type.fixed_width
+        if w is not None:
+            mean_len[i] = float(w)
+            len_sample[i] = n * 2
+            fixed_width[i] = True
+        elif n == 1:
+            mean_len[i] = float(
+                (float(c.min_lengths[0]) + float(c.max_lengths[0])) / 2.0
+            )
+            len_sample[i] = 2
+        else:
+            lens = np.concatenate([
+                np.asarray(c.min_lengths, np.float64)[:n],
+                np.asarray(c.max_lengths, np.float64)[:n],
+            ])
+            mean_len[i] = float(lens.mean()) if lens.size else 1.0
+            len_sample[i] = int(c.distinct_min_count + c.distinct_max_count)
+        int_like[i] = c.physical_type.is_integer_like
+        single_byte[i] = (
+            c.physical_type == PhysicalType.BYTE_ARRAY
+            and float(np.max(np.asarray(c.max_lengths)[:n], initial=0.0)) <= 1.0
+        )
+    J = jnp.asarray
+    return ColumnBatch(
+        chunk_S=J(chunk_S), chunk_rows=J(chunk_rows),
+        chunk_nulls=J(chunk_nulls), chunk_dict_encoded=J(chunk_dict),
+        N=J(N), nulls=J(nulls), n_groups=J(n_groups),
+        mins=J(mins), maxs=J(maxs), valid=J(valid),
+        m_min=J(m_min), m_max=J(m_max), mean_len=J(mean_len),
+        len_sample=J(len_sample), fixed_width=J(fixed_width),
+        int_like=J(int_like), single_byte=J(single_byte),
+    )
+
+
+def _mixed_columns(dataset):
+    catalog = StatsCatalog(dataset)
+    merged = catalog.merged_metadata()
+    cols = [merged[n] for n in catalog.column_names]
+    # add a ragged single-group column and an all-null-length corner
+    rng = np.random.default_rng(3)
+    cols.append(ColumnMetadata(
+        chunk_sizes=np.array([512.0]),
+        chunk_rows=np.array([100.0]),
+        chunk_nulls=np.array([4.0]),
+        chunk_dict_encoded=np.array([True]),
+        mins=np.array([3.0]),
+        maxs=np.array([9.0]),
+        min_lengths=np.array([2.0]),
+        max_lengths=np.array([6.0]),
+        distinct_min_count=1.0,
+        distinct_max_count=1.0,
+        physical_type=PhysicalType.BYTE_ARRAY,
+        column_name="ragged",
+    ))
+    return cols
+
+
+def test_vectorized_packer_matches_legacy_loop(dataset):
+    cols = _mixed_columns(dataset)
+    got = BatchPacker(bucket_rows=False, bucket_cols=False).pack(cols)
+    ref = _legacy_pack(cols)
+    for field in dataclasses.fields(ColumnBatch):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got, field.name)),
+            np.asarray(getattr(ref, field.name)),
+            err_msg=field.name,
+        )
+    # from_columns is the same unbucketed path
+    fc = ColumnBatch.from_columns(cols)
+    np.testing.assert_array_equal(np.asarray(fc.chunk_S), np.asarray(ref.chunk_S))
+
+
+def test_bucketed_pack_is_masked_superset(dataset):
+    cols = _mixed_columns(dataset)
+    plain = BatchPacker(bucket_rows=False, bucket_cols=False).pack(cols)
+    bucketed = BatchPacker().pack(cols)
+    b, r = plain.batch, plain.max_groups
+    assert bucketed.batch == bucket_size(b)
+    assert bucketed.max_groups == bucket_size(r, 8)
+    for field in dataclasses.fields(ColumnBatch):
+        got = np.asarray(getattr(bucketed, field.name))
+        ref = np.asarray(getattr(plain, field.name))
+        sliced = got[:b, :r] if got.ndim == 2 else got[:b]
+        np.testing.assert_array_equal(sliced, ref, err_msg=field.name)
+    # padding lanes are fully masked
+    assert not np.asarray(bucketed.valid)[b:].any()
+    assert not np.asarray(bucketed.valid)[:, r:].any()
+    assert (np.asarray(bucketed.n_groups)[b:] == 0).all()
+
+
+def test_bucketing_shares_jit_traces(dataset):
+    cols = _mixed_columns(dataset)
+    base = cols[0]
+    packer = BatchPacker()
+    shapes = set()
+    before = estimate_batch._cache_size()
+    for r in (9, 11, 13, 16):
+        trimmed = dataclasses.replace(
+            base,
+            chunk_sizes=np.resize(np.asarray(base.chunk_sizes), r),
+            chunk_rows=np.resize(np.asarray(base.chunk_rows), r),
+            chunk_nulls=np.resize(np.asarray(base.chunk_nulls), r),
+            chunk_dict_encoded=np.resize(np.asarray(base.chunk_dict_encoded), r),
+            mins=np.resize(np.asarray(base.mins), r),
+            maxs=np.resize(np.asarray(base.maxs), r),
+            min_lengths=np.resize(np.asarray(base.min_lengths), r),
+            max_lengths=np.resize(np.asarray(base.max_lengths), r),
+            min_reprs=None,
+            max_reprs=None,
+        )
+        batch = packer.pack([trimmed])
+        shapes.add((batch.batch, batch.max_groups))
+        estimate_batch(batch, mode="paper")
+    assert shapes == {(1, 16)}  # 9..16 row groups share one bucketed shape
+    assert estimate_batch._cache_size() - before <= 1
+
+
+def test_estimate_file_threads_mode(dataset):
+    from repro.columnar.reader import column_metadata_from_footer, list_files
+
+    footer = read_footer(list_files(dataset)[0])
+    cols = [
+        column_metadata_from_footer(footer, n) for n in footer.column_names
+    ]
+    for mode in ("paper", "improved"):
+        got = estimate_file(footer, mode=mode)
+        ref = estimate_columns(cols, mode=mode)
+        assert got == ref
+
+
+def test_schema_bounds_via_catalog(dataset):
+    catalog = StatsCatalog(dataset)
+    unbounded = catalog.estimate()
+    bounded = catalog.estimate(schema_bounds={"tok": 10.0})
+    assert bounded["tok"].ndv <= 10.0 < unbounded["tok"].ndv
+    # other columns unaffected by someone else's bound
+    assert bounded["val"].ndv == unbounded["val"].ndv
+
+
+def test_pipeline_plans_through_catalog(dataset):
+    from repro.data.pipeline import DataConfig, TokenPipeline
+
+    pipe = TokenPipeline(DataConfig(root=dataset, token_column="tok"))
+    ests = pipe.catalog.estimate(mode=pipe.cfg.mode)
+    assert pipe.plan.estimates == ests
+    assert set(pipe.plan.memory) == set(ests)
+    assert pipe.plan.total_staging_bytes > 0
+    assert pipe.vocab_estimate() is ests["tok"] or (
+        pipe.vocab_estimate() == ests["tok"]
+    )

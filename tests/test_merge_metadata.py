@@ -1,0 +1,179 @@
+"""Cross-file metadata merging: distinct-min/max dedup correctness.
+
+The §5 coupon-collector inversion consumes m_min/m_max = the number of
+DISTINCT row-group min/max statistics. Merging per-file views must dedup
+these across files — summing per-file counts (or deduping only in the
+truncated 8-byte key space for BYTE_ARRAY) inflates or deflates diversity
+and skews the estimate. Covers numeric collisions and BYTE_ARRAY key+repr
+collisions, plus associativity (the property `StatsCatalog.update()` relies
+on for incremental merging).
+"""
+import numpy as np
+import pytest
+
+from repro.catalog import merge_column_metadata
+from repro.columnar import format as fmt
+from repro.columnar import read_footer, write_file
+from repro.columnar.reader import column_metadata_from_footer
+from repro.columnar.writer import WriterOptions
+from repro.core.ndv.types import ColumnMetadata, PhysicalType
+
+
+def _numeric_meta(mins, maxs, name="c"):
+    r = len(mins)
+    return ColumnMetadata(
+        chunk_sizes=np.full(r, 1000.0),
+        chunk_rows=np.full(r, 100.0),
+        chunk_nulls=np.zeros(r),
+        chunk_dict_encoded=np.ones(r, bool),
+        mins=np.asarray(mins, np.float64),
+        maxs=np.asarray(maxs, np.float64),
+        min_lengths=np.full(r, 8.0),
+        max_lengths=np.full(r, 8.0),
+        distinct_min_count=float(np.unique(mins).size),
+        distinct_max_count=float(np.unique(maxs).size),
+        physical_type=PhysicalType.INT64,
+        column_name=name,
+    )
+
+
+def _bytes_meta(min_strs, max_strs, name="s"):
+    ptype = PhysicalType.BYTE_ARRAY
+    keys = lambda vals: np.array(  # noqa: E731
+        [fmt.stat_key(v, ptype) for v in vals], np.float64
+    )
+    lens = lambda vals: np.array(  # noqa: E731
+        [len(v.encode()) for v in vals], np.float64
+    )
+    r = len(min_strs)
+    mins, maxs = keys(min_strs), keys(max_strs)
+    return ColumnMetadata(
+        chunk_sizes=np.full(r, 1000.0),
+        chunk_rows=np.full(r, 100.0),
+        chunk_nulls=np.zeros(r),
+        chunk_dict_encoded=np.ones(r, bool),
+        mins=mins,
+        maxs=maxs,
+        min_lengths=lens(min_strs),
+        max_lengths=lens(max_strs),
+        distinct_min_count=float(
+            len({(k, l, s) for k, l, s in zip(mins, lens(min_strs), min_strs)})
+        ),
+        distinct_max_count=float(
+            len({(k, l, s) for k, l, s in zip(maxs, lens(max_strs), max_strs)})
+        ),
+        physical_type=ptype,
+        column_name=name,
+        min_reprs=np.array(min_strs, object),
+        max_reprs=np.array(max_strs, object),
+    )
+
+
+def test_numeric_collision_dedup():
+    # mins 10 appears in both files; maxs 90 appears in both.
+    a = _numeric_meta(mins=[10.0, 20.0], maxs=[50.0, 90.0])
+    b = _numeric_meta(mins=[10.0, 30.0], maxs=[90.0, 95.0])
+    m = merge_column_metadata([a, b])
+    assert m.distinct_min_count == 3.0  # {10, 20, 30}
+    assert m.distinct_max_count == 3.0  # {50, 90, 95}
+    # matches the old inline pipeline dedup for numerics
+    assert m.distinct_min_count == len({float(x) for p in (a, b) for x in p.mins})
+    # chunk-level fields concatenate in order
+    np.testing.assert_array_equal(m.mins, [10.0, 20.0, 10.0, 30.0])
+    assert m.num_row_groups == 4
+    assert m.num_values == a.num_values + b.num_values
+
+
+def test_byte_array_shared_prefix_distinct_lengths():
+    # Same 8-byte key prefix, different lengths: distinct values.
+    a = _bytes_meta(["aaaaaaaaX"], ["zzz"])
+    b = _bytes_meta(["aaaaaaaaXYZ"], ["zzz"])
+    m = merge_column_metadata([a, b])
+    assert float(m.mins[0]) == float(m.mins[1])  # keys collide
+    assert m.distinct_min_count == 2.0           # lengths resolve them
+    assert m.distinct_max_count == 1.0           # identical max dedups
+
+
+def test_byte_array_shared_prefix_same_length_distinct_repr():
+    # Same key, same length — only the repr tells them apart.
+    a = _bytes_meta(["aaaaaaaabb"], ["q"])
+    b = _bytes_meta(["aaaaaaaacc"], ["q"])
+    m = merge_column_metadata([a, b])
+    assert float(m.mins[0]) == float(m.mins[1])
+    assert float(m.min_lengths[0]) == float(m.min_lengths[1])
+    assert m.distinct_min_count == 2.0
+
+
+def test_byte_array_identical_values_across_files_count_once():
+    a = _bytes_meta(["hello", "world"], ["x", "y"])
+    b = _bytes_meta(["hello", "apple"], ["y", "z"])
+    m = merge_column_metadata([a, b])
+    assert m.distinct_min_count == 3.0  # {hello, world, apple}
+    assert m.distinct_max_count == 3.0  # {x, y, z}
+
+
+def test_merge_associative_and_fixed_point():
+    parts = [
+        _numeric_meta(mins=[1.0, 2.0], maxs=[5.0, 6.0]),
+        _numeric_meta(mins=[2.0, 3.0], maxs=[6.0, 7.0]),
+        _numeric_meta(mins=[1.0, 4.0], maxs=[7.0, 8.0]),
+    ]
+    flat = merge_column_metadata(parts)
+    nested = merge_column_metadata(
+        [merge_column_metadata(parts[:2]), parts[2]]
+    )
+    assert flat.distinct_min_count == nested.distinct_min_count
+    assert flat.distinct_max_count == nested.distinct_max_count
+    np.testing.assert_array_equal(flat.mins, nested.mins)
+    np.testing.assert_array_equal(flat.chunk_sizes, nested.chunk_sizes)
+    one = merge_column_metadata([parts[0]])
+    assert one is parts[0]
+
+
+def test_merge_rejects_mismatched_types():
+    a = _numeric_meta(mins=[1.0], maxs=[2.0])
+    b = _bytes_meta(["x"], ["y"], name="c")
+    with pytest.raises(ValueError):
+        merge_column_metadata([a, b])
+    with pytest.raises(ValueError):
+        merge_column_metadata([])
+
+
+def test_end_to_end_from_written_files(tmp_path):
+    # Two shards with overlapping row-group extrema, through the real
+    # writer/reader, including a string column with shared 8-byte prefixes.
+    rg = 64
+    strings0 = np.array(
+        ["prefix__alpha"] * rg + ["prefix__beta"] * rg
+    )
+    strings1 = np.array(
+        ["prefix__alpha"] * rg + ["prefix__gamma"] * rg
+    )
+    ints0 = np.concatenate([np.full(rg, 10), np.full(rg, 20)]).astype(np.int64)
+    ints1 = np.concatenate([np.full(rg, 10), np.full(rg, 30)]).astype(np.int64)
+    write_file(
+        str(tmp_path / "f0"), {"s": strings0, "i": ints0},
+        options=WriterOptions(row_group_size=rg),
+    )
+    write_file(
+        str(tmp_path / "f1"), {"s": strings1, "i": ints1},
+        options=WriterOptions(row_group_size=rg),
+    )
+    metas = {
+        name: [
+            column_metadata_from_footer(read_footer(str(tmp_path / f)), name)
+            for f in ("f0", "f1")
+        ]
+        for name in ("s", "i")
+    }
+    mi = merge_column_metadata(metas["i"])
+    # per-rg mins: f0 {10,20}, f1 {10,30} -> distinct {10,20,30}
+    assert mi.distinct_min_count == 3.0
+    assert mi.distinct_min_count == float(np.unique(np.concatenate(
+        [m.mins for m in metas["i"]]
+    )).size)
+    ms = merge_column_metadata(metas["s"])
+    # string mins per rg: {alpha, beta} + {alpha, gamma}; all share the
+    # 8-byte "prefix__" key, so key-only dedup would (wrongly) give 1.
+    assert float(np.unique(ms.mins).size) == 1
+    assert ms.distinct_min_count == 3.0

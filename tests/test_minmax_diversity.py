@@ -1,6 +1,9 @@
 """Unit + property tests for coupon-collector inversion (paper §5)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ndv import minmax_diversity as mm

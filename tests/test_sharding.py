@@ -1,6 +1,8 @@
 """Sharding rules, writer round-trips, columnar invariants (hypothesis)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.columnar import read_footer, write_file
