@@ -1,0 +1,20 @@
+"""Quick-mode switch for the benchmark harness.
+
+`benchmarks/run.py --quick` (the CI smoke job) sets ``NDV_BENCH_QUICK=1``;
+modules shrink their shapes through `pick()` so the whole suite exercises
+every code path in seconds instead of minutes. Numbers from a quick run
+characterize nothing — the mode exists to catch harness rot, not to
+measure.
+"""
+from __future__ import annotations
+
+import os
+
+
+def quick() -> bool:
+    return bool(os.environ.get("NDV_BENCH_QUICK"))
+
+
+def pick(full, tiny):
+    """`full` normally; `tiny` under --quick."""
+    return tiny if quick() else full

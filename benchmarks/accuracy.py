@@ -29,10 +29,11 @@ from repro.columnar.generator import (
     zipf_column,
 )
 from repro.columnar.writer import WriterOptions
+from benchmarks._quick import pick
 from repro.core import estimate_columns
 
-ROWS = 1 << 17
-RG = 8192
+ROWS = pick(1 << 17, 1 << 13)
+RG = pick(8192, 512)
 
 
 def _estimate_one(vals, mode, rg=RG, name="c"):
@@ -88,8 +89,9 @@ def coverage_sweep(seed: int = 0) -> List[dict]:
 def rowgroup_sweep(seed: int = 0) -> List[dict]:
     """Sorted + clustered error vs number of row groups (signal content)."""
     out = []
-    dom = int_domain(4000, seed=seed)
-    for rg_size in (32768, 8192, 2048, 512):
+    dom = int_domain(pick(4000, 400), seed=seed)
+    # Row-group sizes scale with ROWS: n_groups = 4, 16, 64, 256 either way.
+    for rg_size in (ROWS // 4, ROWS // 16, ROWS // 64, ROWS // 256):
         n_groups = ROWS // rg_size
         svals, struth = sorted_column(dom, ROWS, seed=seed + 1)
         cvals, ctruth = clustered_column(dom, ROWS, mean_run=64, seed=seed + 2)

@@ -15,18 +15,19 @@ import numpy as np
 from repro.columnar import DataReader, column_metadata_from_footer, read_footer, write_file
 from repro.columnar.generator import int_domain, uniform_column, zipf_column
 from repro.columnar.writer import WriterOptions
+from benchmarks._quick import pick
 from repro.core import estimate_columns
 from repro.core.baselines import cvm_ndv, exact_ndv, hll_ndv, sampling_ndv
 
-ROWS = 1 << 17
+ROWS = pick(1 << 17, 1 << 13)
 
 
 def run() -> List[tuple]:
-    dom = int_domain(20000, seed=1)
+    dom = int_domain(pick(20000, 2000), seed=1)
     vals, truth = zipf_column(dom, ROWS, s=1.1, seed=2)
     tmp = tempfile.mkdtemp()
     write_file(os.path.join(tmp, "f"), {"c": vals},
-               options=WriterOptions(row_group_size=8192))
+               options=WriterOptions(row_group_size=pick(8192, 512)))
     footer = read_footer(os.path.join(tmp, "f"))
     meta = column_metadata_from_footer(footer, "c")
     data_bytes = int(np.asarray(vals).nbytes)
@@ -52,11 +53,12 @@ def run() -> List[tuple]:
     rows.append(("baseline/hll_p12", (time.perf_counter()-t0)*1e6,
                  f"err={abs(h-truth)/truth:.4f};bytes_read={data_bytes}"))
 
+    sub = min(1 << 15, len(col))
     t0 = time.perf_counter()
-    c = cvm_ndv(col[: 1 << 15], buffer_size=4096)  # CVM is python-slow; subset
-    sub_truth = exact_ndv(col[: 1 << 15])
+    c = cvm_ndv(col[:sub], buffer_size=pick(4096, 512))  # CVM is python-slow; subset
+    sub_truth = exact_ndv(col[:sub])
     rows.append(("baseline/cvm_32k_rows", (time.perf_counter()-t0)*1e6,
-                 f"err={abs(c-sub_truth)/sub_truth:.4f};bytes_read={(1<<15)*8}"))
+                 f"err={abs(c-sub_truth)/sub_truth:.4f};bytes_read={sub*8}"))
 
     for frac in (0.01, 0.1):
         t0 = time.perf_counter()

@@ -16,10 +16,11 @@ import numpy as np
 from repro.columnar import column_metadata_from_footer, read_footer, write_file
 from repro.columnar.generator import int_domain, sorted_column, uniform_column, zipf_column
 from repro.columnar.writer import WriterOptions
+from benchmarks._quick import pick
 from repro.core import estimate_columns
 from repro.core.ndv.batch_memory import predict_batch_memory
 
-ROWS = 1 << 17
+ROWS = pick(1 << 17, 1 << 13)
 VALUE_LEN = 8  # int64
 
 
@@ -35,8 +36,8 @@ def _measure(vals: np.ndarray, batch_bytes: int) -> float:
 
 
 def run() -> List[tuple]:
-    batch_bytes = 64 * 1024
-    dom = int_domain(5000, seed=3)
+    batch_bytes = pick(64 * 1024, 4 * 1024)
+    dom = int_domain(pick(5000, 500), seed=3)
     cases = {
         "uniform": uniform_column(dom, ROWS, seed=4),
         "zipf": zipf_column(dom, ROWS, seed=5),
@@ -46,7 +47,7 @@ def run() -> List[tuple]:
     for name, (vals, truth) in cases.items():
         tmp = tempfile.mkdtemp()
         write_file(os.path.join(tmp, "f"), {"c": vals},
-                   options=WriterOptions(row_group_size=8192))
+                   options=WriterOptions(row_group_size=pick(8192, 512)))
         meta = column_metadata_from_footer(read_footer(os.path.join(tmp, "f")), "c")
         t0 = time.perf_counter()
         est = estimate_columns([meta], mode="improved")[0]

@@ -23,15 +23,16 @@ from typing import List
 
 import numpy as np
 
+from benchmarks._quick import pick
 from repro.catalog import BatchPacker, StatsCatalog
 from repro.core.ndv.estimator import estimate_batch
 from repro.core.ndv.types import ColumnMetadata, PhysicalType
 from repro.data.pipeline import synthesize_token_dataset
 
-NUM_SHARDS = 6
-ROWS_PER_SHARD = 1 << 12
-ROW_GROUP = 512
-MAX_R = 12
+NUM_SHARDS = pick(6, 3)
+ROWS_PER_SHARD = pick(1 << 12, 1 << 10)
+ROW_GROUP = pick(512, 256)
+MAX_R = pick(12, 6)
 
 
 def _write_shard(root: str, index: int) -> None:

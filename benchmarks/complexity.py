@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._quick import pick
 from repro.core.ndv import dict_inversion, distribution, minmax_diversity
 from repro.core.ndv.estimator import estimate_batch
 from repro.core.ndv.types import ColumnBatch
@@ -53,14 +54,14 @@ def _timeit(fn, *args, iters=5) -> float:
 
 def run() -> List[tuple]:
     rows: List[tuple] = []
-    b = 256
-    for r in (16, 64, 256, 1024):
+    b = pick(256, 32)
+    for r in pick((16, 64, 256, 1024), (16, 64)):
         batch = _fake_batch(b, r)
         us = _timeit(lambda bt: estimate_batch(bt, mode="paper"), batch)
         rows.append((f"complexity/estimate_batch_r{r}", us,
                      f"cols={b};row_groups={r};us_per_col={us/b:.2f}"))
     # O(1)-in-n inversion (flat batched solves)
-    for m in (1 << 10, 1 << 14, 1 << 18):
+    for m in pick((1 << 10, 1 << 14, 1 << 18), (1 << 10,)):
         s = jnp.full((m,), 1e5, jnp.float32)
         rws = jnp.full((m,), 1e6, jnp.float32)
         z = jnp.zeros((m,), jnp.float32)
@@ -72,7 +73,7 @@ def run() -> List[tuple]:
         rows.append((f"complexity/dict_newton_m{m}", us,
                      f"solves={m};ns_per_solve={us*1e3/m:.1f}"))
     # detector O(n)
-    for r in (64, 512, 4096):
+    for r in pick((64, 512, 4096), (64, 512)):
         batch = _fake_batch(64, r)
         us = _timeit(
             lambda mn, mx, v: distribution.detect_distribution(mn, mx, v),
@@ -80,8 +81,9 @@ def run() -> List[tuple]:
         )
         rows.append((f"complexity/detector_r{r}", us, f"cols=64;row_groups={r}"))
     # fleet throughput
-    batch = _fake_batch(4096, 64)
+    fleet_b = pick(4096, 256)
+    batch = _fake_batch(fleet_b, 64)
     us = _timeit(lambda bt: estimate_batch(bt, mode="improved"), batch)
-    rows.append(("complexity/fleet_4096cols", us,
-                 f"cols_per_s={4096/(us/1e6):.0f}"))
+    rows.append((f"complexity/fleet_{fleet_b}cols", us,
+                 f"cols_per_s={fleet_b/(us/1e6):.0f}"))
     return rows

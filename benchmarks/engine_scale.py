@@ -1,0 +1,87 @@
+"""Engine-strategy throughput: local vs sharded vs chunked over batch width.
+
+The estimators are embarrassingly parallel over columns, so the interesting
+axis is B — how wide a merged column set one `estimate()` call can serve.
+For each width (including one wider than the chunk budget) the three
+`EstimationEngine` strategies run over identical packed batches; `derived`
+records columns/second plus the resolved shard count / chunk count so a
+single-device CPU run (shards=1) is distinguishable from a real mesh.
+
+Metadata is synthesized directly (no file IO): this measures the execution
+seam, not ingestion.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import numpy as np
+
+from benchmarks._quick import pick
+from repro.core.ndv.types import ColumnMetadata, PhysicalType
+from repro.engine import EngineConfig, EstimationEngine
+
+ROW_GROUPS = 8
+
+
+def _columns(b: int, seed: int = 0) -> List[ColumnMetadata]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(b):
+        r = ROW_GROUPS
+        ndv = float(rng.integers(16, 1 << 16))
+        rows = np.full(r, 8192.0)
+        bits = max(np.ceil(np.log2(ndv)), 1.0)
+        mins = np.sort(rng.uniform(0, 1e6, r))
+        out.append(ColumnMetadata(
+            chunk_sizes=np.full(r, ndv * 8.0 + 8192.0 * bits / 8.0),
+            chunk_rows=rows,
+            chunk_nulls=np.zeros(r),
+            chunk_dict_encoded=np.ones(r, bool),
+            mins=mins,
+            maxs=mins + rng.uniform(1e4, 1e5, r),
+            min_lengths=np.full(r, 8.0),
+            max_lengths=np.full(r, 8.0),
+            distinct_min_count=float(r - 1),
+            distinct_max_count=float(r),
+            physical_type=PhysicalType.INT64,
+            column_name=f"col_{i}",
+        ))
+    return out
+
+
+def _timeit(fn, iters=3) -> float:
+    jax.block_until_ready(fn())  # warm: trace + compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[tuple]:
+    # One width beyond the chunk budget so the chunked path actually splits.
+    budget = pick(1024, 64)
+    widths = pick((512, 2048, 8192), (32, 128, 256))
+    rows: List[tuple] = []
+    for width in widths:
+        cols = _columns(width)
+        for strategy in ("local", "sharded", "chunked"):
+            eng = EstimationEngine(
+                EngineConfig(strategy=strategy, max_batch=budget)
+            )
+            batch = eng.make_packer().pack(cols)
+            resolved = eng.resolve_strategy(batch.batch)
+            us = _timeit(
+                lambda e=eng, bt=batch: e.estimate(bt, mode="improved").ndv
+            )
+            chunks = (
+                -(-batch.batch // budget) if resolved == "chunked" else 1
+            )
+            rows.append((
+                f"engine_scale/{strategy}/B{width}", us,
+                f"cols_per_s={width / (us / 1e6):.0f};"
+                f"packed_B={batch.batch};shards={eng.shard_count};"
+                f"chunks={chunks};budget={budget}",
+            ))
+    return rows

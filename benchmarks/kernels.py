@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from benchmarks._quick import pick
 from repro.kernels import ops
 
 
@@ -29,7 +30,7 @@ def run() -> List[tuple]:
     rng = np.random.default_rng(0)
     rows: List[tuple] = []
 
-    m = 1 << 16
+    m = pick(1 << 16, 1 << 10)
     ndv = rng.integers(1, 1_000_000, m).astype(np.float32)
     rws = ndv * 4
     z = np.zeros(m, np.float32)
@@ -40,12 +41,12 @@ def run() -> List[tuple]:
 
     us_ref = _timeit(lambda *a: ops.dict_newton(*a, backend="ref"), *args)
     rows.append((
-        "kernels/dict_newton_ref_64k", us_ref,
+        f"kernels/dict_newton_ref_{m}", us_ref,
         f"solves_per_s={m/(us_ref/1e6):.0f};hbm_bytes={m*20}",
     ))
     us_pal = _timeit(lambda *a: ops.dict_newton(*a), *args)
     rows.append((
-        "kernels/dict_newton_pallas_interp_64k", us_pal,
+        f"kernels/dict_newton_pallas_interp_{m}", us_pal,
         f"interpret_overhead_x={us_pal/us_ref:.1f}",
     ))
 
@@ -54,10 +55,10 @@ def run() -> List[tuple]:
     obs = (D * (1 - np.exp(-n / D))).astype(np.float32)
     us = _timeit(lambda a, b: ops.coupon_newton(a, b, backend="ref"),
                  jnp.asarray(obs), jnp.asarray(n))
-    rows.append(("kernels/coupon_newton_ref_64k", us,
+    rows.append((f"kernels/coupon_newton_ref_{m}", us,
                  f"solves_per_s={m/(us/1e6):.0f}"))
 
-    b, r = 1024, 256
+    b, r = pick((1024, 256), (128, 128))
     mins = np.sort(rng.normal(size=(b, r)).astype(np.float32), 1)
     maxs = mins + 0.2
     valid = np.ones((b, r), bool)
@@ -65,7 +66,7 @@ def run() -> List[tuple]:
         lambda a, c, d: ops.minmax_scan(a, c, d, backend="ref"),
         jnp.asarray(mins), jnp.asarray(maxs), jnp.asarray(valid),
     )
-    rows.append(("kernels/minmax_scan_ref_1024x256", us,
+    rows.append((f"kernels/minmax_scan_ref_{b}x{r}", us,
                  f"cols_per_s={b/(us/1e6):.0f};hbm_bytes={b*r*12}"))
 
     keys = rng.integers(0, 2**32, size=(b, r), dtype=np.uint32)
@@ -73,6 +74,6 @@ def run() -> List[tuple]:
         lambda a, c: ops.hll_fold(a, c, p=8, backend="ref"),
         jnp.asarray(keys), jnp.asarray(valid),
     )
-    rows.append(("kernels/hll_fold_ref_1024x256", us,
+    rows.append((f"kernels/hll_fold_ref_{b}x{r}", us,
                  f"keys_per_s={b*r/(us/1e6):.0f}"))
     return rows

@@ -7,22 +7,37 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   batch_memory.py — §8 batch dictionary prediction vs measured
   catalog_scale.py— StatsCatalog cold/warm/incremental latency + retraces
   complexity.py   — §10.2 single-pass complexity table
+  engine_scale.py — EstimationEngine local/sharded/chunked throughput
   kernels.py      — Pallas kernel suite throughput
   warehouse.py    — TPC-H-shaped lineitem accuracy via the catalog (§10.1)
+
+``--quick`` runs every module at tiny shapes (CI smoke: exercises the
+harness end to end in seconds; the numbers mean nothing).
 """
 from __future__ import annotations
 
+import os
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--quick" in argv:
+        argv.remove("--quick")
+        # Before importing any benchmark module: they read the flag at
+        # module/call scope through benchmarks._quick.
+        os.environ["NDV_BENCH_QUICK"] = "1"
+    if argv:
+        raise SystemExit(f"unknown arguments: {argv}")
+
     from benchmarks import (
         accuracy,
         baselines,
         batch_memory,
         catalog_scale,
         complexity,
+        engine_scale,
         kernels,
         warehouse,
     )
@@ -31,6 +46,7 @@ def main() -> None:
         ("accuracy", accuracy),
         ("warehouse", warehouse),
         ("catalog_scale", catalog_scale),
+        ("engine_scale", engine_scale),
         ("baselines", baselines),
         ("batch_memory", batch_memory),
         ("complexity", complexity),

@@ -15,21 +15,24 @@ from typing import List
 
 import numpy as np
 
+from benchmarks._quick import pick
 from repro.catalog import StatsCatalog
 from repro.columnar.datasets import lineitem
 from repro.columnar.writer import WriterOptions, write_file
+from repro.engine import EngineConfig, EstimationEngine
 
 NUM_SHARDS = 2
 
 
 def run() -> List[tuple]:
-    shards = [lineitem(rows=1 << 16, seed=s) for s in range(NUM_SHARDS)]
+    shard_rows = pick(1 << 16, 1 << 12)
+    shards = [lineitem(rows=shard_rows, seed=s) for s in range(NUM_SHARDS)]
     tmp = tempfile.mkdtemp()
     for i, data in enumerate(shards):
         write_file(
             os.path.join(tmp, f"lineitem_{i:03d}"),
             {k: v for k, (v, _) in data.items()},
-            options=WriterOptions(row_group_size=8192),
+            options=WriterOptions(row_group_size=pick(8192, 512)),
         )
     truth = {
         name: int(
@@ -38,18 +41,23 @@ def run() -> List[tuple]:
         for name in shards[0]
     }
 
-    catalog = StatsCatalog(tmp)
+    engine = EstimationEngine(EngineConfig())
+    catalog = StatsCatalog(tmp, engine=engine)
     rows: List[tuple] = []
     for mode in ("paper", "improved"):
         t0 = time.perf_counter()
         ests = catalog.estimate(mode=mode)
         us = (time.perf_counter() - t0) * 1e6 / max(len(ests), 1)
+        # Resolve against the packed batch width (B after bucketing), which
+        # is what estimate() actually dispatched on — not the column count.
+        packed_b = catalog.packer.shape_for(len(ests), 1)[0]
+        strategy = engine.resolve_strategy(packed_b)
         for name, e in ests.items():
             err = abs(e.ndv - truth[name]) / max(truth[name], 1)
             rows.append((
                 f"warehouse/{mode}/{name}", us,
                 f"est={e.ndv:.0f};true={truth[name]};err={err:.4f};"
                 f"layout={e.layout.name};lb={int(e.is_lower_bound)};"
-                f"files={catalog.num_files}",
+                f"files={catalog.num_files};engine={strategy}",
             ))
     return rows

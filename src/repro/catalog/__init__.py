@@ -25,14 +25,20 @@ estimates and memory plans":
               per dataset shape. Padding lanes are masked out and never
               affect estimates.
   caching     `StatsCatalog` — packed batches are cached per fingerprint
-              set, estimates per (fingerprint set, mode, schema bounds).
-              Warm calls re-pack nothing and re-trace nothing; `update()`
-              ingests only new/changed files and merges them into the
-              existing per-column view instead of re-reading the fleet.
+              set, estimates per (fingerprint set, mode, schema bounds,
+              engine config). Warm calls re-pack nothing and re-trace
+              nothing; `update()` ingests only new/changed files and merges
+              them into the existing per-column view instead of re-reading
+              the fleet; `save_cache()`/`load_cache()` spill estimates to a
+              JSON file next to the dataset so restarts serve warm.
+  execution   estimation itself runs through an injected
+              `repro.engine.EstimationEngine` (local / sharded / chunked
+              behind one config) — the catalog never calls the jit'd
+              `estimate_batch` directly.
 
 Everything downstream (data/pipeline planning, NDVPlanner, benchmarks, and
-the future sharded-estimation / async-ingestion / stats-serving work) talks
-to this package instead of touching footers directly.
+the future async-ingestion / stats-serving work) talks to this package
+instead of touching footers directly.
 """
 from repro.catalog.catalog import CatalogStats, FileEntry, StatsCatalog  # noqa: F401
 from repro.catalog.merge import merge_column_metadata  # noqa: F401

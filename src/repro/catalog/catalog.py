@@ -7,14 +7,21 @@ The catalog's contract (see the package docstring for the design):
     additions merge into the existing view (O(new files)); any rewrite or
     removal triggers a full re-merge.
   * `estimate()` packs the merged view through the bucketing `BatchPacker`
-    and runs the jit'd `estimate_batch`. Packed batches are cached per
-    fingerprint set, estimates per (fingerprint set, mode, schema bounds) —
-    a warm call performs zero packing and zero tracing, just a dict hit.
+    and executes through an injected `EstimationEngine` (local / sharded /
+    chunked — see `repro.engine`). Packed batches are cached per
+    (fingerprint set, packer), estimates per (fingerprint set, mode,
+    schema bounds, engine config) — a warm call performs zero packing and
+    zero tracing, just a dict hit, and two differently-configured engines
+    never share an entry.
+  * `save_cache()` / `load_cache()` spill the estimate cache to a JSON file
+    next to the dataset so restarts serve warm.
   * `plan()` turns estimates into `NDVPlanner` memory plans.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 from collections import OrderedDict
 from typing import Dict, List, NamedTuple, Optional, Sequence, Union
 
@@ -24,8 +31,11 @@ import numpy as np
 from repro.catalog.merge import merge_column_metadata
 from repro.catalog.packer import BatchPacker
 from repro.catalog.source import MetadataSource, PQLiteMetadataSource
-from repro.core.ndv.estimator import estimate_batch, estimates_from_batch
-from repro.core.ndv.types import ColumnBatch, ColumnMetadata, NDVEstimate
+from repro.core.ndv.estimator import estimates_from_batch
+from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimate
+
+CACHE_FILE_NAME = ".ndv_estimate_cache.json"
+_CACHE_VERSION = 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +77,16 @@ class StatsCatalog:
         source: Union[MetadataSource, str],
         *,
         packer: Optional[BatchPacker] = None,
+        engine=None,
         max_cache_entries: int = 64,
     ):
+        from repro import engine as engine_mod  # local: avoid import cycle
+
         if isinstance(source, str):
             source = PQLiteMetadataSource(source)
         self.source = source
-        self.packer = packer or BatchPacker()
+        self.engine = engine or engine_mod.default_engine()
+        self.packer = packer or self.engine.make_packer()
         self.stats = CatalogStats()
         self._entries: "OrderedDict[str, FileEntry]" = OrderedDict()
         self._merged: Optional[Dict[str, ColumnMetadata]] = None
@@ -241,6 +255,7 @@ class StatsCatalog:
         *,
         mode: str = "paper",
         schema_bounds: Optional[Dict[str, float]] = None,
+        engine=None,
     ) -> Dict[str, NDVEstimate]:
         """Dataset-level NDV estimates for every column (cached).
 
@@ -248,13 +263,17 @@ class StatsCatalog:
           mode: "paper" or "improved" — threaded to `estimate_batch`.
           schema_bounds: optional column -> upper-bound NDV (Eq 14-15 family
             of schema knowledge, e.g. an enum's domain size).
+          engine: optional `EstimationEngine` override for this call. The
+            cache key includes the engine's config, so calls through
+            differently-configured engines are cached independently.
         """
         self._ensure_scanned()
+        engine = engine or self.engine
         fp_key = self.fingerprint_key()
         sb_key = (
             tuple(sorted(schema_bounds.items())) if schema_bounds else None
         )
-        key = (fp_key, mode, sb_key)
+        key = (fp_key, mode, sb_key, engine.cache_key)
         cached = self._estimate_cache.get(key)
         if cached is not None:
             self.stats.estimate_cache_hits += 1
@@ -272,7 +291,7 @@ class StatsCatalog:
                 if name in schema_bounds:
                     arr[i] = float(schema_bounds[name])
             sb = jnp.asarray(arr)
-        out = estimate_batch(batch, sb, mode=mode)
+        out = engine.estimate(batch, sb, mode=mode)
         ests = estimates_from_batch(out, batch, self._column_names)
         result = {e.column_name: e for e in ests}
         self._cache_put(self._estimate_cache, key, result)
@@ -281,10 +300,104 @@ class StatsCatalog:
     def estimate_column(self, name: str, *, mode: str = "paper") -> NDVEstimate:
         return self.estimate(mode=mode)[name]
 
+    # -- estimate-cache persistence ------------------------------------------
+
+    def _default_cache_path(self) -> str:
+        root = getattr(self.source, "root", None)
+        if root is None:
+            raise ValueError(
+                "this catalog's source has no filesystem root; pass an "
+                "explicit path to save_cache()/load_cache()"
+            )
+        return os.path.join(root, CACHE_FILE_NAME)
+
+    @staticmethod
+    def _key_to_json(key: tuple) -> dict:
+        fp_key, mode, sb_key, engine_key = key
+        return {
+            "files": sorted(fp_key),
+            "mode": mode,
+            "schema_bounds": (
+                [[n, v] for n, v in sb_key] if sb_key is not None else None
+            ),
+            "engine": list(engine_key),
+        }
+
+    @staticmethod
+    def _key_from_json(d: dict) -> tuple:
+        sb = d["schema_bounds"]
+        return (
+            frozenset(d["files"]),
+            d["mode"],
+            tuple((n, v) for n, v in sb) if sb is not None else None,
+            tuple(d["engine"]),
+        )
+
+    def save_cache(self, path: Optional[str] = None) -> str:
+        """Spill the estimate cache to a JSON file next to the dataset.
+
+        Values survive a round trip exactly: floats serialize at full
+        double precision, so a warm restart serves bit-identical
+        `NDVEstimate`s. Returns the path written.
+        """
+        path = path or self._default_cache_path()
+        entries = []
+        for key, ests in self._estimate_cache.items():
+            entries.append({
+                "key": self._key_to_json(key),
+                "estimates": {
+                    name: {
+                        **{
+                            f.name: getattr(e, f.name)
+                            for f in dataclasses.fields(NDVEstimate)
+                            if f.name != "layout"
+                        },
+                        "layout": int(e.layout),
+                    }
+                    for name, e in ests.items()
+                },
+            })
+        payload = {"version": _CACHE_VERSION, "entries": entries}
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f)
+        os.replace(tmp, path)
+        return path
+
+    def load_cache(self, path: Optional[str] = None) -> int:
+        """Load spilled estimates; returns the number of entries restored.
+
+        Missing file is not an error (cold start). Entries whose
+        fingerprint set no longer matches the live dataset are still
+        loaded — the fingerprint set in the key makes stale entries
+        unreachable, and LRU eviction discards them.
+        """
+        path = path or self._default_cache_path()
+        if not os.path.exists(path):
+            return 0
+        with open(path) as f:
+            payload = json.load(f)
+        if payload.get("version") != _CACHE_VERSION:
+            return 0
+        loaded = 0
+        for entry in payload["entries"]:
+            key = self._key_from_json(entry["key"])
+            ests = {
+                name: NDVEstimate(
+                    **{**d, "layout": Layout(d["layout"])}
+                )
+                for name, d in entry["estimates"].items()
+            }
+            self._cache_put(self._estimate_cache, key, ests)
+            loaded += 1
+        return loaded
+
     # -- planning ------------------------------------------------------------
 
-    def plan(self, planner=None, *, mode: str = "paper"):
+    def plan(self, planner=None, *, mode: str = "paper", engine=None):
         """Memory plans for every column via `NDVPlanner.plan_catalog`."""
         from repro.core.planner import NDVPlanner
 
-        return (planner or NDVPlanner()).plan_catalog(self, mode=mode)
+        return (planner or NDVPlanner()).plan_catalog(
+            self, mode=mode, engine=engine
+        )

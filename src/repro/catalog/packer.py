@@ -52,12 +52,16 @@ class BatchPacker:
         historical exact-shape contract.
       row_floor / col_floor: minimum bucketed sizes, so tiny datasets share
         one trace instead of exercising 1/2/4-wide shapes separately.
+      col_multiple: round B up to a multiple of this after bucketing, so a
+        sharded engine can split the batch evenly on the B axis. The extra
+        lanes are ordinary masked padding (`valid=False`, `n_groups=0`).
     """
 
     bucket_rows: bool = True
     bucket_cols: bool = True
     row_floor: int = 8
     col_floor: int = 1
+    col_multiple: int = 1
 
     def shape_for(self, num_columns: int, max_groups: int) -> tuple:
         b = (
@@ -65,6 +69,8 @@ class BatchPacker:
             if self.bucket_cols
             else max(int(num_columns), 1)
         )
+        m = max(int(self.col_multiple), 1)
+        b = -(-b // m) * m
         r = (
             bucket_size(max_groups, self.row_floor)
             if self.bucket_rows

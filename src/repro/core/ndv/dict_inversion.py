@@ -78,6 +78,35 @@ class DictInversionResult(NamedTuple):
     likely_fallback: jnp.ndarray  # (B,) bool — Eq 5 fired; treat as lower bound
 
 
+def fallback_flags(
+    size: jnp.ndarray,
+    num_values: jnp.ndarray,
+    null_count: jnp.ndarray,
+    mean_len: jnp.ndarray,
+) -> jnp.ndarray:
+    """Eq 5 plain-encoding fallback indicator (closed form, solver-free).
+
+    The first indicator uses the solver's degenerate-high-NDV interpretation
+    S/len (the converged root absorbs index overhead and sits at
+    (1 - bits/(8 len)) * rows for plain-encoded chunks, which would miss the
+    0.9 threshold for narrow fixed-width types).
+    """
+    size = jnp.asarray(size, jnp.float32)
+    non_null = jnp.maximum(
+        jnp.asarray(num_values, jnp.float32)
+        - jnp.asarray(null_count, jnp.float32),
+        0.0,
+    )
+    mean_len = jnp.maximum(jnp.asarray(mean_len, jnp.float32), 1e-6)
+    ndv_ratio = (size / mean_len) / jnp.maximum(non_null, 1.0)
+    size_ratio = size / jnp.maximum(non_null * mean_len, 1e-6)
+    return (
+        (ndv_ratio >= FALLBACK_NDV_RATIO)
+        & (size_ratio >= FALLBACK_SIZE_LO)
+        & (size_ratio <= FALLBACK_SIZE_HI)
+    )
+
+
 def invert_dict_size(
     size: jnp.ndarray,
     num_values: jnp.ndarray,
@@ -86,6 +115,7 @@ def invert_dict_size(
     *,
     iters: int = NEWTON_ITERS,
     tol: float = NEWTON_TOL,
+    backend: str = "auto",
 ) -> DictInversionResult:
     """Solve Eq 2 for ndv, batched over columns.
 
@@ -94,10 +124,38 @@ def invert_dict_size(
       num_values: (B,) row count N.
       null_count: (B,) null count.
       mean_len: (B,) mean value byte length (Eq 4 / schema width).
+      backend: execution route. "auto"/"ref" solve here in jnp; "pallas"
+        (or "auto" on TPU) routes the Newton solve through the
+        `repro.kernels` Pallas kernel, with the Eq 5 flags and fixed
+        iteration count filled in from the closed forms.
 
     Returns:
       DictInversionResult with ndv clamped to [1, N - nulls].
     """
+    from repro.kernels import ops  # local: kernels.ref imports this module
+
+    if ops.use_pallas(backend):
+        shape = jnp.shape(size)
+        mean_b = jnp.broadcast_to(jnp.asarray(mean_len, jnp.float32), shape)
+        flat = lambda x: jnp.asarray(x, jnp.float32).reshape(-1)  # noqa: E731
+        ndv = ops.dict_newton(
+            flat(size), flat(num_values), flat(null_count), flat(mean_b),
+            backend="pallas",
+        ).reshape(shape)
+        # The kernel is fixed-iteration and branch-free: it always runs
+        # DICT_ITERS steps and converges by construction on Eq 2's
+        # monotone residual.
+        from repro.kernels.newton_ndv import DICT_ITERS
+
+        return DictInversionResult(
+            ndv=ndv,
+            iterations=jnp.full(shape, DICT_ITERS, jnp.int32),
+            converged=jnp.ones(shape, bool),
+            likely_fallback=fallback_flags(
+                size, num_values, null_count, mean_len
+            ),
+        )
+
     size = jnp.asarray(size, jnp.float32)
     non_null = jnp.maximum(
         jnp.asarray(num_values, jnp.float32) - jnp.asarray(null_count, jnp.float32),
@@ -143,18 +201,7 @@ def invert_dict_size(
     )
     ndv = jnp.clip(ndv, 1.0, jnp.maximum(non_null, 1.0))
 
-    # Plain-encoding fallback detection (Eq 5). The first indicator uses
-    # the solver's degenerate-high-NDV interpretation S/len (the converged
-    # root absorbs index overhead and sits at (1 - bits/(8 len)) * rows for
-    # plain-encoded chunks, which would miss the 0.9 threshold for narrow
-    # fixed-width types).
-    ndv_ratio = (size / mean_len) / jnp.maximum(non_null, 1.0)
-    size_ratio = size / jnp.maximum(non_null * mean_len, 1e-6)
-    likely_fallback = (
-        (ndv_ratio >= FALLBACK_NDV_RATIO)
-        & (size_ratio >= FALLBACK_SIZE_LO)
-        & (size_ratio <= FALLBACK_SIZE_HI)
-    )
+    likely_fallback = fallback_flags(size, num_values, null_count, mean_len)
     return DictInversionResult(
         ndv=ndv,
         iterations=iters_used,

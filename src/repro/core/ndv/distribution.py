@@ -43,12 +43,17 @@ def detect_distribution(
     mins: jnp.ndarray,
     maxs: jnp.ndarray,
     valid: jnp.ndarray,
+    *,
+    backend: str = "auto",
 ) -> DistributionMetrics:
     """Compute Eq 10-12 metrics and classify (§6.2), batched.
 
     Args:
       mins / maxs: (B, R) per-row-group extrema (float key space).
       valid: (B, R) bool mask; row groups are packed to the left.
+      backend: "auto"/"ref" compute the reductions here in jnp; "pallas"
+        (or "auto" on TPU) takes them from the `minmax_scan` kernel. The
+        ratio/classification tail is shared.
 
     Returns:
       DistributionMetrics with int32 layout codes from `Layout`.
@@ -56,25 +61,51 @@ def detect_distribution(
     mins = jnp.asarray(mins, jnp.float32)
     maxs = jnp.asarray(maxs, jnp.float32)
     valid = jnp.asarray(valid, bool)
-    n = jnp.sum(valid, axis=-1).astype(jnp.float32)  # (B,)
 
-    big = jnp.float32(3.4e38)
-    gmin = jnp.min(jnp.where(valid, mins, big), axis=-1)
-    gmax = jnp.max(jnp.where(valid, maxs, -big), axis=-1)
+    from repro.kernels import ops  # local: kernels.ref imports this package
+
+    if ops.use_pallas(backend):
+        mm = ops.minmax_scan(mins, maxs, valid, backend="pallas")
+        n = mm.n_valid
+        gmin, gmax = mm.gmin, mm.gmax
+        overlap_sum = mm.overlap_sum
+        sign_changes = mm.sign_changes
+        # Row groups are packed to the left, so "any valid consecutive
+        # pair" is exactly n >= 2.
+        any_pairs = n >= 2.0
+    else:
+        n = jnp.sum(valid, axis=-1).astype(jnp.float32)  # (B,)
+
+        big = jnp.float32(3.4e38)
+        gmin = jnp.min(jnp.where(valid, mins, big), axis=-1)
+        gmax = jnp.max(jnp.where(valid, maxs, -big), axis=-1)
+
+        # Consecutive-pair overlap (Eq 10), masked to valid pairs.
+        pair_valid = valid[:, :-1] & valid[:, 1:]
+        lo = jnp.maximum(mins[:, :-1], mins[:, 1:])
+        hi = jnp.minimum(maxs[:, :-1], maxs[:, 1:])
+        overlap = jnp.where(pair_valid, jnp.maximum(hi - lo, 0.0), 0.0)
+        overlap_sum = jnp.sum(overlap, axis=-1)
+
+        # Midpoint monotonicity (Eq 12).
+        mid = (mins + maxs) * 0.5
+        d = mid[:, 1:] - mid[:, :-1]                  # (B, R-1)
+        d = jnp.where(pair_valid, d, 0.0)
+        sgn = jnp.sign(d)
+        # Sign changes between consecutive non-zero deltas, masked.
+        step_valid = pair_valid[:, :-1] & pair_valid[:, 1:]
+        changes = jnp.where(
+            step_valid & (sgn[:, :-1] * sgn[:, 1:] < 0), 1.0, 0.0
+        )
+        sign_changes = jnp.sum(changes, axis=-1)
+        any_pairs = jnp.sum(pair_valid, axis=-1) > 0
+
     total_span = jnp.maximum(gmax - gmin, 0.0)
-
-    # Consecutive-pair overlap (Eq 10), masked to pairs where both are valid.
-    pair_valid = valid[:, :-1] & valid[:, 1:]
-    lo = jnp.maximum(mins[:, :-1], mins[:, 1:])
-    hi = jnp.minimum(maxs[:, :-1], maxs[:, 1:])
-    overlap = jnp.where(pair_valid, jnp.maximum(hi - lo, 0.0), 0.0)
-    overlap_sum = jnp.sum(overlap, axis=-1)
 
     # Degenerate spans (constant column / single row group): define the
     # overlap ratio as 1 when consecutive ranges coincide (full overlap) —
     # a constant column IS maximally well-spread.
     span_safe = jnp.maximum(total_span, 1e-30)
-    any_pairs = jnp.sum(pair_valid, axis=-1) > 0
     degenerate = (total_span <= 0.0) & any_pairs
     overlap_ratio = jnp.where(
         degenerate, 1.0, jnp.clip(overlap_sum / span_safe, 0.0, None)
@@ -82,17 +113,6 @@ def detect_distribution(
     # (ratio can legitimately exceed 1 for heavy overlap with many groups;
     #  classification only needs thresholds, keep the raw value.)
 
-    # Midpoint monotonicity (Eq 12).
-    mid = (mins + maxs) * 0.5
-    d = mid[:, 1:] - mid[:, :-1]                      # (B, R-1)
-    d = jnp.where(pair_valid, d, 0.0)
-    sgn = jnp.sign(d)
-    # Sign changes between consecutive non-zero deltas, masked.
-    step_valid = pair_valid[:, :-1] & pair_valid[:, 1:]
-    changes = jnp.where(
-        step_valid & (sgn[:, :-1] * sgn[:, 1:] < 0), 1.0, 0.0
-    )
-    sign_changes = jnp.sum(changes, axis=-1)
     denom = jnp.maximum(n - 2.0, 1.0)
     monotonicity = jnp.where(
         n >= 3.0, 1.0 - sign_changes / denom, 1.0

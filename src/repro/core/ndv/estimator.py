@@ -1,8 +1,11 @@
 """Top-level zero-cost NDV estimator (paper §3-§7 end to end).
 
-`estimate_batch` is the single jit-compiled entry point used by the data
-pipeline, the planner, and the benchmarks: metadata arrays in, estimates out.
-`estimate_columns` is the convenience object API over `ColumnMetadata`.
+`estimate_batch` is the pure jit-compiled per-shard kernel: metadata arrays
+in, estimates out, no knowledge of devices or batch budgets. Execution —
+local vs sharded vs chunked, and the kernel backend knob — is owned by
+`repro.engine.EstimationEngine`, which every consumer (catalog, pipeline,
+planner, benchmarks) routes through. `estimate_columns` is the convenience
+object API over `ColumnMetadata`, delegating to the default engine.
 
 Pipeline per column (all batched over B columns x R chunks):
   1. distribution detection from (min_i, max_i) patterns         (§6)
@@ -48,6 +51,8 @@ class BatchEstimates(NamedTuple):
 
 def dict_estimate_column(
     batch: ColumnBatch,
+    *,
+    backend: str = "auto",
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """§4 per-chunk inversion -> per-column (ndv_dict, likely_fallback, iters).
 
@@ -61,6 +66,7 @@ def dict_estimate_column(
         batch.chunk_rows,
         batch.chunk_nulls,
         batch.mean_len[:, None],
+        backend=backend,
     )
     usable = batch.valid & batch.chunk_dict_encoded & ~inv.likely_fallback
     neg = jnp.float32(-1.0)
@@ -76,34 +82,50 @@ def dict_estimate_column(
     return ndv_col, fallback_col, iters
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
+@functools.partial(jax.jit, static_argnames=("mode", "backend"))
 def estimate_batch(
     batch: ColumnBatch,
     schema_bound: Optional[jnp.ndarray] = None,
     *,
     mode: str = "paper",
+    backend: str = "auto",
 ) -> BatchEstimates:
     """Vectorized zero-cost NDV estimation over a ColumnBatch.
+
+    This is the pure per-shard kernel: the `repro.engine` package is the
+    public path onto it and owns sharding/chunking of the B axis.
 
     Args:
       mode: "paper" — faithful reproduction (per-chunk max + Eq 13 hybrid);
             "improved" — beyond-paper layout-aware aggregation
             (coverage-corrected mean / disjoint-sum routing, see improved.py).
+      backend: `repro.kernels.ops` execution knob, threaded through the
+        engine config. "auto" = fastest correct path per platform (Pallas
+        kernels on TPU, jnp reference elsewhere); "pallas"/"ref" force one.
     """
     # --- §6: distribution detection --------------------------------------
-    metrics = distribution.detect_distribution(batch.mins, batch.maxs, batch.valid)
+    metrics = distribution.detect_distribution(
+        batch.mins, batch.maxs, batch.valid, backend=backend
+    )
 
     # --- §4: dictionary size inversion (per chunk -> column aggregate) ----
     if mode == "improved":
-        imp = improved.improved_dict_estimate(batch, metrics.overlap_ratio)
+        imp = improved.improved_dict_estimate(
+            batch, metrics.overlap_ratio, backend=backend
+        )
         ndv_dict, likely_fallback = imp.ndv, imp.likely_fallback
-        _, _, dict_iters = dict_estimate_column(batch)
+        _, _, dict_iters = dict_estimate_column(batch, backend=backend)
     else:
-        ndv_dict, likely_fallback, dict_iters = dict_estimate_column(batch)
+        ndv_dict, likely_fallback, dict_iters = dict_estimate_column(
+            batch, backend=backend
+        )
 
     # --- §5: min/max diversity --------------------------------------------
     mm = minmax_diversity.estimate_minmax_diversity(
-        batch.m_min, batch.m_max, batch.n_groups.astype(jnp.float32)
+        batch.m_min,
+        batch.m_max,
+        batch.n_groups.astype(jnp.float32),
+        backend=backend,
     )
 
     # --- §7: combine -------------------------------------------------------
@@ -181,29 +203,26 @@ def estimate_columns(
     schema_bounds: Optional[Sequence[float]] = None,
     *,
     mode: str = "paper",
+    engine=None,
 ) -> List[NDVEstimate]:
     """Object API: list of ColumnMetadata -> list of NDVEstimate.
 
-    Packs through the bucketing `BatchPacker`, so repeated calls with
-    different column counts / row-group counts reuse O(log B · log R)
-    jit traces of `estimate_batch` instead of one per distinct shape.
+    Delegates to the process-wide default `EstimationEngine` (or the one
+    passed in), which packs through ONE shared bucketing `BatchPacker` —
+    ad-hoc calls get the same bucketing (and trace reuse) as the catalog
+    path, with O(log B · log R) jit traces of `estimate_batch` across all
+    callers instead of one per distinct shape.
     """
-    from repro.catalog.packer import BatchPacker  # local: avoid import cycle
+    from repro import engine as engine_mod  # local: avoid import cycle
 
     if not cols:
         return []
-    batch = BatchPacker().pack(cols)
-    sb = None
-    if schema_bounds is not None:
-        arr = np.full(batch.batch, np.inf, np.float32)
-        arr[: len(cols)] = np.asarray(schema_bounds, np.float32)
-        sb = jnp.asarray(arr)
-    out = estimate_batch(batch, sb, mode=mode)
-    return estimates_from_batch(out, batch, [c.column_name for c in cols])
+    engine = engine or engine_mod.default_engine()
+    return engine.estimate_columns(cols, schema_bounds, mode=mode)
 
 
 def estimate_file(
-    file_meta, schema_bounds=None, *, mode: str = "paper"
+    file_meta, schema_bounds=None, *, mode: str = "paper", engine=None
 ) -> List[NDVEstimate]:
     """Estimate every column of a PQLite file from its footer only."""
     from repro.columnar.reader import column_metadata_from_footer
@@ -212,4 +231,4 @@ def estimate_file(
         column_metadata_from_footer(file_meta, name)
         for name in file_meta.column_names
     ]
-    return estimate_columns(cols, schema_bounds, mode=mode)
+    return estimate_columns(cols, schema_bounds, mode=mode, engine=engine)

@@ -43,6 +43,8 @@ class ImprovedDictResult(NamedTuple):
 def improved_dict_estimate(
     batch: ColumnBatch,
     overlap_ratio: jnp.ndarray,
+    *,
+    backend: str = "auto",
 ) -> ImprovedDictResult:
     """Layout-aware aggregation of per-chunk dictionary inversions."""
     inv = dict_inversion.invert_dict_size(
@@ -50,6 +52,7 @@ def improved_dict_estimate(
         batch.chunk_rows,
         batch.chunk_nulls,
         batch.mean_len[:, None],
+        backend=backend,
     )
     usable = batch.valid & batch.chunk_dict_encoded & ~inv.likely_fallback
     chunk_non_null = jnp.maximum(batch.chunk_rows - batch.chunk_nulls, 1.0)
@@ -59,6 +62,7 @@ def improved_dict_estimate(
     corr = minmax_diversity.invert_coupon(
         jnp.where(usable, inv.ndv, 1.0),
         chunk_non_null,
+        backend=backend,
     )
     corrected = jnp.where(usable, corr.ndv, -1.0)
     # Aggregate robustly: mean over usable chunks (each chunk is an i.i.d.

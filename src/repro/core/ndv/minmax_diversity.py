@@ -60,12 +60,16 @@ def invert_coupon(
     *,
     iters: int = NEWTON_ITERS,
     tol: float = NEWTON_TOL,
+    backend: str = "auto",
 ) -> CouponInversionResult:
     """Solve Eq 8 for NDV given observed distinct count m out of n draws.
 
     Args:
       m: (B,) observed number of distinct extrema (1 <= m <= n).
       n: (B,) number of row groups (draws).
+      backend: "auto"/"ref" solve here in jnp; "pallas" (or "auto" on TPU)
+        routes the full inversion — including saturation handling — through
+        the `repro.kernels` Pallas kernel.
 
     Returns:
       CouponInversionResult. For the saturated case (m == n) we return the
@@ -74,6 +78,20 @@ def invert_coupon(
     """
     m = jnp.asarray(m, jnp.float32)
     n = jnp.asarray(n, jnp.float32)
+
+    from repro.kernels import ops  # local: kernels.ref imports this module
+
+    if ops.use_pallas(backend):
+        from repro.kernels.newton_ndv import COUPON_ITERS
+
+        ndv = ops.coupon_newton(
+            m.reshape(-1), n.reshape(-1), backend="pallas"
+        ).reshape(jnp.shape(m))
+        return CouponInversionResult(
+            ndv=ndv,
+            saturated=m >= n - 0.5,
+            iterations=jnp.full(jnp.shape(m), COUPON_ITERS, jnp.int32),
+        )
 
     # Saturation band of half a coupon: observed counts are integral, and
     # the inversion is hopelessly ill-conditioned within < 0.5 of n anyway.
@@ -131,10 +149,12 @@ def estimate_minmax_diversity(
     m_min: jnp.ndarray,
     m_max: jnp.ndarray,
     n_groups: jnp.ndarray,
+    *,
+    backend: str = "auto",
 ) -> MinMaxDiversityResult:
     """Paper §5.3: invert both sides, retain the larger estimate."""
-    lo = invert_coupon(m_min, n_groups)
-    hi = invert_coupon(m_max, n_groups)
+    lo = invert_coupon(m_min, n_groups, backend=backend)
+    hi = invert_coupon(m_max, n_groups, backend=backend)
     take_hi = hi.ndv >= lo.ndv
     ndv = jnp.where(take_hi, hi.ndv, lo.ndv)
     saturated = jnp.where(take_hi, hi.saturated, lo.saturated)

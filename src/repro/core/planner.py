@@ -172,13 +172,16 @@ class NDVPlanner:
             for e, nn in zip(estimates, non_nulls)
         }
 
-    def plan_catalog(self, catalog, *, mode: str = "paper") -> Dict[str, MemoryPlan]:
+    def plan_catalog(
+        self, catalog, *, mode: str = "paper", engine=None
+    ) -> Dict[str, MemoryPlan]:
         """Memory plans for every column of a `repro.catalog.StatsCatalog`.
 
         Estimates come from the catalog's cache (warm after the first call);
-        non-null counts from its merged per-column metadata.
+        non-null counts from its merged per-column metadata. `engine`
+        optionally overrides the catalog's `EstimationEngine` for this plan.
         """
-        estimates = catalog.estimate(mode=mode)
+        estimates = catalog.estimate(mode=mode, engine=engine)
         non_nulls = catalog.non_nulls()
         return {
             name: self.memory_plan(est, non_nulls[name])

@@ -22,6 +22,7 @@ from repro.catalog import StatsCatalog
 from repro.columnar import reader as rd
 from repro.core.ndv.types import NDVEstimate
 from repro.core.planner import MemoryPlan, NDVPlanner
+from repro.engine import EngineConfig, EstimationEngine
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +40,7 @@ class DataConfig:
     seq_len: int = 256
     seed: int = 0
     mode: str = "improved"       # NDV estimator mode for planning
+    engine: Optional[EngineConfig] = None  # estimation engine (None = default)
 
 
 class TokenPipeline:
@@ -51,7 +53,8 @@ class TokenPipeline:
         self.files = rd.list_files(cfg.root)
         if not self.files:
             raise FileNotFoundError(f"no PQLite files under {cfg.root}")
-        self.catalog = StatsCatalog(cfg.root)
+        engine = EstimationEngine(cfg.engine) if cfg.engine else None
+        self.catalog = StatsCatalog(cfg.root, engine=engine)
         self.plan = self._plan()
 
     # -- metadata-only planning (the paper's zero-cost path) -----------------

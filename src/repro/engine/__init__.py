@@ -1,0 +1,44 @@
+"""Estimation engine: the single execution seam between packed batches and
+estimates.
+
+The paper's estimators are embarrassingly parallel over columns — every
+reduction inside `estimate_batch` runs along the row-group axis (R) or is
+per-lane, never across the column axis (B). That makes the B axis free to
+split, which is exactly what fleet-scale serving needs: a warehouse with
+100k+ merged columns should not run on one device or OOM because the packed
+batch grew with dataset width.
+
+`EstimationEngine` owns that split. Every consumer (`StatsCatalog`,
+`estimate_columns`, `NDVPlanner.plan_catalog`, the data pipeline, the
+benchmarks) goes through `engine.estimate(batch, ...)` instead of calling
+the jit'd `estimate_batch` directly; `estimate_batch` itself remains the
+pure per-shard kernel. Three execution strategies hide behind one config:
+
+  local    today's single-device jit path. The default on one device.
+  sharded  split the bucketed batch on the B axis across a 1-D
+           `jax.sharding.Mesh` via `shard_map`, one `estimate_batch` body
+           per device, per-shard `BatchEstimates` combined by the runtime.
+           The engine's packer rounds B up to a multiple of the shard count
+           so the split is even and the extra lanes are ordinary masked
+           padding.
+  chunked  stream batches wider than a fixed budget (`max_batch`) through
+           equal-size sub-batches, so B — and therefore device memory and
+           trace shapes — stays bounded regardless of dataset width.
+
+The parity contract is strict: for real (non-padding) lanes, the sharded
+and chunked paths produce bit-identical outputs to the local path (asserted
+by tests/test_engine.py on simulated multi-device CPU). That holds because
+padding lanes are fully masked and no estimator op mixes information across
+B — the engine only ever re-tiles the same per-lane program.
+
+The config also carries the `kernels/ops` backend knob ("auto" / "pallas" /
+"ref"), which used to be unreachable from the public API: the engine threads
+it into `estimate_batch`, which routes the Newton inversions and the
+detector scan through the Pallas kernels or the jnp reference accordingly.
+"""
+from repro.engine.config import EngineConfig  # noqa: F401
+from repro.engine.engine import (  # noqa: F401
+    EstimationEngine,
+    default_engine,
+    default_packer,
+)

@@ -1,0 +1,54 @@
+"""Engine configuration: one frozen record that names an execution plan.
+
+`EngineConfig` is deliberately tiny and hashable — `StatsCatalog` keys its
+estimate caches by it (via `EstimationEngine.cache_key`), so two engines
+with the same config are interchangeable and two engines that would execute
+differently never share a cache line.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+STRATEGIES = ("auto", "local", "sharded", "chunked")
+BACKENDS = ("auto", "pallas", "ref")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Execution plan for `EstimationEngine`.
+
+    Attributes:
+      strategy: "local" (single-device jit), "sharded" (split B across a
+        device mesh), "chunked" (bounded-B streaming), or "auto" — sharded
+        when more than one device is visible, otherwise chunked only when
+        the batch exceeds `max_batch`, otherwise local.
+      backend: the `repro.kernels.ops` knob, threaded into `estimate_batch`.
+        "auto" picks the fastest correct path per platform (compiled Pallas
+        kernels on TPU, the jnp reference elsewhere — interpret-mode Pallas
+        is a correctness tool, not a serving path); "pallas" forces the
+        kernels (interpreted off-TPU); "ref" forces the jnp reference.
+      num_shards: device count for the sharded strategy; 0 means all
+        visible devices. Clamped to the visible device count at run time.
+      max_batch: the chunk budget — the widest B a single `estimate_batch`
+        call may see under the chunked strategy. Must be a power of two so
+        power-of-two-bucketed batches always split into equal full chunks
+        (one jit trace shape, no ragged tail).
+    """
+
+    strategy: str = "auto"
+    backend: str = "auto"
+    num_shards: int = 0
+    max_batch: int = 4096
+
+    def __post_init__(self):
+        if self.strategy not in STRATEGIES:
+            raise ValueError(
+                f"strategy {self.strategy!r} not in {STRATEGIES}"
+            )
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.num_shards < 0:
+            raise ValueError("num_shards must be >= 0 (0 = all devices)")
+        mb = self.max_batch
+        if mb < 1 or (mb & (mb - 1)) != 0:
+            raise ValueError(f"max_batch must be a power of two, got {mb}")

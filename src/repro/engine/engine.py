@@ -1,0 +1,240 @@
+"""`EstimationEngine`: strategy-routed execution of `estimate_batch`.
+
+See the package docstring for the seam design. The engine is stateless
+apart from its config — all caching lives in `StatsCatalog`, keyed by
+`engine.cache_key` so differently-configured engines never share entries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.catalog.packer import BatchPacker
+from repro.core.ndv.estimator import (
+    BatchEstimates,
+    estimate_batch,
+    estimates_from_batch,
+)
+from repro.core.ndv.types import ColumnBatch, ColumnMetadata, NDVEstimate
+from repro.engine.config import EngineConfig
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_fn(devices: tuple, mode: str, backend: str):
+    """Jitted shard_map of `estimate_batch` over a 1-D column mesh.
+
+    Cached per (device tuple, mode, backend): shard_map construction and
+    tracing are not free, and warm engine calls must stay dispatch-only
+    (the jit cache then keys on batch shape as usual).
+    """
+    mesh = Mesh(np.asarray(devices), ("cols",))
+    return jax.jit(
+        shard_map(
+            functools.partial(estimate_batch, mode=mode, backend=backend),
+            mesh=mesh,
+            in_specs=(P("cols"), P("cols")),
+            out_specs=P("cols"),
+            check_rep=False,
+        )
+    )
+
+
+def _pad_axis0(x: jnp.ndarray, target: int) -> jnp.ndarray:
+    """Zero-pad the leading (B) axis up to `target` lanes.
+
+    Zero is the packer's own padding value for every field — it yields
+    `valid=False` / `n_groups=0` lanes that the estimator fully masks.
+    """
+    if x.shape[0] == target:
+        return x
+    pad = [(0, target - x.shape[0])] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, pad)
+
+
+class EstimationEngine:
+    """Routes a packed `ColumnBatch` to one of three execution strategies."""
+
+    def __init__(self, config: Optional[EngineConfig] = None):
+        self.config = config or EngineConfig()
+        self._packer: Optional[BatchPacker] = None
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def shard_count(self) -> int:
+        """Resolved shard count: config, clamped to visible devices."""
+        n_dev = jax.device_count()
+        want = self.config.num_shards or n_dev
+        return max(1, min(want, n_dev))
+
+    @property
+    def cache_key(self) -> tuple:
+        """Hashable config identity (catalog cache key component).
+
+        Deliberately the CONFIG, not the resolved device topology: by the
+        parity contract, estimates are bit-identical across strategies and
+        shard counts, so a persisted cache written on one topology must
+        stay warm on another (the whole point of `save_cache()`). Only
+        `backend` can change numerics, and it is part of the config.
+        """
+        c = self.config
+        return (c.strategy, c.backend, c.num_shards, c.max_batch)
+
+    def make_packer(self) -> BatchPacker:
+        """Shard-aware packer: B rounds up to a multiple of the shard count
+        so the sharded split is even and padding lanes stay masked.
+
+        One instance per engine (packers are stateless frozen dataclasses;
+        sharing keeps every caller on the same bucketing policy object).
+        """
+        if self._packer is None:
+            mult = (
+                self.shard_count
+                if self.config.strategy in ("auto", "sharded")
+                else 1
+            )
+            self._packer = BatchPacker(col_multiple=mult)
+        return self._packer
+
+    # -- strategy resolution --------------------------------------------------
+
+    def resolve_strategy(self, batch_width: int) -> str:
+        s = self.config.strategy
+        if s != "auto":
+            return s
+        if self.shard_count > 1:
+            return "sharded"
+        if batch_width > self.config.max_batch:
+            return "chunked"
+        return "local"
+
+    # -- execution -----------------------------------------------------------
+
+    def estimate(
+        self,
+        batch: ColumnBatch,
+        schema_bound: Optional[jnp.ndarray] = None,
+        *,
+        mode: str = "paper",
+    ) -> BatchEstimates:
+        """ColumnBatch -> BatchEstimates under the configured strategy.
+
+        For real (non-padding) lanes the output is bit-identical across
+        strategies: padding lanes are fully masked and no estimator op
+        mixes information across the B axis, so re-tiling B is exact.
+        """
+        strategy = self.resolve_strategy(batch.batch)
+        if strategy == "sharded":
+            return self._estimate_sharded(batch, schema_bound, mode)
+        if strategy == "chunked":
+            return self._estimate_chunked(batch, schema_bound, mode)
+        return estimate_batch(
+            batch, schema_bound, mode=mode, backend=self.config.backend
+        )
+
+    def _padded_to_multiple(self, batch, schema_bound, multiple):
+        """(batch, schema_bound, original B) with B padded to `multiple`."""
+        b = batch.batch
+        target = -(-b // multiple) * multiple
+        if target == b:
+            return batch, schema_bound, b
+        batch = jax.tree.map(lambda x: _pad_axis0(x, target), batch)
+        if schema_bound is not None:
+            # +inf = "no bound": combine() keeps the estimate unchanged.
+            schema_bound = jnp.pad(
+                schema_bound, (0, target - b), constant_values=np.inf
+            )
+        return batch, schema_bound, b
+
+    def _estimate_sharded(self, batch, schema_bound, mode) -> BatchEstimates:
+        n = self.shard_count
+        batch, schema_bound, b = self._padded_to_multiple(batch, schema_bound, n)
+        if schema_bound is None:
+            # Materialize "no bound" so one shard_map signature serves both;
+            # min(ndv, +inf) is the identity, bit-for-bit.
+            schema_bound = jnp.full(batch.batch, np.inf, jnp.float32)
+        fn = _sharded_fn(
+            tuple(jax.devices()[:n]), mode, self.config.backend
+        )
+        out = fn(batch, schema_bound)
+        return self._trim(out, b)
+
+    def _estimate_chunked(self, batch, schema_bound, mode) -> BatchEstimates:
+        c = self.config.max_batch
+        if batch.batch <= c:
+            return estimate_batch(
+                batch, schema_bound, mode=mode, backend=self.config.backend
+            )
+        batch, schema_bound, b = self._padded_to_multiple(batch, schema_bound, c)
+        parts: List[BatchEstimates] = []
+        for lo in range(0, batch.batch, c):
+            sub = jax.tree.map(lambda x: x[lo : lo + c], batch)
+            sb = None if schema_bound is None else schema_bound[lo : lo + c]
+            parts.append(
+                estimate_batch(sub, sb, mode=mode, backend=self.config.backend)
+            )
+        out = BatchEstimates(
+            *[jnp.concatenate(field) for field in zip(*parts)]
+        )
+        return self._trim(out, b)
+
+    @staticmethod
+    def _trim(out: BatchEstimates, b: int) -> BatchEstimates:
+        """Drop engine-added padding lanes (keep packer padding intact)."""
+        if out.ndv.shape[0] == b:
+            return out
+        return BatchEstimates(*[field[:b] for field in out])
+
+    # -- object API ----------------------------------------------------------
+
+    def estimate_columns(
+        self,
+        cols: Sequence[ColumnMetadata],
+        schema_bounds: Optional[Sequence[float]] = None,
+        *,
+        mode: str = "paper",
+        packer: Optional[BatchPacker] = None,
+    ) -> List[NDVEstimate]:
+        """List of ColumnMetadata -> list of NDVEstimate via this engine."""
+        if not cols:
+            return []
+        batch = (packer or self.make_packer()).pack(cols)
+        sb = None
+        if schema_bounds is not None:
+            arr = np.full(batch.batch, np.inf, np.float32)
+            arr[: len(cols)] = np.asarray(schema_bounds, np.float32)
+            sb = jnp.asarray(arr)
+        out = self.estimate(batch, sb, mode=mode)
+        return estimates_from_batch(out, batch, [c.column_name for c in cols])
+
+
+@dataclasses.dataclass
+class _Defaults:
+    engine: Optional[EstimationEngine] = None
+
+
+_DEFAULTS = _Defaults()
+
+
+def default_engine() -> EstimationEngine:
+    """Process-wide default engine (strategy "auto", backend "auto").
+
+    Shared by `estimate_columns`, `estimate_file`, and every `StatsCatalog`
+    constructed without an explicit engine, so ad-hoc calls and catalog
+    calls agree on bucketing and execution.
+    """
+    if _DEFAULTS.engine is None:
+        _DEFAULTS.engine = EstimationEngine(EngineConfig())
+    return _DEFAULTS.engine
+
+
+def default_packer() -> BatchPacker:
+    """The default engine's shared packer (one bucketing policy per process)."""
+    return default_engine().make_packer()

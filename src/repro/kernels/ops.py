@@ -29,6 +29,21 @@ def _interpret() -> bool:
     return not _on_tpu()
 
 
+def use_pallas(backend: Backend) -> bool:
+    """Resolve an estimator-level backend request to a kernel-path decision.
+
+    "pallas" always takes the kernels (interpreted off-TPU — bit-faithful
+    but slow, a correctness knob). "ref" never does. "auto" takes them only
+    where they are the fast path (compiled on TPU); elsewhere the jnp
+    reference IS the production path, so "auto" resolves to it.
+    """
+    if backend == "pallas":
+        return True
+    if backend == "ref":
+        return False
+    return _on_tpu()
+
+
 def dict_newton(size, rows, nulls, mean_len, *, backend: Backend = "auto"):
     """Batched Eq-2 dictionary-size inversion (flat float32 arrays)."""
     if backend == "ref":

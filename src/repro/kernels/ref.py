@@ -22,12 +22,17 @@ def ref_dict_newton(
     mean_len: jnp.ndarray,
 ) -> jnp.ndarray:
     """Oracle for newton_ndv.dict_newton (flat arrays)."""
-    return dict_inversion.invert_dict_size(size, rows, nulls, mean_len).ndv
+    # backend="ref" pins the pure-jnp solve: with the default "auto" the
+    # inversion would route back through the Pallas kernel on TPU and the
+    # oracle would compare the kernel against itself.
+    return dict_inversion.invert_dict_size(
+        size, rows, nulls, mean_len, backend="ref"
+    ).ndv
 
 
 def ref_coupon_newton(m_obs: jnp.ndarray, n_draws: jnp.ndarray) -> jnp.ndarray:
     """Oracle for newton_ndv.coupon_newton (flat arrays)."""
-    return minmax_diversity.invert_coupon(m_obs, n_draws).ndv
+    return minmax_diversity.invert_coupon(m_obs, n_draws, backend="ref").ndv
 
 
 class RefMinMaxMetrics(NamedTuple):

@@ -121,6 +121,46 @@ class CostResult:
             self.per_collective[k] = self.per_collective.get(k, 0.0) + v * mult
 
 
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _split_operands(operands: str) -> List[str]:
+    """Split an operand list on top-level commas only.
+
+    Shape strings (``f32[256,256]{1,0}``) and nested calls contain commas;
+    a naive ``split(",")`` shreds them and breaks the positional mapping
+    between fusion parameters and caller operands.
+    """
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in operands:
+        if ch in "[({":
+            depth += 1
+        elif ch in "])}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _operand_name(fragment: str) -> str:
+    """Instruction name from one operand fragment.
+
+    Handles both bare references (``%Arg_1.2`` / ``Arg_1.2``) and typed
+    references (``f32[256,256]{1,0} %Arg_1.2``) as newer XLA prints them;
+    literal operands (``constant(28)``) pass through as their text.
+    """
+    m = _OPERAND_NAME_RE.search(fragment)
+    if m:
+        return m.group(1)
+    return fragment.split(" ")[0]
+
+
 def parse_module(text: str) -> Dict[str, Computation]:
     comps: Dict[str, Computation] = {}
     cur: Optional[Computation] = None
@@ -150,11 +190,7 @@ def parse_module(text: str) -> Dict[str, Computation]:
         if not m:
             continue
         name, type_str, opcode, operands, attrs = m.groups()
-        ops = [
-            o.strip().lstrip("%").split(" ")[0]
-            for o in operands.split(",")
-            if o.strip()
-        ]
+        ops = [_operand_name(o) for o in _split_operands(operands)]
         cur.symbols[name] = type_str
         cur.ops.append(OpInfo(name, type_str, opcode, ops, attrs))
     if entry_name is not None:
