@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   complexity.py   — §10.2 single-pass complexity table
   engine_scale.py — EstimationEngine local/sharded/chunked throughput
   kernels.py      — Pallas kernel suite throughput
+  service_latency.py — stats-service cold/warm/304 latency + throughput
   warehouse.py    — TPC-H-shaped lineitem accuracy via the catalog (§10.1)
 
 ``--quick`` runs every module at tiny shapes (CI smoke: exercises the
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         complexity,
         engine_scale,
         kernels,
+        service_latency,
         warehouse,
     )
 
@@ -47,6 +49,7 @@ def main(argv=None) -> None:
         ("warehouse", warehouse),
         ("catalog_scale", catalog_scale),
         ("engine_scale", engine_scale),
+        ("service_latency", service_latency),
         ("baselines", baselines),
         ("batch_memory", batch_memory),
         ("complexity", complexity),

@@ -1,0 +1,137 @@
+"""Stats-service latency: cold vs warm vs 304, plus concurrent throughput.
+
+What a planner fleet sees is HTTP round trips, not library calls, so this
+module measures the `repro.service` endpoint end to end over loopback:
+
+  service/cold        first /estimate after boot: async footer ingestion
+                      already done, so this is pack + trace + engine run
+  service/warm        repeated /estimate, no If-None-Match: full JSON body
+                      served from the catalog's estimate cache
+  service/304         revalidation with If-None-Match: the zero-work path
+                      (no pack, no engine run — asserted via /health)
+  service/coalesce    N concurrent identical cold requests after a dataset
+                      change: single-flight must collapse them onto one
+                      engine execution (asserted)
+  service/throughput  concurrent revalidation clients hammering /estimate
+"""
+from __future__ import annotations
+
+import concurrent.futures
+import os
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._quick import pick
+from repro.service import StatsServer, StatsService, fetch_json
+
+NUM_SHARDS = pick(6, 3)
+ROWS_PER_SHARD = pick(1 << 12, 1 << 10)
+ROW_GROUP = pick(512, 256)
+WARM_REQS = pick(100, 5)
+CLIENTS = pick(8, 2)
+REQS_PER_CLIENT = pick(50, 5)
+
+
+def _write_shard(root: str, index: int) -> None:
+    from repro.columnar.writer import WriterOptions, write_file
+
+    rng = np.random.default_rng(index)
+    write_file(
+        os.path.join(root, f"shard_{index:05d}"),
+        {
+            "tok": rng.integers(0, 2048, ROWS_PER_SHARD).astype(np.int64),
+            "val": np.round(rng.uniform(0, 100, ROWS_PER_SHARD), 1),
+        },
+        options=WriterOptions(row_group_size=ROW_GROUP),
+    )
+
+
+def run() -> List[tuple]:
+    rows: List[tuple] = []
+    root = os.path.join(tempfile.mkdtemp(), "svc_bench")
+    for i in range(NUM_SHARDS):
+        _write_shard(root, i)
+
+    with StatsServer(StatsService(root)) as server:
+        url = server.url + "/estimate?mode=improved"
+        svc = server.service
+
+        t0 = time.perf_counter()
+        status, etag, body = fetch_json(url)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        assert status == 200 and body["estimates"]
+        rows.append((
+            "service/cold", cold_us,
+            f"files={NUM_SHARDS};cols={len(body['estimates'])};"
+            f"engine_runs={svc.stats.engine_runs}",
+        ))
+
+        t0 = time.perf_counter()
+        for _ in range(WARM_REQS):
+            status, _, _ = fetch_json(url)
+            assert status == 200
+        warm_us = (time.perf_counter() - t0) * 1e6 / WARM_REQS
+        rows.append((
+            "service/warm", warm_us,
+            f"reqs={WARM_REQS};engine_runs={svc.stats.engine_runs};"
+            f"speedup={cold_us / max(warm_us, 1e-9):.0f}x",
+        ))
+
+        runs_before = svc.stats.engine_runs
+        packs_before = svc.catalog.stats.packs
+        t0 = time.perf_counter()
+        for _ in range(WARM_REQS):
+            status, _, _ = fetch_json(url, etag=etag)
+            assert status == 304
+        rev_us = (time.perf_counter() - t0) * 1e6 / WARM_REQS
+        assert svc.stats.engine_runs == runs_before          # zero engine runs
+        assert svc.catalog.stats.packs == packs_before       # zero packs
+        rows.append((
+            "service/304", rev_us,
+            f"reqs={WARM_REQS};engine_runs=0;packs=0;"
+            f"vs_warm={warm_us / max(rev_us, 1e-9):.1f}x",
+        ))
+
+        # -- single-flight: concurrent cold burst after a dataset change ----
+        _write_shard(root, NUM_SHARDS)
+        svc.refresh()
+        runs_before = svc.stats.engine_runs
+        t0 = time.perf_counter()
+        with concurrent.futures.ThreadPoolExecutor(CLIENTS) as pool:
+            statuses = list(pool.map(
+                lambda _: fetch_json(url)[0], range(CLIENTS)
+            ))
+        burst_us = (time.perf_counter() - t0) * 1e6
+        assert all(s == 200 for s in statuses)
+        cold_runs = svc.stats.engine_runs - runs_before
+        assert cold_runs == 1, f"single-flight leaked: {cold_runs} engine runs"
+        rows.append((
+            "service/coalesce", burst_us,
+            f"clients={CLIENTS};engine_runs={cold_runs};"
+            f"coalesced={svc.stats.coalesced_waits}",
+        ))
+
+        # -- sustained concurrent revalidation throughput -------------------
+        _, etag, _ = fetch_json(url)
+
+        def client(_) -> int:
+            n = 0
+            for _ in range(REQS_PER_CLIENT):
+                s, _, _ = fetch_json(url, etag=etag)
+                n += s == 304
+            return n
+
+        t0 = time.perf_counter()
+        with concurrent.futures.ThreadPoolExecutor(CLIENTS) as pool:
+            hits = sum(pool.map(client, range(CLIENTS)))
+        dt = time.perf_counter() - t0
+        total = CLIENTS * REQS_PER_CLIENT
+        assert hits == total
+        rows.append((
+            "service/throughput", dt / total * 1e6,
+            f"clients={CLIENTS};reqs={total};req_per_s={total / dt:.0f}",
+        ))
+    return rows

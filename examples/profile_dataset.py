@@ -5,10 +5,29 @@ layout class, confidence, memory forecast — WITHOUT reading any data page.
 Compares footprint: bytes of metadata read vs bytes of data skipped.
 
     PYTHONPATH=src python examples/profile_dataset.py [root]
+
+With ``--serve`` the same dataset is then exposed through the stats
+service (`repro.service`), so remote planners can pull the numbers this
+script printed without any footer access of their own:
+
+    PYTHONPATH=src python examples/profile_dataset.py --serve [root]
+
+    # client side — note the fingerprint ETag on every response:
+    import json, urllib.request
+    r = urllib.request.urlopen("http://127.0.0.1:8080/estimate?mode=improved")
+    etag, ests = r.headers["ETag"], json.load(r)["estimates"]
+    print(ests["key"]["ndv"])
+    # revalidate for free until a file is added/removed/rewritten:
+    req = urllib.request.Request(
+        "http://127.0.0.1:8080/estimate?mode=improved",
+        headers={"If-None-Match": etag},
+    )
+    urllib.request.urlopen(req)   # -> HTTPError 304: estimates unchanged
 """
+import argparse
 import os
-import sys
 import tempfile
+import time
 
 import numpy as np
 
@@ -33,8 +52,34 @@ def ensure_demo_dataset(root: str):
         )
 
 
+def serve_stats(root: str, host: str, port: int) -> None:
+    """Expose `root` through the fingerprint-ETag stats endpoint."""
+    from repro.service import StatsServer, StatsService
+
+    service = StatsService(root, poll_interval=10.0)
+    with StatsServer(service, host=host, port=port) as server:
+        print(f"\nserving stats at {server.url} (refresh every 10s)")
+        print(f"  curl -s '{server.url}/estimate?mode=improved'")
+        print(f"  curl -s '{server.url}/plan'")
+        print(f"  curl -s '{server.url}/health'")
+        print("Ctrl-C to stop")
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            print("\nshutting down")
+
+
 def main():
-    root = sys.argv[1] if len(sys.argv) > 1 else None
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("root", nargs="?", help="dataset root (default: demo)")
+    ap.add_argument("--serve", action="store_true",
+                    help="after profiling, serve the dataset's stats over "
+                         "HTTP (see module docstring for a client snippet)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080)
+    args = ap.parse_args()
+    root = args.root
     if root is None:
         root = os.path.join(tempfile.mkdtemp(), "demo")
         ensure_demo_dataset(root)
@@ -61,6 +106,8 @@ def main():
     print(f"\nmetadata read: {meta_bytes/1e3:.1f} KB; "
           f"data pages NOT read: {data_bytes/1e6:.1f} MB "
           f"({data_bytes/max(meta_bytes,1):.0f}x saved)")
+    if args.serve:
+        serve_stats(root, args.host, args.port)
 
 
 if __name__ == "__main__":

@@ -30,17 +30,29 @@ estimates and memory plans":
               nothing; `update()` ingests only new/changed files and merges
               them into the existing per-column view instead of re-reading
               the fleet; `save_cache()`/`load_cache()` spill estimates to a
-              JSON file next to the dataset so restarts serve warm.
+              JSON file next to the dataset so restarts serve warm
+              (`save_cache` compacts away entries for stale fingerprint
+              sets; `auto_load_cache=True` restores the spill, mtime-guarded,
+              at construction).
   execution   estimation itself runs through an injected
               `repro.engine.EstimationEngine` (local / sharded / chunked
               behind one config) — the catalog never calls the jit'd
               `estimate_batch` directly.
 
 Everything downstream (data/pipeline planning, NDVPlanner, benchmarks, and
-the future async-ingestion / stats-serving work) talks to this package
-instead of touching footers directly.
+the `repro.service` async-ingestion + stats-serving layer) talks to this
+package instead of touching footers directly. Footer I/O and state commit
+are split (`StatsCatalog.apply_footers`) so ingestion can be scattered over
+threads while the merge-and-swap stays atomic.
 """
-from repro.catalog.catalog import CatalogStats, FileEntry, StatsCatalog  # noqa: F401
+from repro.catalog.catalog import (  # noqa: F401
+    CatalogStats,
+    FileEntry,
+    StatsCatalog,
+    UpdateSummary,
+    estimate_from_json,
+    estimate_to_json,
+)
 from repro.catalog.merge import merge_column_metadata  # noqa: F401
 from repro.catalog.packer import BatchPacker, bucket_size  # noqa: F401
 from repro.catalog.source import (  # noqa: F401

@@ -5,7 +5,10 @@ The catalog's contract (see the package docstring for the design):
   * `update()` scans the source, re-reading only footers whose fingerprint
     changed, and maintains one merged `ColumnMetadata` per column. Pure
     additions merge into the existing view (O(new files)); any rewrite or
-    removal triggers a full re-merge.
+    removal triggers a full re-merge. The footer I/O and the commit are
+    split: `apply_footers()` is the atomic merge-and-swap seam, so the
+    async ingestor (`repro.service`) can scatter-gather footers on a thread
+    pool and commit through the same code path.
   * `estimate()` packs the merged view through the bucketing `BatchPacker`
     and executes through an injected `EstimationEngine` (local / sharded /
     chunked — see `repro.engine`). Packed batches are cached per
@@ -36,6 +39,27 @@ from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimat
 
 CACHE_FILE_NAME = ".ndv_estimate_cache.json"
 _CACHE_VERSION = 1
+
+
+def estimate_to_json(est: NDVEstimate) -> dict:
+    """`NDVEstimate` -> plain-JSON dict (enums as ints, floats untouched)."""
+    d = {
+        f.name: getattr(est, f.name)
+        for f in dataclasses.fields(NDVEstimate)
+        if f.name != "layout"
+    }
+    d["layout"] = int(est.layout)
+    return d
+
+
+def estimate_from_json(d: dict) -> NDVEstimate:
+    """Inverse of `estimate_to_json`.
+
+    Bit-exact: Python's json emits shortest-round-trip float reprs, so a
+    serialized estimate reconstructs `==` to the original — the cache spill
+    and the stats-service wire format both rely on this.
+    """
+    return NDVEstimate(**{**d, "layout": Layout(d["layout"])})
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +103,7 @@ class StatsCatalog:
         packer: Optional[BatchPacker] = None,
         engine=None,
         max_cache_entries: int = 64,
+        auto_load_cache: bool = False,
     ):
         from repro import engine as engine_mod  # local: avoid import cycle
 
@@ -98,31 +123,82 @@ class StatsCatalog:
         self._max_cache_entries = max_cache_entries
         self._scanned = False
         self._fp_key: Optional[frozenset] = None
+        self._cache_file_mtime_ns: Optional[int] = None
+        if auto_load_cache:
+            self.maybe_load_cache()
 
     # -- ingestion -----------------------------------------------------------
 
     def update(self) -> UpdateSummary:
         """Re-scan the source; ingest new/changed footers, drop removed ones.
 
+        A file that vanishes between listing and reading (its fingerprint or
+        footer raises FileNotFoundError) is treated exactly like a file the
+        listing never returned: it is reported as removed if it was
+        previously ingested, never as added — the same semantics the async
+        ingestion path (`repro.service.AsyncIngestor`) applies.
+
         All catalog state (entries, merged view, cached fingerprint key) is
         committed only after merging succeeds, so a failed update — e.g. a
         schema-mismatched file — leaves the previous consistent view intact.
         """
-        ids = self.source.list_files()
+        fresh: List[FileEntry] = []
+        live_ids: List[str] = []
+        for fid in self.source.list_files():
+            try:
+                fp = self.source.fingerprint(fid)
+                prev = self._entries.get(fid)
+                if prev is not None and prev.fingerprint == fp:
+                    live_ids.append(fid)
+                    continue
+                footer = self.source.read_footer(fid)
+            except FileNotFoundError:
+                continue  # vanished mid-scan: counted as removed, not added
+            self.stats.footers_read += 1
+            fresh.append(FileEntry(fid, fp, footer))
+            live_ids.append(fid)
+        return self.apply_footers(fresh, live_ids=live_ids)
+
+    def apply_footers(
+        self, fresh: Sequence[FileEntry], *, live_ids: Sequence[str]
+    ) -> UpdateSummary:
+        """Commit prefetched footers — the ingestion seam below `update()`.
+
+        `live_ids` is the authoritative set of files that currently exist
+        (its order becomes the entry iteration order); `fresh` carries a
+        parsed `FileEntry` for every live id that is new or changed. Ids in
+        `live_ids` with no fresh entry must already be ingested (their
+        previous entry is reused); previously-ingested ids absent from
+        `live_ids` are dropped and reported as removed. A fresh entry whose
+        fingerprint matches the existing one (an ingestion race re-read an
+        unchanged footer) is a no-op, not an update.
+
+        This is the single commit point for both the synchronous `update()`
+        loop and the scatter-gathered async path: footer I/O can happen
+        anywhere, concurrently, while the merge + state swap stays atomic —
+        on any failure (e.g. schema mismatch) the previous consistent view
+        keeps serving.
+        """
+        by_id = {e.file_id: e for e in fresh}
         added = updated = 0
         new_entries: "OrderedDict[str, FileEntry]" = OrderedDict()
-        fresh: List[FileEntry] = []
-        for fid in ids:
-            fp = self.source.fingerprint(fid)
+        applied: List[FileEntry] = []
+        for fid in live_ids:
+            entry = by_id.get(fid)
             prev = self._entries.get(fid)
-            if prev is not None and prev.fingerprint == fp:
+            if entry is None:
+                if prev is None:
+                    raise ValueError(
+                        f"live file {fid!r} has neither a previous catalog "
+                        f"entry nor a prefetched footer"
+                    )
                 new_entries[fid] = prev
                 continue
-            footer = self.source.read_footer(fid)
-            self.stats.footers_read += 1
-            entry = FileEntry(fid, fp, footer)
+            if prev is not None and prev.fingerprint == entry.fingerprint:
+                new_entries[fid] = prev
+                continue
             new_entries[fid] = entry
-            fresh.append(entry)
+            applied.append(entry)
             if prev is None:
                 added += 1
             else:
@@ -131,10 +207,10 @@ class StatsCatalog:
         pure_addition = updated == 0 and removed == 0
         if not new_entries:
             merged, names = {}, []
-        elif self._merged is not None and pure_addition and not fresh:
+        elif self._merged is not None and pure_addition and not applied:
             merged, names = self._merged, self._column_names
         elif self._merged and pure_addition:
-            merged, names = self._merge_into(fresh)
+            merged, names = self._merge_into(applied)
         else:
             merged, names = self._merge_all(list(new_entries.values()))
         # commit point: merge succeeded, swap the whole view atomically
@@ -196,6 +272,11 @@ class StatsCatalog:
     # -- views ---------------------------------------------------------------
 
     @property
+    def scanned(self) -> bool:
+        """Whether any scan has committed (False = no view to serve yet)."""
+        return self._scanned
+
+    @property
     def num_files(self) -> int:
         self._ensure_scanned()
         return len(self._entries)
@@ -222,6 +303,15 @@ class StatsCatalog:
                 f"{e.file_id}@{e.fingerprint}" for e in self._entries.values()
             )
         return self._fp_key
+
+    def entry_fingerprints(self) -> Dict[str, str]:
+        """Snapshot of ingested file id -> fingerprint.
+
+        Unlike `files`, this never triggers a scan: the async ingestor uses
+        it to diff a fresh fingerprint sweep against the committed state
+        without forcing the synchronous `update()` path.
+        """
+        return {fid: e.fingerprint for fid, e in self._entries.items()}
 
     def merged_metadata(self) -> Dict[str, ColumnMetadata]:
         """One logical ColumnMetadata per column, across all files."""
@@ -333,28 +423,32 @@ class StatsCatalog:
             tuple(d["engine"]),
         )
 
-    def save_cache(self, path: Optional[str] = None) -> str:
+    def save_cache(self, path: Optional[str] = None, *, compact: bool = True) -> str:
         """Spill the estimate cache to a JSON file next to the dataset.
 
         Values survive a round trip exactly: floats serialize at full
         double precision, so a warm restart serves bit-identical
         `NDVEstimate`s. Returns the path written.
+
+        With ``compact=True`` (the default) the pass drops entries whose
+        fingerprint set no longer matches the live dataset state before
+        writing: stale keys are unreachable anyway (any rewrite changed the
+        fingerprint set) and would otherwise accumulate in the file across
+        every rewrite the LRU happened to retain. ``compact=False`` persists
+        the LRU verbatim, useful when several dataset states legitimately
+        coexist (e.g. snapshotting mid-migration).
         """
         path = path or self._default_cache_path()
+        items = list(self._estimate_cache.items())
+        if compact:
+            live = self.fingerprint_key()
+            items = [(k, v) for k, v in items if k[0] == live]
         entries = []
-        for key, ests in self._estimate_cache.items():
+        for key, ests in items:
             entries.append({
                 "key": self._key_to_json(key),
                 "estimates": {
-                    name: {
-                        **{
-                            f.name: getattr(e, f.name)
-                            for f in dataclasses.fields(NDVEstimate)
-                            if f.name != "layout"
-                        },
-                        "layout": int(e.layout),
-                    }
-                    for name, e in ests.items()
+                    name: estimate_to_json(e) for name, e in ests.items()
                 },
             })
         payload = {"version": _CACHE_VERSION, "entries": entries}
@@ -383,14 +477,49 @@ class StatsCatalog:
         for entry in payload["entries"]:
             key = self._key_from_json(entry["key"])
             ests = {
-                name: NDVEstimate(
-                    **{**d, "layout": Layout(d["layout"])}
-                )
+                name: estimate_from_json(d)
                 for name, d in entry["estimates"].items()
             }
             self._cache_put(self._estimate_cache, key, ests)
             loaded += 1
         return loaded
+
+    def maybe_load_cache(self, path: Optional[str] = None) -> int:
+        """mtime-guarded `load_cache()`: load only when the file changed.
+
+        Remembers the cache file's mtime at each load, so construction with
+        ``auto_load_cache=True`` and periodic service-side refresh calls are
+        free when nothing rewrote the file. Returns the number of entries
+        restored (0 when the file is missing or unchanged).
+        """
+        path = path or self._default_cache_path()
+        try:
+            mtime_ns = os.stat(path).st_mtime_ns
+        except FileNotFoundError:
+            return 0
+        if mtime_ns == self._cache_file_mtime_ns:
+            return 0
+        loaded = self.load_cache(path)
+        self._cache_file_mtime_ns = mtime_ns
+        return loaded
+
+    def compact_caches(self) -> int:
+        """Drop in-memory batch/estimate entries for stale fingerprint sets.
+
+        The service layer calls this after each committed refresh that
+        changed the dataset, so long-running servers do not pin packed
+        batches and estimate maps for states that can never be requested
+        again. Returns the number of entries dropped.
+        """
+        live = self.fingerprint_key()
+        dropped = 0
+        for key in [k for k in self._batch_cache if k != live]:
+            del self._batch_cache[key]
+            dropped += 1
+        for key in [k for k in self._estimate_cache if k[0] != live]:
+            del self._estimate_cache[key]
+            dropped += 1
+        return dropped
 
     # -- planning ------------------------------------------------------------
 

@@ -87,6 +87,26 @@ class EstimationEngine:
         c = self.config
         return (c.strategy, c.backend, c.num_shards, c.max_batch)
 
+    @property
+    def cache_token(self) -> str:
+        """Engine identity as a compact stable string — wire/ETag material.
+
+        The stats service folds this into every response's ETag so that two
+        servers fronting the same dataset through engines that could answer
+        differently can never validate each other's cached responses.
+        Unlike `cache_key`, the backend appears RESOLVED ("auto" becomes
+        the kernel path it picks on this platform): a TPU replica and a CPU
+        replica both configured "auto" execute different numerics, so their
+        tags must differ even though their configs match. The strategy
+        fields stay unresolved — the parity contract makes them
+        numerics-neutral, and `cache_key` portability covers them.
+        """
+        from repro.kernels import ops
+
+        c = self.config
+        backend = "pallas" if ops.use_pallas(c.backend) else "ref"
+        return f"{c.strategy}.{backend}.s{c.num_shards}.b{c.max_batch}"
+
     def make_packer(self) -> BatchPacker:
         """Shard-aware packer: B rounds up to a multiple of the shard count
         so the sharded split is even and padding lanes stay masked.

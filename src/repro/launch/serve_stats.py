@@ -1,0 +1,136 @@
+"""Stats-serving launcher: the `repro.service` endpoint over one dataset.
+
+    PYTHONPATH=src python -m repro.launch.serve_stats --root /data/ds \
+        --port 8080 --refresh-interval 30
+
+    # self-contained smoke (CI): temp dataset, ephemeral port, scripted
+    # client asserting estimate / 304 / plan / health, clean shutdown
+    PYTHONPATH=src python -m repro.launch.serve_stats --smoke
+
+Query planners then pull estimates without local footer access:
+
+    curl -s 'http://host:8080/estimate?mode=improved'
+    curl -s -H 'If-None-Match: <etag>' 'http://host:8080/estimate?mode=improved'
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+import urllib.error
+
+from repro.engine import EngineConfig, EstimationEngine
+from repro.service import StatsServer, StatsService, fetch_json
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--root", help="dataset root directory (PQLite files)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="0 binds an ephemeral port")
+    ap.add_argument("--refresh-interval", type=float, default=30.0,
+                    help="seconds between background refreshes; 0 disables")
+    ap.add_argument("--workers", type=int, default=8,
+                    help="ingestion scatter-gather thread-pool width")
+    ap.add_argument("--strategy", default="auto",
+                    help="engine strategy (auto/local/sharded/chunked)")
+    ap.add_argument("--backend", default="auto",
+                    help="kernel backend (auto/pallas/ref)")
+    ap.add_argument("--auto-load-cache", action="store_true",
+                    help="restore the dataset's estimate-cache spill on boot")
+    ap.add_argument("--save-cache-on-commit", action="store_true",
+                    help="spill the compacted estimate cache on each commit")
+    ap.add_argument("--smoke", action="store_true",
+                    help="boot on a temp dataset + ephemeral port, run a "
+                         "scripted client, exit (asserts clean shutdown)")
+    return ap
+
+
+def _make_server(args: argparse.Namespace, root: str) -> StatsServer:
+    engine = EstimationEngine(
+        EngineConfig(strategy=args.strategy, backend=args.backend)
+    )
+    service = StatsService(
+        root,
+        engine=engine,
+        max_workers=args.workers,
+        poll_interval=args.refresh_interval or None,
+        auto_load_cache=args.auto_load_cache,
+        save_cache_on_commit=args.save_cache_on_commit,
+    )
+    return StatsServer(service, host=args.host, port=args.port)
+
+
+def _smoke_dataset() -> str:
+    import numpy as np
+
+    from repro.columnar.writer import WriterOptions, write_file
+
+    root = os.path.join(tempfile.mkdtemp(), "smoke_ds")
+    rng = np.random.default_rng(0)
+    for i in range(3):
+        write_file(
+            os.path.join(root, f"shard_{i:03d}"),
+            {
+                "tok": rng.integers(0, 128, 1024).astype(np.int64),
+                "val": np.round(rng.uniform(0, 50, 1024), 1),
+            },
+            options=WriterOptions(row_group_size=256),
+        )
+    return root
+
+
+def run_smoke(args: argparse.Namespace) -> int:
+    args = argparse.Namespace(**{**vars(args), "port": 0,
+                                 "refresh_interval": 0.0})
+    root = args.root or _smoke_dataset()
+    with _make_server(args, root) as server:
+        base = server.url
+        status, etag, body = fetch_json(base + "/estimate?mode=improved")
+        assert status == 200 and etag and body["estimates"], (status, body)
+        status2, etag2, _ = fetch_json(base + "/estimate?mode=improved", etag=etag)
+        assert status2 == 304 and etag2 == etag, (status2, etag2)
+        status3, _, plans = fetch_json(base + "/plan?mode=improved")
+        assert status3 == 200 and plans["plans"].keys() == body["estimates"].keys()
+        status4, _, health = fetch_json(base + "/health")
+        assert status4 == 200 and health["status"] == "serving"
+        assert health["service"]["responses_304"] == 1, health["service"]
+        print(f"[serve_stats --smoke] ok: {len(body['estimates'])} columns, "
+              f"etag {etag[:10]}..., 304 revalidation, "
+              f"{health['ingest']['footers_read']} footers read async")
+    # context exit shut the server down; a second connect must now fail
+    try:
+        fetch_json(base + "/health")
+    except (urllib.error.URLError, ConnectionError):
+        print("[serve_stats --smoke] clean shutdown verified")
+        return 0
+    print("[serve_stats --smoke] ERROR: server still answering after stop()",
+          file=sys.stderr)
+    return 1
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.smoke:
+        return run_smoke(args)
+    if not args.root:
+        print("error: --root is required (or use --smoke)", file=sys.stderr)
+        return 2
+    with _make_server(args, args.root) as server:
+        print(f"[serve_stats] serving {args.root} at {server.url} "
+              f"(engine {server.service.engine.cache_token}, "
+              f"refresh every {args.refresh_interval or 'never'}s)")
+        print(f"[serve_stats] try: curl -s {server.url}/estimate")
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            print("\n[serve_stats] shutting down")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

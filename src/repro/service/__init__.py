@@ -1,0 +1,67 @@
+"""Stats service: async footer ingestion + a fingerprint-ETag endpoint.
+
+The paper's claim is that NDV is free because the statistics already sit in
+file footers; at warehouse scale the consumers of those statistics (query
+planners, pipeline schedulers) are *not* colocated with the files. This
+package turns the `repro.catalog` library into a service: footers stream in
+asynchronously, estimates are served over HTTP, and HTTP caching is driven
+by the same fingerprint identity the catalog already uses for its own
+caches. Two halves behind one facade:
+
+  `AsyncIngestor`   scatter-gathers `MetadataSource.fingerprint()` /
+                    `read_footer()` over a bounded thread pool and commits
+                    through `StatsCatalog.apply_footers()` — the last-good
+                    merged state serves for the whole duration of a
+                    refresh; only the merge-and-swap takes the lock.
+  `StatsService`    request side: ETag derivation, If-None-Match short-
+                    circuit, single-flight coalescing, counters. The HTTP
+                    layer (`StatsServer`, stdlib `ThreadingHTTPServer`,
+                    JSON wire format) is a thin translation over it.
+
+ETag / coherence contract
+-------------------------
+
+Every cacheable response (`/columns`, `/estimate`, `/plan`) carries a
+strong ETag computed as SHA-1 over:
+
+  1. the catalog's fingerprint set — one `file_id@fingerprint` token per
+     live file (`StatsCatalog.fingerprint_key()`), so any file addition,
+     removal, or rewrite rotates the tag, and *only* dataset changes do;
+  2. the engine's `cache_token` — differently-configured engines (which
+     may differ numerically via the kernel backend) never validate each
+     other's responses;
+  3. the request identity — endpoint kind, estimation mode, and schema
+     bounds — so a tag validates exactly the response it was issued for.
+
+Clients revalidate with `If-None-Match`. A match is answered `304 Not
+Modified` *before any catalog work*: zero footer reads, zero packs, zero
+engine executions, no lock (the hit path hashes a state token that is
+precomputed at each commit, so revalidation never queues behind an
+in-flight cold computation). A miss recomputes under single-flight:
+concurrent identical
+cold requests share one engine execution, and the response body always
+describes the dataset state its ETag names — the tag is re-derived inside
+the same critical section that builds the body.
+
+`generation` (monotonic, bumped per committed refresh that changed the
+dataset) rides along in every body for observability; the ETag, not the
+generation, is the cache key.
+
+Entry points: `repro.launch.serve_stats` (CLI), `serve()` (library),
+`examples/profile_dataset.py --serve` (demo).
+"""
+from repro.service.http import (  # noqa: F401
+    StatsServer,
+    fetch_json,
+    make_handler,
+    parse_bounds,
+    serve,
+)
+from repro.service.ingest import AsyncIngestor, IngestStats  # noqa: F401
+from repro.service.service import (  # noqa: F401
+    Response,
+    ServiceStats,
+    SingleFlight,
+    StatsService,
+    etag_matches,
+)

@@ -1,0 +1,214 @@
+"""Dependency-free HTTP front-end for `StatsService`.
+
+Built on the standard library only (`http.server.ThreadingHTTPServer`,
+JSON wire format) so the serving path adds zero dependencies to the repo.
+One thread per connection is plenty here: request handling is a dict hit
+for warm traffic and an engine call for cold traffic, and the single-flight
+layer in `StatsService` collapses concurrent cold bursts anyway.
+
+Routes (all responses are JSON):
+
+  GET  /health                       liveness + counters (never cached)
+  GET  /columns                      merged per-column summary      [ETag]
+  GET  /estimate?mode=&bounds=       per-column NDV estimates       [ETag]
+  GET  /plan?mode=                   per-column memory plans        [ETag]
+  POST /refresh                      force one ingestion refresh
+
+`bounds` is `name:value[,name:value...]` (schema-knowledge NDV upper
+bounds, Eq 14-15 family). Send `If-None-Match` with a previously returned
+ETag to get `304 Not Modified` with an empty body when the dataset state,
+engine config, and request identity all still match.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import urllib.error
+import urllib.request
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Dict, Optional, Tuple
+from urllib.parse import parse_qs, urlsplit
+
+from repro.service.service import Response, StatsService
+
+
+def fetch_json(
+    url: str,
+    *,
+    etag: Optional[str] = None,
+    method: str = "GET",
+    timeout: float = 30.0,
+) -> Tuple[int, Optional[str], Optional[dict]]:
+    """Minimal stdlib client for the stats endpoint.
+
+    Returns ``(status, etag, body)`` with 304/4xx normalized out of
+    urllib's `HTTPError` (a 304 carries no body by design). Shared by the
+    launcher smoke test, the latency benchmark, and the e2e tests so the
+    wire-level revalidation handling cannot drift between them.
+    """
+    req = urllib.request.Request(url, method=method)
+    if etag is not None:
+        req.add_header("If-None-Match", etag)
+    try:
+        with urllib.request.urlopen(req, timeout=timeout) as r:
+            return r.status, r.headers.get("ETag"), json.load(r)
+    except urllib.error.HTTPError as e:
+        raw = e.read()
+        return e.code, e.headers.get("ETag"), (
+            json.loads(raw) if raw else None
+        )
+
+
+def parse_bounds(raw: str) -> Dict[str, float]:
+    """`"tok:10,val:2.5"` -> `{"tok": 10.0, "val": 2.5}` (ValueError on junk)."""
+    bounds: Dict[str, float] = {}
+    for part in raw.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, sep, value = part.partition(":")
+        if not sep or not name:
+            raise ValueError(f"bad bounds entry {part!r}; want name:value")
+        bounds[name] = float(value)
+    return bounds
+
+
+class _Handler(BaseHTTPRequestHandler):
+    """Routes one request onto the shared `StatsService`."""
+
+    service: StatsService  # injected by make_handler
+    server_version = "ndv-stats"
+    protocol_version = "HTTP/1.1"
+
+    # -- plumbing ------------------------------------------------------------
+
+    def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
+        pass
+
+    def _send(self, resp: Response) -> None:
+        payload = b""
+        if resp.body is not None:
+            payload = json.dumps(resp.body).encode()
+        self.send_response(resp.status)
+        if resp.etag is not None:
+            self.send_header("ETag", resp.etag)
+        if resp.status != 304:
+            self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(payload)))
+        self.end_headers()
+        if payload:
+            self.wfile.write(payload)
+
+    def _error(self, status: int, message: str) -> None:
+        self._send(Response(status, {"error": message}, None))
+
+    # -- routes --------------------------------------------------------------
+
+    def do_GET(self) -> None:  # noqa: N802 — http.server API
+        url = urlsplit(self.path)
+        query = parse_qs(url.query)
+        inm = self.headers.get("If-None-Match")
+        bounds = None
+        if "bounds" in query:
+            try:
+                bounds = parse_bounds(query["bounds"][0])
+            except ValueError as e:  # 400 is for request errors ONLY —
+                return self._error(400, str(e))
+        try:
+            if url.path == "/health":
+                self._send(self.service.health())
+            elif url.path == "/columns":
+                self._send(self.service.columns(if_none_match=inm))
+            elif url.path == "/estimate":
+                self._send(self.service.estimate(
+                    mode=query.get("mode", ["paper"])[0],
+                    schema_bounds=bounds,
+                    if_none_match=inm,
+                ))
+            elif url.path == "/plan":
+                self._send(self.service.plan(
+                    mode=query.get("mode", ["paper"])[0],
+                    if_none_match=inm,
+                ))
+            else:
+                self._error(404, f"no such endpoint: {url.path}")
+        except Exception as e:
+            # — a ValueError from deep inside refresh/merge (e.g. a
+            # schema-mismatched file) is a server-side failure: 500.
+            self._error(500, f"{type(e).__name__}: {e}")
+
+    def do_POST(self) -> None:  # noqa: N802 — http.server API
+        url = urlsplit(self.path)
+        try:
+            if url.path == "/refresh":
+                self._send(self.service.refresh())
+            else:
+                self._error(404, f"no such endpoint: {url.path}")
+        except Exception as e:
+            self._error(500, f"{type(e).__name__}: {e}")
+
+
+def make_handler(service: StatsService):
+    return type("BoundStatsHandler", (_Handler,), {"service": service})
+
+
+class StatsServer:
+    """Owns a `ThreadingHTTPServer` serving one `StatsService`.
+
+    Port 0 binds an ephemeral port (read it back from `.port`). `start()`
+    runs the accept loop on a daemon thread; `stop()` shuts it down and
+    stops the service's ingestion loop. Also usable as a context manager.
+    """
+
+    def __init__(
+        self, service: StatsService, host: str = "127.0.0.1", port: int = 0
+    ):
+        self.service = service
+        self.httpd = ThreadingHTTPServer((host, port), make_handler(service))
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return (self.host, self.port)
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def start(self) -> "StatsServer":
+        self.service.start()
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, name="ndv-stats-http", daemon=True
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        # shutdown() blocks on an event only serve_forever() sets — calling
+        # it when start() failed before the accept loop ran would hang.
+        if self._thread is not None:
+            self.httpd.shutdown()
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self.httpd.server_close()
+        self.service.stop()
+
+    def __enter__(self) -> "StatsServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def serve(
+    source,
+    *,
+    host: str = "127.0.0.1",
+    port: int = 0,
+    **service_kwargs,
+) -> StatsServer:
+    """One-call convenience: build a `StatsService` and start serving it."""
+    return StatsServer(
+        StatsService(source, **service_kwargs), host=host, port=port
+    ).start()

@@ -1,0 +1,375 @@
+"""`StatsService`: the facade joining async ingestion and stat serving.
+
+One object owns a `StatsCatalog`, its `AsyncIngestor`, the shared lock, and
+the request-side machinery (ETags, single-flight). The HTTP layer
+(`repro.service.http`) is a thin translation onto this class — every
+endpoint method here is synchronous, HTTP-agnostic, and returns a
+`Response(status, body, etag)`, which keeps the whole serving contract
+testable without sockets.
+
+Coherence model (see the package docstring for the client-facing contract):
+
+  * Every cacheable response carries an ETag = SHA-1 over the catalog's
+    fingerprint set, the engine's `cache_token`, and the request identity
+    (endpoint kind, mode, schema bounds). Any file add/remove/rewrite
+    changes the fingerprint set and therefore rotates every ETag; an
+    unchanged dataset validates forever.
+  * An `If-None-Match` hit is answered before any catalog work: zero packs,
+    zero engine executions, zero merges, and no lock — the fingerprint-set
+    digest is precomputed at each commit (`_state_token`), so revalidation
+    traffic never queues behind an in-flight cold computation.
+  * Concurrent identical cold requests are coalesced (single-flight): one
+    leader computes, everyone else waits on its result. With the catalog's
+    own estimate cache this bounds work to one engine execution per
+    (dataset state, engine config, mode, bounds) no matter the fan-in.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+import time
+from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+from repro.catalog import StatsCatalog, estimate_to_json
+from repro.catalog.source import MetadataSource
+from repro.service.ingest import AsyncIngestor
+
+MODES = ("paper", "improved")
+
+
+class Response(NamedTuple):
+    """Transport-agnostic endpoint result."""
+
+    status: int                 # 200 | 304 | 400
+    body: Optional[dict]        # JSON-ready payload; None for 304
+    etag: Optional[str]         # quoted ETag; None where caching is invalid
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Request-side counters (ingestion counters live on the ingestor)."""
+
+    requests: int = 0
+    responses_200: int = 0
+    responses_304: int = 0
+    engine_runs: int = 0            # estimate-cache misses served (executions)
+    single_flight_leaders: int = 0  # cold computations actually performed
+    coalesced_waits: int = 0        # requests that rode a leader's result
+
+
+class _Call:
+    __slots__ = ("event", "result", "error")
+
+    def __init__(self):
+        self.event = threading.Event()
+        self.result = None
+        self.error: Optional[BaseException] = None
+
+
+class SingleFlight:
+    """Duplicate-call suppression: one in-flight computation per key."""
+
+    def __init__(self):
+        self._mu = threading.Lock()
+        self._calls: Dict[tuple, _Call] = {}
+
+    def do(self, key: tuple, fn: Callable[[], object]) -> Tuple[object, bool]:
+        """Run `fn` once per concurrent burst of `key`; returns (result,
+        was_leader). Followers re-raise the leader's exception."""
+        with self._mu:
+            call = self._calls.get(key)
+            leader = call is None
+            if leader:
+                call = _Call()
+                self._calls[key] = call
+        if leader:
+            try:
+                call.result = fn()
+            except BaseException as e:
+                call.error = e
+            finally:
+                with self._mu:
+                    self._calls.pop(key, None)
+                call.event.set()
+        else:
+            call.event.wait()
+        if call.error is not None:
+            raise call.error
+        return call.result, leader
+
+
+def etag_matches(if_none_match: str, etag: str) -> bool:
+    """RFC 7232 weak comparison of an If-None-Match header against one ETag."""
+    for candidate in if_none_match.split(","):
+        candidate = candidate.strip()
+        if candidate == "*":
+            return True
+        if candidate.startswith("W/"):
+            candidate = candidate[2:]
+        if candidate == etag:
+            return True
+    return False
+
+
+class StatsService:
+    """Async-ingesting, ETag-serving stats facade over one catalog.
+
+    Args:
+      source: a `StatsCatalog`, a `MetadataSource`, or a dataset root path.
+      engine: optional injected `EstimationEngine` (used only when `source`
+        is not already a catalog; a catalog brings its own).
+      max_workers: ingestion scatter width.
+      poll_interval: seconds between background refreshes under `start()`;
+        None serves whatever `refresh()` is called manually.
+      auto_load_cache: thread the catalog's mtime-guarded cache auto-load.
+      save_cache_on_commit: keep the on-disk estimate-cache spill current —
+        rewritten (compacted) after each committed refresh that changed the
+        dataset, and again whenever a cold request populates a new entry,
+        so a restarted server serves the newest state warm.
+    """
+
+    def __init__(
+        self,
+        source: Union[StatsCatalog, MetadataSource, str],
+        *,
+        engine=None,
+        max_workers: int = 8,
+        poll_interval: Optional[float] = None,
+        auto_load_cache: bool = False,
+        save_cache_on_commit: bool = False,
+    ):
+        if isinstance(source, StatsCatalog):
+            self.catalog = source
+        else:
+            self.catalog = StatsCatalog(
+                source, engine=engine, auto_load_cache=auto_load_cache
+            )
+        self.engine = self.catalog.engine
+        self.lock = threading.RLock()
+        self.save_cache_on_commit = save_cache_on_commit
+        self.ingestor = AsyncIngestor(
+            self.catalog,
+            max_workers=max_workers,
+            poll_interval=poll_interval,
+            lock=self.lock,
+            on_commit=self._on_commit,
+        )
+        self.stats = ServiceStats()
+        self._flight = SingleFlight()
+        self._state_token: Optional[str] = None
+        self._started_at = time.monotonic()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        """Initial synchronous refresh, then the polling loop (if any)."""
+        self.refresh()
+        if self.ingestor.poll_interval:
+            self.ingestor.start()
+
+    def stop(self) -> None:
+        self.ingestor.stop()
+
+    def __enter__(self) -> "StatsService":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _on_commit(self, summary) -> None:
+        # Runs under self.lock, after a committed refresh changed the state:
+        # stale-fingerprint cache lines can never be requested again, and
+        # the precomputed state token must rotate with the fingerprint set.
+        self.catalog.compact_caches()
+        self._state_token = self._compute_state_token()
+        if self.save_cache_on_commit:
+            self.catalog.save_cache()
+
+    def _ensure_ready(self) -> None:
+        if not self.catalog.scanned:
+            self.ingestor.refresh()
+
+    # -- ETags ---------------------------------------------------------------
+
+    def _compute_state_token(self) -> str:
+        """Digest of (fingerprint set, engine config). Call under the lock."""
+        h = hashlib.sha1()
+        for part in sorted(self.catalog.fingerprint_key()):
+            h.update(part.encode())
+            h.update(b"\x00")
+        h.update(self.engine.cache_token.encode())
+        return h.hexdigest()
+
+    def _current_state_token(self) -> str:
+        # Reading the attribute is atomic and the token only changes inside
+        # a commit, so the hot path (every 304) takes no lock at all.
+        token = self._state_token
+        if token is None:
+            with self.lock:
+                token = self._state_token = self._compute_state_token()
+        return token
+
+    def _etag(self, kind: str, mode: str = "", bounds_key: tuple = ()) -> str:
+        h = hashlib.sha1(self._current_state_token().encode())
+        h.update(f"|{kind}|{mode}|{bounds_key!r}".encode())
+        return f'"{h.hexdigest()}"'
+
+    # -- endpoints -----------------------------------------------------------
+
+    def health(self) -> Response:
+        """Liveness + counters. Never cached (no ETag, never 304)."""
+        with self.lock:
+            scanned = self.catalog.scanned
+            body = {
+                "status": "serving" if scanned else "starting",
+                "generation": self.ingestor.generation,
+                "files": len(self.catalog.entry_fingerprints()),
+                "columns": len(self.catalog.column_names) if scanned else 0,
+                "engine": self.engine.cache_token,
+                "ingestor_running": self.ingestor.running,
+                "uptime_s": time.monotonic() - self._started_at,
+                "service": dataclasses.asdict(self.stats),
+                "ingest": dataclasses.asdict(self.ingestor.stats),
+                "catalog": dataclasses.asdict(self.catalog.stats),
+            }
+        return Response(200, body, None)
+
+    def refresh(self) -> Response:
+        """Force one scatter-gather refresh; returns the update summary."""
+        summary = self.ingestor.refresh()
+        return Response(200, {
+            "generation": self.ingestor.generation,
+            "added": summary.added,
+            "updated": summary.updated,
+            "removed": summary.removed,
+            "total": summary.total,
+            "changed": summary.changed,
+        }, None)
+
+    def columns(self, *, if_none_match: Optional[str] = None) -> Response:
+        """Merged per-column summary of the dataset view."""
+        self.stats.requests += 1
+        self._ensure_ready()
+        with self.lock:
+            etag = self._etag("columns")
+            if if_none_match is not None and etag_matches(if_none_match, etag):
+                self.stats.responses_304 += 1
+                return Response(304, None, etag)
+            merged = self.catalog.merged_metadata()
+            body = {
+                "etag": etag,
+                "generation": self.ingestor.generation,
+                "files": self.catalog.num_files,
+                "columns": {
+                    name: {
+                        "non_null": m.non_null,
+                        "num_row_groups": m.num_row_groups,
+                        "physical_type": int(m.physical_type),
+                    }
+                    for name, m in merged.items()
+                },
+            }
+        self.stats.responses_200 += 1
+        return Response(200, body, etag)
+
+    def estimate(
+        self,
+        *,
+        mode: str = "paper",
+        schema_bounds: Optional[Dict[str, float]] = None,
+        if_none_match: Optional[str] = None,
+    ) -> Response:
+        """Dataset-level NDV estimates, bit-identical to
+        `StatsCatalog.estimate()` under the same engine config."""
+        return self._cached_endpoint(
+            "estimate", mode, schema_bounds, if_none_match,
+            lambda etag, gen: {
+                "etag": etag,
+                "generation": gen,
+                "mode": mode,
+                "schema_bounds": schema_bounds,
+                "estimates": {
+                    name: estimate_to_json(e)
+                    for name, e in self.catalog.estimate(
+                        mode=mode, schema_bounds=schema_bounds
+                    ).items()
+                },
+            },
+        )
+
+    def plan(
+        self,
+        *,
+        mode: str = "paper",
+        if_none_match: Optional[str] = None,
+    ) -> Response:
+        """Per-column memory plans via the default `NDVPlanner`.
+
+        Deliberately no planner override: the ETag/single-flight key has no
+        planner component, so differently-configured planners would
+        validate and coalesce against each other. Custom planners belong on
+        the library path (`catalog.plan(planner)`), not the cached one.
+        """
+        return self._cached_endpoint(
+            "plan", mode, None, if_none_match,
+            lambda etag, gen: {
+                "etag": etag,
+                "generation": gen,
+                "mode": mode,
+                "plans": {
+                    name: dataclasses.asdict(p)
+                    for name, p in self.catalog.plan(mode=mode).items()
+                },
+            },
+        )
+
+    def _cached_endpoint(
+        self,
+        kind: str,
+        mode: str,
+        schema_bounds: Optional[Dict[str, float]],
+        if_none_match: Optional[str],
+        build: Callable[[str, int], dict],
+    ) -> Response:
+        self.stats.requests += 1
+        if mode not in MODES:
+            return Response(
+                400, {"error": f"mode {mode!r} not in {list(MODES)}"}, None
+            )
+        self._ensure_ready()
+        bounds_key = (
+            tuple(sorted(schema_bounds.items())) if schema_bounds else ()
+        )
+        etag = self._etag(kind, mode, bounds_key)
+        if if_none_match is not None and etag_matches(if_none_match, etag):
+            # The entire hit path: one lock-free digest. No pack, no engine.
+            self.stats.responses_304 += 1
+            return Response(304, None, etag)
+
+        def compute() -> dict:
+            with self.lock:
+                # Recompute the tag inside the lock: a refresh may have
+                # committed since the cheap pre-check, and the body must
+                # describe the state its ETag names.
+                etag_now = self._etag(kind, mode, bounds_key)
+                misses = self.catalog.stats.estimate_cache_misses
+                body = build(etag_now, self.ingestor.generation)
+                new_runs = (
+                    self.catalog.stats.estimate_cache_misses - misses
+                )
+                self.stats.engine_runs += new_runs
+                if new_runs and self.save_cache_on_commit:
+                    # the spill must include what was just computed, or a
+                    # restart between now and the next commit starts cold
+                    self.catalog.save_cache()
+                return body
+
+        body, leader = self._flight.do((kind, etag), compute)
+        if leader:
+            self.stats.single_flight_leaders += 1
+        else:
+            self.stats.coalesced_waits += 1
+        self.stats.responses_200 += 1
+        return Response(200, body, body["etag"])

@@ -148,6 +148,129 @@ def test_schema_mismatch_raises_regardless_of_order(tmp_path):
         StatsCatalog(InMemoryMetadataSource({"1b": f_b, "2a": f_a})).estimate()
 
 
+def test_update_add_remove_rewrite_in_one_refresh():
+    """One refresh covering all three change kinds reports them all —
+    and matches the async ingestion path's semantics (see test_service)."""
+    src = InMemoryMetadataSource({
+        "a": write_file_footer(_shard(1)),
+        "b": write_file_footer(_shard(2)),
+        "c": write_file_footer(_shard(3)),
+    })
+    catalog = StatsCatalog(src)
+    assert catalog.update() == (3, 0, 0, 3)
+    src.add("d", write_file_footer(_shard(4)))   # add
+    src.remove("b")                              # remove
+    src.add("c", write_file_footer(_shard(33)))  # rewrite
+    summary = catalog.update()
+    assert summary == (1, 1, 1, 3)
+    assert summary.changed
+    assert set(catalog.files) == {"a", "c", "d"}
+    assert catalog.estimate() == StatsCatalog(src).estimate()
+    # steady state afterwards: nothing to report
+    assert catalog.update() == (0, 0, 0, 3)
+
+
+class _VanishingSource(InMemoryMetadataSource):
+    """Lists a file whose fingerprint/footer read then fails: the race of a
+    deletion landing between the listing and the stat."""
+
+    def __init__(self, footers, vanished=()):
+        super().__init__(footers)
+        self.vanished = set(vanished)
+
+    def list_files(self):
+        return sorted(set(super().list_files()) | self.vanished)
+
+    def fingerprint(self, file_id):
+        if file_id in self.vanished:
+            raise FileNotFoundError(file_id)
+        return super().fingerprint(file_id)
+
+
+def test_update_reports_vanished_files_as_removed():
+    src = _VanishingSource({
+        "a": write_file_footer(_shard(1)),
+        "b": write_file_footer(_shard(2)),
+    })
+    catalog = StatsCatalog(src)
+    assert catalog.update() == (2, 0, 0, 2)
+    # "b" is deleted but still shows up in the listing
+    footer_b = src.read_footer("b")
+    src.remove("b")
+    src.vanished.add("b")
+    summary = catalog.update()
+    assert summary == (0, 0, 1, 1)
+    assert catalog.files == ["a"]
+    # a vanished file that was never ingested is not reported as anything
+    src.vanished.add("ghost")
+    assert catalog.update() == (0, 0, 0, 1)
+    # and reappearing is an ordinary addition
+    src.vanished.remove("b")
+    src.add("b", footer_b)
+    assert catalog.update() == (1, 0, 0, 2)
+
+
+def test_apply_footers_rejects_unknown_live_id():
+    src = InMemoryMetadataSource({"a": write_file_footer(_shard(1))})
+    catalog = StatsCatalog(src)
+    catalog.update()
+    with pytest.raises(ValueError, match="neither a previous"):
+        catalog.apply_footers([], live_ids=["a", "mystery"])
+
+
+# -- persistent-cache hygiene ------------------------------------------------
+
+
+def test_save_cache_compacts_stale_fingerprint_sets(dataset, tmp_path):
+    import json
+
+    catalog = StatsCatalog(dataset)
+    catalog.estimate(mode="paper")
+    write_file(
+        str(tmp_path / "shard_000"), _shard(42),   # rewrite one file
+        options=WriterOptions(row_group_size=128),
+    )
+    catalog.update()
+    catalog.estimate(mode="paper")
+    catalog.estimate(mode="improved")
+    assert len(catalog._estimate_cache) == 3       # 1 stale + 2 live
+    path = catalog.save_cache()
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    live = sorted(catalog.fingerprint_key())
+    assert len(entries) == 2                       # stale entry dropped
+    assert all(e["key"]["files"] == live for e in entries)
+    # opting out persists the LRU verbatim
+    catalog.save_cache(compact=False)
+    with open(path) as f:
+        assert len(json.load(f)["entries"]) == 3
+
+    # in-memory hook drops the same stale entries (plus the stale batch)
+    assert catalog.compact_caches() == 2           # 1 estimate + 1 batch
+    assert len(catalog._estimate_cache) == 2
+
+
+def test_auto_load_cache_serves_warm_and_is_mtime_guarded(dataset):
+    import os
+
+    first = StatsCatalog(dataset)
+    expected = first.estimate(mode="improved")
+    path = first.save_cache()
+
+    warm = StatsCatalog(dataset, auto_load_cache=True)
+    got = warm.estimate(mode="improved")
+    assert got == expected
+    assert warm.stats.packs == 0                   # served from the spill
+    assert warm.stats.estimate_cache_hits == 1
+    # unchanged file -> guarded no-op; touched file -> reloaded
+    assert warm.maybe_load_cache() == 0
+    os.utime(path, ns=(os.stat(path).st_atime_ns, os.stat(path).st_mtime_ns + 1))
+    assert warm.maybe_load_cache() == 1
+    # missing file is a quiet cold start
+    os.remove(path)
+    assert StatsCatalog(dataset, auto_load_cache=True).maybe_load_cache() == 0
+
+
 def write_file_footer(cols, rg=128):
     import tempfile
 
