@@ -1,0 +1,141 @@
+"""Fleet-tier latency: routing overhead, failover cost, cross-replica warmth.
+
+What a planner pays for the fleet tier over a direct per-dataset server:
+
+  fleet/direct_warm    warm /estimate against one StatsServer (baseline)
+  fleet/routed_warm    the same request through the router (placement +
+                       passthrough overhead on top of the baseline)
+  fleet/routed_304     revalidation through the router — the fleet's hot
+                       path (zero engine work on the replica, asserted)
+  fleet/failover       latency of the first request after the placed
+                       replica is killed mid-run (ejection + retry on the
+                       survivor; asserts the ETag survives the failover)
+  fleet/warm_start     first /estimate of a freshly constructed replica
+                       over an already-spilled dataset — served from the
+                       shared estimate-cache spill with zero engine packs
+                       (asserted)
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._quick import pick
+from repro.engine import EngineConfig
+from repro.fleet import (
+    DatasetRegistry,
+    Fleet,
+    LocalReplica,
+    StatsRequest,
+    StatsRouter,
+)
+from repro.service import StatsServer, StatsService, fetch_json
+
+NUM_DATASETS = 2
+NUM_REPLICAS = 2
+NUM_SHARDS = pick(4, 2)
+ROWS_PER_SHARD = pick(1 << 12, 1 << 10)
+WARM_REQS = pick(100, 5)
+
+
+def _write_dataset(root: str, seed: int) -> str:
+    from repro.columnar.writer import WriterOptions, write_file
+
+    rng = np.random.default_rng(seed)
+    for i in range(NUM_SHARDS):
+        write_file(
+            os.path.join(root, f"shard_{i:04d}"),
+            {
+                "tok": rng.integers(0, 1024, ROWS_PER_SHARD).astype(np.int64),
+                "val": np.round(rng.uniform(0, 100, ROWS_PER_SHARD), 1),
+            },
+            options=WriterOptions(row_group_size=512),
+        )
+    return root
+
+
+def _time_requests(url: str, n: int, etag=None) -> float:
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fetch_json(url, etag=etag)
+    return (time.perf_counter() - t0) * 1e6 / n
+
+
+def run() -> List[tuple]:
+    rows: List[tuple] = []
+    base = tempfile.mkdtemp()
+    cfg = EngineConfig()
+    registry = DatasetRegistry()
+    for i in range(NUM_DATASETS):
+        root = _write_dataset(os.path.join(base, f"ds{i}"), seed=i)
+        registry.add("bench", f"ds{i}", root, engine_config=cfg)
+
+    # direct baseline: one StatsServer over dataset 0 (its own root copy —
+    # a separate spill-free service so the fleet's caches are not shared)
+    direct_root = _write_dataset(os.path.join(base, "direct"), seed=0)
+    with StatsServer(StatsService(direct_root)) as direct:
+        url = direct.url + "/estimate?mode=improved"
+        fetch_json(url)  # cold: pack + engine run, excluded from the mean
+        direct_us = _time_requests(url, WARM_REQS)
+        rows.append((
+            "fleet/direct_warm", direct_us, f"reqs={WARM_REQS};replicas=1",
+        ))
+
+    with StatsRouter(Fleet(registry, replicas_per_dataset=NUM_REPLICAS)) as router:
+        url = router.url_for("bench", "ds0", "estimate") + "?mode=improved"
+        status, etag, _ = fetch_json(url)  # cold
+        assert status == 200 and etag
+        routed_us = _time_requests(url, WARM_REQS)
+        rows.append((
+            "fleet/routed_warm", routed_us,
+            f"reqs={WARM_REQS};replicas={NUM_REPLICAS};"
+            f"overhead={routed_us - direct_us:.0f}us",
+        ))
+
+        rev_us = _time_requests(url, WARM_REQS, etag=etag)
+        status304, _, _ = fetch_json(url, etag=etag)
+        assert status304 == 304
+        rows.append((
+            "fleet/routed_304", rev_us,
+            f"reqs={WARM_REQS};vs_warm={routed_us / max(rev_us, 1e-9):.1f}x",
+        ))
+
+        # failover: kill the replica that owns this placement, time the
+        # next request (ejection + retry), assert the ETag survived
+        rset = router.fleet.sets["bench/ds0"]
+        victim = rset.rank(StatsRequest("estimate", "improved").identity)[0]
+        victim.kill()
+        t0 = time.perf_counter()
+        status, etag_after, _ = fetch_json(url)
+        failover_us = (time.perf_counter() - t0) * 1e6
+        assert status == 200 and etag_after == etag
+        assert rset.failovers >= 1
+        rows.append((
+            "fleet/failover", failover_us,
+            f"failovers={rset.failovers};etag_stable=1",
+        ))
+
+        # cross-replica warm start: a brand-new replica over the spilled
+        # dataset serves its first estimate with zero engine packs
+        t0 = time.perf_counter()
+        fresh = LocalReplica(
+            "bench/ds0#fresh", registry.get("bench", "ds0").root,
+            engine_config=cfg,
+        ).start()
+        try:
+            resp = fresh.handle(StatsRequest("estimate", "improved"))
+            warm_start_us = (time.perf_counter() - t0) * 1e6
+            assert resp.status == 200 and resp.etag == etag
+            packs = fresh.service.catalog.stats.packs
+            assert packs == 0, f"expected spill hit, got {packs} packs"
+        finally:
+            fresh.stop()
+        rows.append((
+            "fleet/warm_start", warm_start_us,
+            f"packs=0;spill_entries>=1",
+        ))
+    return rows

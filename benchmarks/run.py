@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   catalog_scale.py— StatsCatalog cold/warm/incremental latency + retraces
   complexity.py   — §10.2 single-pass complexity table
   engine_scale.py — EstimationEngine local/sharded/chunked throughput
+  fleet_latency.py — routed vs direct overhead, failover, shared-spill warmth
   kernels.py      — Pallas kernel suite throughput
   service_latency.py — stats-service cold/warm/304 latency + throughput
   warehouse.py    — TPC-H-shaped lineitem accuracy via the catalog (§10.1)
@@ -39,6 +40,7 @@ def main(argv=None) -> None:
         catalog_scale,
         complexity,
         engine_scale,
+        fleet_latency,
         kernels,
         service_latency,
         warehouse,
@@ -50,6 +52,7 @@ def main(argv=None) -> None:
         ("catalog_scale", catalog_scale),
         ("engine_scale", engine_scale),
         ("service_latency", service_latency),
+        ("fleet_latency", fleet_latency),
         ("baselines", baselines),
         ("batch_memory", batch_memory),
         ("complexity", complexity),

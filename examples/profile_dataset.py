@@ -23,6 +23,20 @@ script printed without any footer access of their own:
         headers={"If-None-Match": etag},
     )
     urllib.request.urlopen(req)   # -> HTTPError 304: estimates unchanged
+
+For a whole warehouse namespace, front many datasets with the replicated
+fleet router instead (`python -m repro.launch.serve_fleet`, see
+`repro.fleet`) — same responses, same ETags, one endpoint:
+
+    # client side against the router — only the path gains {ns}/{dataset}:
+    r = urllib.request.urlopen(
+        "http://127.0.0.1:8090/wh/lineitem/estimate?mode=improved"
+    )
+    etag, ests = r.headers["ETag"], json.load(r)["estimates"]
+    # the same If-None-Match revalidation works across replica failover:
+    # ETags derive from dataset state, not from which replica answered,
+    # so a 304 survives crashes, restarts, and cold replicas.
+    urllib.request.urlopen("http://127.0.0.1:8090/datasets")  # namespace map
 """
 import argparse
 import os

@@ -22,11 +22,19 @@ The catalog's contract (see the package docstring for the design):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
+import tempfile
+import threading
 from collections import OrderedDict
-from typing import Dict, List, NamedTuple, Optional, Sequence, Union
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple, Union
+
+try:
+    import fcntl
+except ImportError:  # non-POSIX: fall back to atomic-replace-only safety
+    fcntl = None
 
 import jax.numpy as jnp
 import numpy as np
@@ -39,6 +47,44 @@ from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimat
 
 CACHE_FILE_NAME = ".ndv_estimate_cache.json"
 _CACHE_VERSION = 1
+
+# One lock per spill path: replicas of the same dataset inside one process
+# (the fleet tier runs several `StatsService`s over one root) serialize
+# their read-merge-write cycles here. Cross-PROCESS writers are covered by
+# the atomic tempfile + `os.replace` protocol plus the mtime/fingerprint
+# guard in `save_cache()` — a reader never observes a torn file, and a
+# concurrent writer's entries are merged rather than clobbered whenever the
+# mtime reveals them.
+_SPILL_LOCKS: Dict[str, threading.Lock] = {}
+_SPILL_LOCKS_MU = threading.Lock()
+
+
+def _spill_lock(path: str) -> threading.Lock:
+    key = os.path.abspath(path)
+    with _SPILL_LOCKS_MU:
+        lock = _SPILL_LOCKS.get(key)
+        if lock is None:
+            lock = _SPILL_LOCKS[key] = threading.Lock()
+        return lock
+
+
+@contextlib.contextmanager
+def _cross_process_spill_lock(path: str):
+    """Advisory flock on a sidecar `<path>.lock` spanning one writer's
+    read-merge-write cycle, so two PROCESSES cannot interleave between the
+    merge read and the `os.replace` and drop each other's entries. No-op
+    where `fcntl` is unavailable — atomic replace still guarantees
+    readers a consistent file there, only cross-process merge completeness
+    degrades to best-effort."""
+    if fcntl is None:
+        yield
+        return
+    fd = os.open(path + ".lock", os.O_CREAT | os.O_RDWR, 0o644)
+    try:
+        fcntl.flock(fd, fcntl.LOCK_EX)
+        yield
+    finally:
+        os.close(fd)  # closing drops the flock
 
 
 def estimate_to_json(est: NDVEstimate) -> dict:
@@ -423,6 +469,37 @@ class StatsCatalog:
             tuple(d["engine"]),
         )
 
+    def _read_spill(
+        self, path: str
+    ) -> Tuple[Optional[List[tuple]], Optional[int]]:
+        """Parse an existing spill file -> ([(key, estimates)], mtime_ns).
+
+        ``(None, None)`` when the file is missing, version-mismatched, or
+        unparseable (a foreign writer is mid-protocol — treat as absent
+        rather than fail the save).
+        """
+        try:
+            mtime_ns = os.stat(path).st_mtime_ns
+            with open(path) as f:
+                payload = json.load(f)
+            if payload.get("version") != _CACHE_VERSION:
+                return None, None
+            items = [
+                (
+                    self._key_from_json(entry["key"]),
+                    {
+                        name: estimate_from_json(d)
+                        for name, d in entry["estimates"].items()
+                    },
+                )
+                for entry in payload["entries"]
+            ]
+        except (FileNotFoundError, json.JSONDecodeError,
+                KeyError, TypeError, ValueError, AttributeError):
+            # valid-JSON-wrong-shape is as foreign as non-JSON
+            return None, None
+        return items, mtime_ns
+
     def save_cache(self, path: Optional[str] = None, *, compact: bool = True) -> str:
         """Spill the estimate cache to a JSON file next to the dataset.
 
@@ -437,25 +514,73 @@ class StatsCatalog:
         every rewrite the LRU happened to retain. ``compact=False`` persists
         the LRU verbatim, useful when several dataset states legitimately
         coexist (e.g. snapshotting mid-migration).
+
+        Safe under concurrent writers (replicas of one dataset spilling to
+        the shared file):
+
+          * the payload goes to a uniquely-named temp file in the target
+            directory and lands via `os.replace`, so a racing reader or
+            writer never observes a torn spill, no matter how many
+            processes write;
+          * on the compact path, live-fingerprint entries already on disk
+            are merged into what we write (union; our values win — by the
+            engine parity contract they are bit-identical anyway), so two
+            replicas spilling different (mode, bounds, engine) entries
+            enrich rather than clobber each other;
+          * the write is skipped entirely when the on-disk spill is newer
+            than the last state this catalog loaded or saved AND already
+            fingerprint-compatible with everything we would write —
+            another replica got there first with a superset.
         """
         path = path or self._default_cache_path()
-        items = list(self._estimate_cache.items())
-        if compact:
-            live = self.fingerprint_key()
-            items = [(k, v) for k, v in items if k[0] == live]
-        entries = []
-        for key, ests in items:
-            entries.append({
-                "key": self._key_to_json(key),
-                "estimates": {
-                    name: estimate_to_json(e) for name, e in ests.items()
-                },
-            })
-        payload = {"version": _CACHE_VERSION, "entries": entries}
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(payload, f)
-        os.replace(tmp, path)
+        with _spill_lock(path), _cross_process_spill_lock(path):
+            items = list(self._estimate_cache.items())
+            if compact:
+                live = self.fingerprint_key()
+                items = [(k, v) for k, v in items if k[0] == live]
+                disk_items, disk_mtime_ns = self._read_spill(path)
+                if disk_items is not None:
+                    disk_live = [(k, v) for k, v in disk_items if k[0] == live]
+                    ours = {k for k, _ in items}
+                    if (
+                        disk_mtime_ns != self._cache_file_mtime_ns
+                        and ours <= {k for k, _ in disk_live}
+                    ):
+                        return path
+                    merged = OrderedDict(disk_live)
+                    merged.update(items)
+                    items = list(merged.items())
+            entries = []
+            for key, ests in items:
+                entries.append({
+                    "key": self._key_to_json(key),
+                    "estimates": {
+                        name: estimate_to_json(e) for name, e in ests.items()
+                    },
+                })
+            payload = {"version": _CACHE_VERSION, "entries": entries}
+            fd, tmp = tempfile.mkstemp(
+                dir=os.path.dirname(path) or ".",
+                prefix=os.path.basename(path) + ".",
+                suffix=".tmp",
+            )
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(payload, f)
+                # Record the temp file's mtime BEFORE the replace: it is
+                # the mtime our bytes carry into `path` (os.replace keeps
+                # the inode), whereas re-statting the shared path after the
+                # replace could capture a sibling's even-newer write and
+                # alias it as already-loaded forever.
+                mtime_ns = os.stat(tmp).st_mtime_ns
+                os.replace(tmp, path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+            self._cache_file_mtime_ns = mtime_ns
         return path
 
     def load_cache(self, path: Optional[str] = None) -> int:
@@ -467,22 +592,13 @@ class StatsCatalog:
         unreachable, and LRU eviction discards them.
         """
         path = path or self._default_cache_path()
-        if not os.path.exists(path):
+        with _spill_lock(path):
+            items, _ = self._read_spill(path)
+        if items is None:
             return 0
-        with open(path) as f:
-            payload = json.load(f)
-        if payload.get("version") != _CACHE_VERSION:
-            return 0
-        loaded = 0
-        for entry in payload["entries"]:
-            key = self._key_from_json(entry["key"])
-            ests = {
-                name: estimate_from_json(d)
-                for name, d in entry["estimates"].items()
-            }
+        for key, ests in items:
             self._cache_put(self._estimate_cache, key, ests)
-            loaded += 1
-        return loaded
+        return len(items)
 
     def maybe_load_cache(self, path: Optional[str] = None) -> int:
         """mtime-guarded `load_cache()`: load only when the file changed.

@@ -21,9 +21,11 @@ pure per-shard kernel. Three execution strategies hide behind one config:
            The engine's packer rounds B up to a multiple of the shard count
            so the split is even and the extra lanes are ordinary masked
            padding.
-  chunked  stream batches wider than a fixed budget (`max_batch`) through
+  chunked  stream batches wider than a budget (`max_batch`) through
            equal-size sub-batches, so B — and therefore device memory and
-           trace shapes — stays bounded regardless of dataset width.
+           trace shapes — stays bounded regardless of dataset width. The
+           budget is either a fixed power of two or "auto", derived from
+           the device's reported memory (`resolve_max_batch()`).
 
 The parity contract is strict: for real (non-padding) lanes, the sharded
 and chunked paths produce bit-identical outputs to the local path (asserted
@@ -36,9 +38,11 @@ The config also carries the `kernels/ops` backend knob ("auto" / "pallas" /
 it into `estimate_batch`, which routes the Newton inversions and the
 detector scan through the Pallas kernels or the jnp reference accordingly.
 """
-from repro.engine.config import EngineConfig  # noqa: F401
+from repro.engine.config import DEFAULT_MAX_BATCH, EngineConfig  # noqa: F401
 from repro.engine.engine import (  # noqa: F401
     EstimationEngine,
+    auto_chunk_budget,
     default_engine,
     default_packer,
+    detect_device_memory,
 )

@@ -8,9 +8,15 @@ differently never share a cache line.
 from __future__ import annotations
 
 import dataclasses
+from typing import Union
 
 STRATEGIES = ("auto", "local", "sharded", "chunked")
 BACKENDS = ("auto", "pallas", "ref")
+
+# The chunk budget used when max_batch="auto" finds no usable device memory
+# report (host CPU backends return no `memory_stats()`), and the historical
+# fixed default.
+DEFAULT_MAX_BATCH = 4096
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,13 +38,19 @@ class EngineConfig:
       max_batch: the chunk budget — the widest B a single `estimate_batch`
         call may see under the chunked strategy. Must be a power of two so
         power-of-two-bucketed batches always split into equal full chunks
-        (one jit trace shape, no ragged tail).
+        (one jit trace shape, no ragged tail). "auto" derives the budget
+        from the accelerator's reported memory at first use
+        (`EstimationEngine.resolve_max_batch()`), falling back to
+        `DEFAULT_MAX_BATCH` where no report exists (host CPU). Like
+        `strategy`, "auto" stays unresolved in `cache_key`/`cache_token`:
+        chunking is numerics-neutral under the engine parity contract, so
+        differently-sized chunks may share cache lines and ETags.
     """
 
     strategy: str = "auto"
     backend: str = "auto"
     num_shards: int = 0
-    max_batch: int = 4096
+    max_batch: Union[int, str] = DEFAULT_MAX_BATCH
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -50,5 +62,10 @@ class EngineConfig:
         if self.num_shards < 0:
             raise ValueError("num_shards must be >= 0 (0 = all devices)")
         mb = self.max_batch
-        if mb < 1 or (mb & (mb - 1)) != 0:
+        if isinstance(mb, str):
+            if mb != "auto":
+                raise ValueError(
+                    f'max_batch must be "auto" or a power of two, got {mb!r}'
+                )
+        elif mb < 1 or (mb & (mb - 1)) != 0:
             raise ValueError(f"max_batch must be a power of two, got {mb}")

@@ -23,7 +23,48 @@ from repro.core.ndv.estimator import (
     estimates_from_batch,
 )
 from repro.core.ndv.types import ColumnBatch, ColumnMetadata, NDVEstimate
-from repro.engine.config import EngineConfig
+from repro.engine.config import DEFAULT_MAX_BATCH, EngineConfig
+
+# max_batch="auto" sizing. A packed lane (one column) costs ~22 bytes per
+# (lane, row-group) cell across the seven (B, R) planes plus ~50 bytes of
+# per-lane scalars; at the bucketed R ceilings real warehouses hit (<=256)
+# that is ~6 KB, and the estimators' masked intermediates (several
+# temporaries per plane across the Newton iterations) multiply it by a
+# small constant. 64 KB/lane is that footprint with ~10x headroom — the
+# budget only needs the right order of magnitude, since chunk width is
+# numerics-neutral and merely bounds peak memory.
+AUTO_MEM_FRACTION = 0.25
+NOMINAL_LANE_BYTES = 1 << 16
+AUTO_MIN_BATCH = 1024
+AUTO_MAX_BATCH = 1 << 20
+
+
+def detect_device_memory() -> Optional[int]:
+    """Bytes of memory on the first visible device, or None.
+
+    Uses the allocator's `memory_stats()` report (present on TPU/GPU
+    backends; host CPU returns nothing). Any failure means "unknown" — the
+    auto budget then falls back to `DEFAULT_MAX_BATCH`.
+    """
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    limit = stats.get("bytes_limit") or stats.get("bytes_reservable_limit")
+    return int(limit) if limit else None
+
+
+def auto_chunk_budget(mem_bytes: Optional[int]) -> int:
+    """Device memory -> chunk budget: the largest power of two of nominal
+    lanes fitting in `AUTO_MEM_FRACTION` of memory, clamped to
+    [AUTO_MIN_BATCH, AUTO_MAX_BATCH]. None -> `DEFAULT_MAX_BATCH`."""
+    if not mem_bytes:
+        return DEFAULT_MAX_BATCH
+    lanes = int(mem_bytes * AUTO_MEM_FRACTION / NOMINAL_LANE_BYTES)
+    lanes = max(AUTO_MIN_BATCH, min(lanes, AUTO_MAX_BATCH))
+    return 1 << (lanes.bit_length() - 1)  # previous power of two
 
 
 @functools.lru_cache(maxsize=None)
@@ -64,6 +105,7 @@ class EstimationEngine:
     def __init__(self, config: Optional[EngineConfig] = None):
         self.config = config or EngineConfig()
         self._packer: Optional[BatchPacker] = None
+        self._auto_max_batch: Optional[int] = None
 
     # -- identity ------------------------------------------------------------
 
@@ -125,13 +167,30 @@ class EstimationEngine:
 
     # -- strategy resolution --------------------------------------------------
 
+    def resolve_max_batch(self) -> int:
+        """The chunk budget this engine executes with.
+
+        A fixed config value passes through; "auto" is derived once per
+        engine from the first device's reported memory (fallback:
+        `DEFAULT_MAX_BATCH` where the backend reports none, e.g. host CPU).
+        Resolution never enters `cache_key`/`cache_token` — chunk width is
+        numerics-neutral by the parity contract, so caches and ETags stay
+        portable across differently-sized hosts.
+        """
+        mb = self.config.max_batch
+        if mb != "auto":
+            return mb
+        if self._auto_max_batch is None:
+            self._auto_max_batch = auto_chunk_budget(detect_device_memory())
+        return self._auto_max_batch
+
     def resolve_strategy(self, batch_width: int) -> str:
         s = self.config.strategy
         if s != "auto":
             return s
         if self.shard_count > 1:
             return "sharded"
-        if batch_width > self.config.max_batch:
+        if batch_width > self.resolve_max_batch():
             return "chunked"
         return "local"
 
@@ -187,7 +246,7 @@ class EstimationEngine:
         return self._trim(out, b)
 
     def _estimate_chunked(self, batch, schema_bound, mode) -> BatchEstimates:
-        c = self.config.max_batch
+        c = self.resolve_max_batch()
         if batch.batch <= c:
             return estimate_batch(
                 batch, schema_bound, mode=mode, backend=self.config.backend

@@ -1,0 +1,120 @@
+"""`DatasetRegistry`: the warehouse namespace the fleet tier serves.
+
+One registry maps `namespace/dataset` keys to `DatasetSpec`s — the dataset
+root on disk plus the per-dataset `EngineConfig` the replicas must share.
+The engine config lives HERE, not on individual replicas, deliberately:
+every response ETag folds in the engine's `cache_token`, so replicas of one
+dataset may only be interchangeable (byte-identical tags, shared estimate
+caches) if they run the same config. The registry is the single place that
+invariant is pinned.
+
+Keys are two URL path segments (`{namespace}/{dataset}`), validated at
+registration so the router can mount them directly as HTTP paths.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.engine import EngineConfig
+
+_SEGMENT = re.compile(r"^[A-Za-z0-9._-]+$")
+
+
+def _check_segment(kind: str, value: str) -> str:
+    if not _SEGMENT.match(value or ""):
+        raise ValueError(
+            f"{kind} {value!r} must be a non-empty URL path segment "
+            f"([A-Za-z0-9._-]+)"
+        )
+    return value
+
+
+@dataclasses.dataclass(frozen=True)
+class DatasetSpec:
+    """One served dataset: identity, location, shared engine config."""
+
+    namespace: str
+    dataset: str
+    root: str
+    engine_config: EngineConfig = dataclasses.field(
+        default_factory=EngineConfig
+    )
+
+    def __post_init__(self):
+        _check_segment("namespace", self.namespace)
+        _check_segment("dataset", self.dataset)
+
+    @property
+    def key(self) -> str:
+        """The routing key, `namespace/dataset` — also the HTTP mount path."""
+        return f"{self.namespace}/{self.dataset}"
+
+
+def parse_spec(text: str) -> Tuple[str, str, str]:
+    """CLI form `namespace/dataset=/path/to/root` -> (ns, ds, root)."""
+    key, sep, root = text.partition("=")
+    if not sep or not root:
+        raise ValueError(
+            f"bad dataset spec {text!r}; want namespace/dataset=/path"
+        )
+    ns, sep, ds = key.partition("/")
+    if not sep:
+        raise ValueError(
+            f"bad dataset key {key!r}; want namespace/dataset"
+        )
+    return _check_segment("namespace", ns), _check_segment("dataset", ds), root
+
+
+class DatasetRegistry:
+    """Ordered `namespace/dataset` -> `DatasetSpec` mapping."""
+
+    def __init__(self, specs: Optional[List[DatasetSpec]] = None):
+        self._specs: Dict[str, DatasetSpec] = {}
+        for spec in specs or []:
+            self.register(spec)
+
+    def register(self, spec: DatasetSpec) -> DatasetSpec:
+        if spec.key in self._specs:
+            raise ValueError(f"dataset {spec.key!r} is already registered")
+        self._specs[spec.key] = spec
+        return spec
+
+    def add(
+        self,
+        namespace: str,
+        dataset: str,
+        root: str,
+        *,
+        engine_config: Optional[EngineConfig] = None,
+    ) -> DatasetSpec:
+        return self.register(DatasetSpec(
+            namespace, dataset, root,
+            engine_config=engine_config or EngineConfig(),
+        ))
+
+    def get(self, namespace: str, dataset: str) -> DatasetSpec:
+        """KeyError (with the known keys) when the dataset is not served."""
+        key = f"{namespace}/{dataset}"
+        try:
+            return self._specs[key]
+        except KeyError:
+            raise KeyError(
+                f"dataset {key!r} is not registered (serving: {self.keys()})"
+            ) from None
+
+    def keys(self) -> List[str]:
+        return list(self._specs)
+
+    def specs(self) -> List[DatasetSpec]:
+        return list(self._specs.values())
+
+    def __len__(self) -> int:
+        return len(self._specs)
+
+    def __iter__(self) -> Iterator[DatasetSpec]:
+        return iter(self._specs.values())
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._specs

@@ -1,0 +1,371 @@
+"""Replicas and `ReplicaSet`: health-checked request placement per dataset.
+
+A replica is anything that can answer the stats-serving contract —
+`StatsRequest` in, `repro.service.Response` out — plus a cheap liveness
+probe. Two implementations:
+
+  `LocalReplica`   a process-local `StatsService` in shared-spill mode: it
+                   warms from, and contributes to, the dataset's on-disk
+                   estimate-cache spill, so any replica of the set can
+                   serve any entry a sibling has computed. `kill()` is the
+                   fault-injection hook (smoke test, failover benchmark):
+                   the replica starts refusing requests and failing probes,
+                   exactly like a crashed process behind a proxy.
+  `RemoteReplica`  an HTTP proxy to a `StatsServer` owned elsewhere; the
+                   probe is `GET /health`, requests forward with their
+                   `If-None-Match` intact.
+
+`ReplicaSet` places requests with rendezvous (highest-random-weight)
+hashing over (dataset, request identity): identical requests always land on
+the same healthy replica — maximizing that replica's estimate-cache hit
+rate — while distinct (mode, bounds, endpoint) identities spread across the
+set. When a replica is ejected, only the keys it owned move (classic
+rendezvous property); everything else keeps its placement. Failover is
+retry-down-the-preference-order: a replica that raises is marked down and
+the request continues to the next candidate, so one crash loses no
+requests. Ejected replicas rejoin when `probe_all()` sees them healthy —
+correct because ETags are derived from dataset state, not server identity,
+so a rejoining (or brand-new) replica validates the same client tags
+byte-for-byte.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import http.client
+import json
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+from urllib.parse import urlencode
+
+from repro.engine import EngineConfig, EstimationEngine
+from repro.service import Response, StatsService, fetch_json
+
+
+@dataclasses.dataclass(frozen=True)
+class StatsRequest:
+    """One transport-agnostic routed request (the router's unit of work)."""
+
+    kind: str  # "columns" | "estimate" | "plan" | "health" | "refresh"
+    mode: str = "paper"
+    schema_bounds: Optional[Tuple[Tuple[str, float], ...]] = None
+    if_none_match: Optional[str] = None
+
+    @property
+    def identity(self) -> tuple:
+        """The placement key: everything that names the cached response —
+        and nothing that does not (`if_none_match` must not move a request
+        between replicas, or revalidations would land cold)."""
+        return (self.kind, self.mode, self.schema_bounds or ())
+
+    @property
+    def bounds_dict(self) -> Optional[Dict[str, float]]:
+        if not self.schema_bounds:
+            return None
+        return dict(self.schema_bounds)
+
+
+class ReplicaError(ConnectionError):
+    """A replica refused or failed a request (triggers failover)."""
+
+
+class NoReplicaAvailable(RuntimeError):
+    """Every replica of the set failed the request."""
+
+
+# What ejects a replica: transport-shaped failures only (`ReplicaError` is
+# a `ConnectionError` is an `OSError`). Anything else — a ValueError from a
+# schema-mismatched dataset, a bug — is request- or dataset-scoped: every
+# replica would fail it identically, so ejecting (let alone cascading
+# through the whole set) would turn one poison request into a fleet-wide
+# "degraded" for no benefit. Those propagate to the HTTP layer's 500
+# instead, leaving health state untouched.
+FAILOVER_ERRORS = (OSError, TimeoutError)
+
+
+class LocalReplica:
+    """One process-local `StatsService` replica in shared-spill mode."""
+
+    def __init__(
+        self,
+        name: str,
+        root: str,
+        *,
+        engine_config: Optional[EngineConfig] = None,
+        poll_interval: Optional[float] = None,
+        max_workers: int = 8,
+    ):
+        self.name = name
+        self.service = StatsService(
+            root,
+            engine=EstimationEngine(engine_config or EngineConfig()),
+            poll_interval=poll_interval,
+            max_workers=max_workers,
+            shared_spill=True,
+        )
+        self._killed = False
+
+    def start(self) -> "LocalReplica":
+        self.service.start()
+        return self
+
+    def stop(self) -> None:
+        self.service.stop()
+
+    def kill(self) -> None:
+        """Simulate a crash: refuse all requests and fail probes until
+        `revive()`. The underlying ingestion loop is stopped too."""
+        self._killed = True
+        self.service.stop()
+
+    def revive(self) -> None:
+        self._killed = False
+        self.service.start()
+
+    def probe(self) -> bool:
+        return not self._killed and self.service.probe()
+
+    def handle(self, req: StatsRequest) -> Response:
+        if self._killed:
+            raise ReplicaError(f"replica {self.name} is down")
+        if req.kind == "columns":
+            return self.service.columns(if_none_match=req.if_none_match)
+        if req.kind == "estimate":
+            return self.service.estimate(
+                mode=req.mode,
+                schema_bounds=req.bounds_dict,
+                if_none_match=req.if_none_match,
+            )
+        if req.kind == "plan":
+            return self.service.plan(
+                mode=req.mode, if_none_match=req.if_none_match
+            )
+        if req.kind == "health":
+            return self.service.health()
+        if req.kind == "refresh":
+            return self.service.refresh()
+        return Response(400, {"error": f"unknown kind {req.kind!r}"}, None)
+
+
+class RemoteReplica:
+    """HTTP proxy to a `StatsServer` whose lifecycle is owned elsewhere."""
+
+    def __init__(self, name: str, base_url: str, *, timeout: float = 30.0):
+        self.name = name
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    def start(self) -> "RemoteReplica":
+        return self
+
+    def stop(self) -> None:
+        pass
+
+    def probe(self) -> bool:
+        try:
+            status, _, body = fetch_json(
+                self.base_url + "/health", timeout=self.timeout
+            )
+        except OSError:
+            return False
+        return status == 200 and (body or {}).get("status") == "serving"
+
+    def handle(self, req: StatsRequest) -> Response:
+        path, method = f"/{req.kind}", "GET"
+        if req.kind == "refresh":
+            method = "POST"
+        params = {}
+        if req.kind in ("estimate", "plan"):
+            params["mode"] = req.mode
+        if req.kind == "estimate" and req.schema_bounds:
+            params["bounds"] = ",".join(
+                f"{n}:{v}" for n, v in req.schema_bounds
+            )
+        url = self.base_url + path + (
+            "?" + urlencode(params) if params else ""
+        )
+        try:
+            status, etag, body = fetch_json(
+                url,
+                etag=req.if_none_match,
+                method=method,
+                timeout=self.timeout,
+            )
+        except (OSError, http.client.HTTPException,
+                json.JSONDecodeError) as e:
+            # unreachable, hung, or answering garbage: all replica-shaped
+            raise ReplicaError(
+                f"replica {self.name} at {self.base_url}: {e}"
+            ) from e
+        # A 5xx passes through as a response, NOT as a ReplicaError: the
+        # upstream _Handler turns application errors (e.g. a ValueError
+        # from a schema-mismatched dataset) into 500s, and those would
+        # fail identically on every replica — same contract as a
+        # LocalReplica propagating the exception (see FAILOVER_ERRORS).
+        # Replica-local sickness is the probe loop's job to catch.
+        return Response(status, body, etag)
+
+
+@dataclasses.dataclass
+class ReplicaHealth:
+    """Mutable health record the set keeps per replica."""
+
+    healthy: bool = True
+    consecutive_failures: int = 0
+    last_error: Optional[str] = None
+    last_change_monotonic: float = 0.0
+    ejections: int = 0
+
+
+class ReplicaSet:
+    """N interchangeable replicas of one dataset behind rendezvous hashing."""
+
+    def __init__(self, dataset_key: str, replicas: List):
+        if not replicas:
+            raise ValueError(f"replica set {dataset_key!r} needs >= 1 replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names in set: {names}")
+        self.dataset_key = dataset_key
+        self.replicas = list(replicas)
+        self.health: Dict[str, ReplicaHealth] = {
+            r.name: ReplicaHealth() for r in replicas
+        }
+        self.failovers = 0
+        self._mu = threading.Lock()
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "ReplicaSet":
+        for r in self.replicas:
+            r.start()
+        return self
+
+    def stop(self) -> None:
+        for r in self.replicas:
+            r.stop()
+
+    # -- placement -----------------------------------------------------------
+
+    def rank(self, identity: tuple) -> List:
+        """All replicas, best placement first (rendezvous hashing).
+
+        Weight = SHA-1(dataset key, request identity, replica name): stable
+        across processes and restarts, so a router restart or an
+        independently-built second router places identically.
+        """
+        def weight(replica) -> str:
+            h = hashlib.sha1(
+                f"{self.dataset_key}|{identity!r}|{replica.name}".encode()
+            )
+            return h.hexdigest()
+
+        return sorted(self.replicas, key=weight, reverse=True)
+
+    def _candidates(self, identity: tuple) -> List:
+        """Healthy replicas in rank order, then ejected ones as last
+        resorts — an all-down set still attempts every replica (and a
+        successful hail-mary resurrects the one that answered)."""
+        ranked = self.rank(identity)
+        with self._mu:
+            up = [r for r in ranked if self.health[r.name].healthy]
+            down = [r for r in ranked if not self.health[r.name].healthy]
+        return up + down
+
+    def _mark(self, name: str, healthy: bool, error: Optional[str]) -> None:
+        with self._mu:
+            rec = self.health[name]
+            if healthy:
+                rec.consecutive_failures = 0
+                rec.last_error = None
+            else:
+                rec.consecutive_failures += 1
+                rec.last_error = error
+                if rec.healthy:
+                    rec.ejections += 1
+            if rec.healthy != healthy:
+                rec.healthy = healthy
+                rec.last_change_monotonic = time.monotonic()
+
+    # -- serving -------------------------------------------------------------
+
+    def call(self, req: StatsRequest) -> Tuple[Response, str, int]:
+        """Route one request; returns (response, replica name, attempts).
+
+        A replica that fails transport-shaped (`FAILOVER_ERRORS`) is
+        ejected and the request retries on the next candidate — the caller
+        sees a failure only when every replica failed
+        (`NoReplicaAvailable`, carrying each replica's error). Any other
+        exception is request/dataset-scoped and propagates immediately,
+        with no ejection: every replica would fail it the same way.
+        """
+        errors: List[str] = []
+        for attempt, replica in enumerate(self._candidates(req.identity), 1):
+            try:
+                resp = replica.handle(req)
+            except FAILOVER_ERRORS as e:
+                self._mark(replica.name, False, f"{type(e).__name__}: {e}")
+                errors.append(f"{replica.name}: {type(e).__name__}: {e}")
+                with self._mu:
+                    self.failovers += 1
+                continue
+            self._mark(replica.name, True, None)
+            return resp, replica.name, attempt
+        raise NoReplicaAvailable(
+            f"all {len(self.replicas)} replicas of {self.dataset_key!r} "
+            f"failed: {'; '.join(errors)}"
+        )
+
+    def refresh_all(self) -> List[Tuple[str, Optional[Response]]]:
+        """Broadcast a refresh to every replica (each replica ingests
+        independently; all must see a dataset change for their ETags to
+        agree). Transport failures eject, as in `call()`; a dataset-scoped
+        refresh error (e.g. a schema-mismatched new file — every replica
+        rejects it identically, last-good state keeps serving) is reported
+        as a failed entry without ejecting anyone."""
+        out: List[Tuple[str, Optional[Response]]] = []
+        for replica in self.replicas:
+            try:
+                resp = replica.handle(StatsRequest("refresh"))
+            except Exception as e:
+                if isinstance(e, FAILOVER_ERRORS):
+                    self._mark(replica.name, False, f"{type(e).__name__}: {e}")
+                out.append((replica.name, None))
+                continue
+            self._mark(replica.name, True, None)
+            out.append((replica.name, resp))
+        return out
+
+    # -- health --------------------------------------------------------------
+
+    def probe_all(self) -> Dict[str, bool]:
+        """Probe every replica; ejected replicas that pass rejoin."""
+        results: Dict[str, bool] = {}
+        for replica in self.replicas:
+            try:
+                ok = bool(replica.probe())
+            except Exception as e:
+                ok = False
+                self._mark(replica.name, False, f"{type(e).__name__}: {e}")
+            else:
+                self._mark(replica.name, ok, None if ok else "probe failed")
+            results[replica.name] = ok
+        return results
+
+    def health_view(self) -> dict:
+        with self._mu:
+            return {
+                "replicas": {
+                    name: {
+                        "healthy": rec.healthy,
+                        "consecutive_failures": rec.consecutive_failures,
+                        "ejections": rec.ejections,
+                        "last_error": rec.last_error,
+                    }
+                    for name, rec in self.health.items()
+                },
+                "healthy": sum(r.healthy for r in self.health.values()),
+                "total": len(self.replicas),
+                "failovers": self.failovers,
+            }

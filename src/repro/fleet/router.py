@@ -1,0 +1,335 @@
+"""`Fleet` + `StatsRouter`: one HTTP endpoint over many replicated datasets.
+
+`Fleet` is the transport-agnostic core: it owns a `DatasetRegistry`, one
+`ReplicaSet` per registered dataset (built by a pluggable `replica_factory`
+— process-local `StatsService` replicas by default, `RemoteReplica` HTTP
+proxies for out-of-process deployments), an optional background health
+prober, and the routing counters. `StatsRouter` is the stdlib HTTP shell
+over it, the same shape as `repro.service.StatsServer`:
+
+  GET  /datasets                              registry + replica health
+  GET  /health                                router + per-dataset health
+  POST /refresh                               broadcast refresh, all datasets
+  GET  /{ns}/{ds}/columns                     routed        [ETag passthrough]
+  GET  /{ns}/{ds}/estimate?mode=&bounds=      routed        [ETag passthrough]
+  GET  /{ns}/{ds}/plan?mode=                  routed        [ETag passthrough]
+  GET  /{ns}/{ds}/health                      routed (any healthy replica)
+  POST /{ns}/{ds}/refresh                     broadcast refresh, one dataset
+
+The router adds nothing to response bodies and nothing to ETags: a tag
+minted by any replica validates on any other, because tags are derived from
+(dataset fingerprint set, engine cache token, request identity) and the
+registry pins one engine config per dataset. That is the whole failover
+story — clients keep their `If-None-Match` caches across replica deaths,
+router restarts, and replica cold starts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from http.server import ThreadingHTTPServer
+from typing import Callable, Dict, List, Optional, Tuple
+from urllib.parse import parse_qs, urlsplit
+
+from repro.fleet.registry import DatasetRegistry, DatasetSpec
+from repro.fleet.replica import (
+    LocalReplica,
+    NoReplicaAvailable,
+    ReplicaSet,
+    StatsRequest,
+)
+from repro.service import Response, parse_bounds
+from repro.service.http import JSONResponseHandler
+
+ROUTED_KINDS = ("columns", "estimate", "plan", "health")
+
+
+def default_replica_factory(
+    spec: DatasetSpec, index: int, **replica_kwargs
+) -> LocalReplica:
+    """Process-local replicas sharing the dataset's estimate-cache spill."""
+    return LocalReplica(
+        f"{spec.key}#{index}",
+        spec.root,
+        engine_config=spec.engine_config,
+        **replica_kwargs,
+    )
+
+
+@dataclasses.dataclass
+class FleetStats:
+    """Router-side counters (per-replica health lives on the sets)."""
+
+    requests: int = 0
+    routed: int = 0
+    retried: int = 0          # requests that needed >1 replica attempt
+    unavailable: int = 0      # 503s: every replica of a set failed
+    not_found: int = 0        # 404s: unregistered dataset or bad path
+
+
+class Fleet:
+    """Replica sets for every registered dataset, behind one routing seam."""
+
+    def __init__(
+        self,
+        registry: DatasetRegistry,
+        *,
+        replicas_per_dataset: int = 2,
+        probe_interval: Optional[float] = None,
+        replica_factory: Optional[Callable] = None,
+        **replica_kwargs,
+    ):
+        if replicas_per_dataset < 1:
+            raise ValueError("replicas_per_dataset must be >= 1")
+        if len(registry) == 0:
+            raise ValueError("fleet needs at least one registered dataset")
+        self.registry = registry
+        self.probe_interval = probe_interval
+        self.stats = FleetStats()
+        # ThreadingHTTPServer handles requests on concurrent threads; bare
+        # `+=` on the counters would lose increments under load.
+        self._stats_mu = threading.Lock()
+        factory = replica_factory or default_replica_factory
+        self.sets: Dict[str, ReplicaSet] = {
+            spec.key: ReplicaSet(
+                spec.key,
+                [
+                    factory(spec, i, **replica_kwargs)
+                    for i in range(replicas_per_dataset)
+                ],
+            )
+            for spec in registry
+        }
+        self._stop = threading.Event()
+        self._prober: Optional[threading.Thread] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> "Fleet":
+        for rset in self.sets.values():
+            rset.start()
+        if self.probe_interval:
+            self._stop.clear()
+            self._prober = threading.Thread(
+                target=self._probe_loop, name="ndv-fleet-probe", daemon=True
+            )
+            self._prober.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._prober is not None:
+            self._prober.join(timeout=10.0)
+            self._prober = None
+        for rset in self.sets.values():
+            rset.stop()
+
+    def __enter__(self) -> "Fleet":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _probe_loop(self) -> None:
+        while not self._stop.wait(self.probe_interval):
+            self.probe_all()
+
+    def probe_all(self) -> Dict[str, Dict[str, bool]]:
+        """One probe sweep: ejected replicas that answer rejoin service."""
+        return {key: rset.probe_all() for key, rset in self.sets.items()}
+
+    def _bump(self, **fields: int) -> None:
+        with self._stats_mu:
+            for name, delta in fields.items():
+                setattr(self.stats, name, getattr(self.stats, name) + delta)
+
+    # -- endpoints -----------------------------------------------------------
+
+    def route(self, namespace: str, dataset: str, req: StatsRequest) -> Response:
+        """Place one request on the dataset's replica set, with failover."""
+        self._bump(requests=1)
+        try:
+            rset = self.sets[self.registry.get(namespace, dataset).key]
+        except KeyError as e:
+            self._bump(not_found=1)
+            return Response(404, {"error": str(e)}, None)
+        try:
+            resp, replica_name, attempts = rset.call(req)
+        except NoReplicaAvailable as e:
+            self._bump(unavailable=1)
+            return Response(503, {"error": str(e)}, None)
+        self._bump(routed=1, retried=int(attempts > 1))
+        return resp
+
+    def refresh(
+        self, namespace: Optional[str] = None, dataset: Optional[str] = None
+    ) -> Response:
+        """Broadcast a refresh to one dataset's replicas, or to all."""
+        self._bump(requests=1)
+        if namespace is not None:
+            try:
+                keys = [self.registry.get(namespace, dataset).key]
+            except KeyError as e:
+                self._bump(not_found=1)
+                return Response(404, {"error": str(e)}, None)
+        else:
+            keys = list(self.sets)
+        body: Dict[str, dict] = {}
+        for key in keys:
+            results = self.sets[key].refresh_all()
+            body[key] = {
+                name: (resp.body if resp is not None else None)
+                for name, resp in results
+            }
+        return Response(200, {"refreshed": body}, None)
+
+    def datasets(self) -> Response:
+        self._bump(requests=1)
+        body = {
+            "datasets": [
+                {
+                    "key": spec.key,
+                    "namespace": spec.namespace,
+                    "dataset": spec.dataset,
+                    "root": spec.root,
+                    "engine": dataclasses.asdict(spec.engine_config),
+                    **self.sets[spec.key].health_view(),
+                }
+                for spec in self.registry
+            ]
+        }
+        return Response(200, body, None)
+
+    def health(self) -> Response:
+        self._bump(requests=1)
+        views = {key: rset.health_view() for key, rset in self.sets.items()}
+        all_up = all(v["healthy"] > 0 for v in views.values())
+        with self._stats_mu:
+            router_stats = dataclasses.asdict(self.stats)
+        return Response(200, {
+            "status": "serving" if all_up else "degraded",
+            "datasets": views,
+            "router": router_stats,
+        }, None)
+
+
+# -- HTTP shell ---------------------------------------------------------------
+
+
+class _RouterHandler(JSONResponseHandler):
+    """Routes one request onto the shared `Fleet`."""
+
+    fleet: Fleet  # injected by make_router_handler
+    server_version = "ndv-stats-router"
+
+    def _split(self) -> Tuple[List[str], dict]:
+        url = urlsplit(self.path)
+        parts = [p for p in url.path.split("/") if p]
+        return parts, parse_qs(url.query)
+
+    def do_GET(self) -> None:  # noqa: N802 — http.server API
+        parts, query = self._split()
+        try:
+            if parts == ["datasets"]:
+                return self._send(self.fleet.datasets())
+            if parts == ["health"]:
+                return self._send(self.fleet.health())
+            if len(parts) == 3 and parts[2] in ROUTED_KINDS:
+                ns, ds, kind = parts
+                bounds = None
+                if "bounds" in query:
+                    try:
+                        bounds = tuple(sorted(
+                            parse_bounds(query["bounds"][0]).items()
+                        ))
+                    except ValueError as e:
+                        return self._error(400, str(e))
+                req = StatsRequest(
+                    kind=kind,
+                    mode=query.get("mode", ["paper"])[0],
+                    schema_bounds=bounds,
+                    if_none_match=self.headers.get("If-None-Match"),
+                )
+                return self._send(self.fleet.route(ns, ds, req))
+            self.fleet._bump(not_found=1)
+            self._error(404, f"no such route: {self.path}")
+        except Exception as e:
+            self._error(500, f"{type(e).__name__}: {e}")
+
+    def do_POST(self) -> None:  # noqa: N802 — http.server API
+        parts, _ = self._split()
+        try:
+            if parts == ["refresh"]:
+                return self._send(self.fleet.refresh())
+            if len(parts) == 3 and parts[2] == "refresh":
+                return self._send(self.fleet.refresh(parts[0], parts[1]))
+            self.fleet._bump(not_found=1)
+            self._error(404, f"no such route: {self.path}")
+        except Exception as e:
+            self._error(500, f"{type(e).__name__}: {e}")
+
+
+def make_router_handler(fleet: Fleet):
+    return type("BoundRouterHandler", (_RouterHandler,), {"fleet": fleet})
+
+
+class StatsRouter:
+    """Owns a `ThreadingHTTPServer` fronting one `Fleet`.
+
+    Same lifecycle contract as `repro.service.StatsServer`: port 0 binds an
+    ephemeral port, `start()` runs the accept loop on a daemon thread,
+    `stop()` shuts down the HTTP loop and then the fleet (replica sets and
+    the health prober). Usable as a context manager.
+    """
+
+    def __init__(self, fleet: Fleet, host: str = "127.0.0.1", port: int = 0):
+        self.fleet = fleet
+        self.httpd = ThreadingHTTPServer(
+            (host, port), make_router_handler(fleet)
+        )
+        self.host, self.port = self.httpd.server_address[:2]
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def url_for(self, namespace: str, dataset: str, kind: str) -> str:
+        return f"{self.url}/{namespace}/{dataset}/{kind}"
+
+    def start(self) -> "StatsRouter":
+        self.fleet.start()
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever,
+            name="ndv-stats-router-http",
+            daemon=True,
+        )
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        # shutdown() blocks on an event only serve_forever() sets — guard
+        # against a start() that never reached the accept loop.
+        if self._thread is not None:
+            self.httpd.shutdown()
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        self.httpd.server_close()
+        self.fleet.stop()
+
+    def __enter__(self) -> "StatsRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+def serve_fleet(
+    registry: DatasetRegistry,
+    *,
+    host: str = "127.0.0.1",
+    port: int = 0,
+    **fleet_kwargs,
+) -> StatsRouter:
+    """One-call convenience: build a `Fleet` and start routing it."""
+    return StatsRouter(Fleet(registry, **fleet_kwargs), host=host, port=port).start()

@@ -1,0 +1,205 @@
+"""Fleet launcher: the replicated multi-dataset router over HTTP.
+
+    PYTHONPATH=src python -m repro.launch.serve_fleet \\
+        --dataset wh/lineitem=/data/lineitem \\
+        --dataset wh/orders=/data/orders \\
+        --replicas 3 --port 8090 --refresh-interval 30
+
+    # self-contained smoke (CI): router + 2 replicas x 2 temp datasets,
+    # estimate, kill a replica, re-estimate through failover, assert 304
+    # revalidation and zero-pack warm start from the shared spill
+    PYTHONPATH=src python -m repro.launch.serve_fleet --smoke
+
+A planner then addresses the whole namespace through one endpoint:
+
+    curl -s http://host:8090/datasets
+    curl -s 'http://host:8090/wh/lineitem/estimate?mode=improved'
+    curl -s -H 'If-None-Match: <etag>' 'http://host:8090/wh/lineitem/estimate?mode=improved'
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+import urllib.error
+
+from repro.engine import EngineConfig
+from repro.fleet import (
+    DatasetRegistry,
+    Fleet,
+    LocalReplica,
+    StatsRequest,
+    StatsRouter,
+    parse_spec,
+)
+from repro.service import fetch_json
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dataset", action="append", default=[],
+                    metavar="NS/NAME=ROOT",
+                    help="serve ROOT as namespace/dataset (repeatable)")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8090,
+                    help="0 binds an ephemeral port")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replicas per dataset")
+    ap.add_argument("--refresh-interval", type=float, default=30.0,
+                    help="per-replica ingestion poll seconds; 0 disables")
+    ap.add_argument("--probe-interval", type=float, default=5.0,
+                    help="replica health-probe seconds; 0 disables")
+    ap.add_argument("--strategy", default="auto",
+                    help="engine strategy (auto/local/sharded/chunked)")
+    ap.add_argument("--backend", default="auto",
+                    help="kernel backend (auto/pallas/ref)")
+    ap.add_argument("--max-batch", default="auto",
+                    help='chunk budget: a power of two, or "auto" to derive '
+                         "it from device memory")
+    ap.add_argument("--smoke", action="store_true",
+                    help="boot 2 replicas x 2 temp datasets on an ephemeral "
+                         "port, run the scripted failover client, exit")
+    return ap
+
+
+def _engine_config(args: argparse.Namespace) -> EngineConfig:
+    mb = args.max_batch
+    return EngineConfig(
+        strategy=args.strategy,
+        backend=args.backend,
+        max_batch=mb if mb == "auto" else int(mb),
+    )
+
+
+def _make_router(args: argparse.Namespace, registry: DatasetRegistry) -> StatsRouter:
+    fleet = Fleet(
+        registry,
+        replicas_per_dataset=args.replicas,
+        probe_interval=args.probe_interval or None,
+        poll_interval=args.refresh_interval or None,
+    )
+    return StatsRouter(fleet, host=args.host, port=args.port)
+
+
+def _smoke_dataset(root: str, seed: int) -> str:
+    import numpy as np
+
+    from repro.columnar.writer import WriterOptions, write_file
+
+    rng = np.random.default_rng(seed)
+    for i in range(2):
+        write_file(
+            os.path.join(root, f"shard_{i:03d}"),
+            {
+                "tok": rng.integers(0, 100 + 40 * seed, 768).astype(np.int64),
+                "val": np.round(rng.uniform(0, 50, 768), 1),
+            },
+            options=WriterOptions(row_group_size=256),
+        )
+    return root
+
+
+def run_smoke(args: argparse.Namespace) -> int:
+    args = argparse.Namespace(**{
+        **vars(args),
+        "port": 0, "replicas": 2,
+        "refresh_interval": 0.0, "probe_interval": 0.0,
+    })
+    base = tempfile.mkdtemp()
+    registry = DatasetRegistry()
+    cfg = _engine_config(args)
+    for name, seed in (("alpha", 1), ("beta", 2)):
+        root = _smoke_dataset(os.path.join(base, name), seed)
+        registry.add("smoke", name, root, engine_config=cfg)
+
+    with _make_router(args, registry) as router:
+        base_url = router.url
+        # both datasets serve through one endpoint
+        etags = {}
+        for name in ("alpha", "beta"):
+            url = router.url_for("smoke", name, "estimate") + "?mode=improved"
+            status, etag, body = fetch_json(url)
+            assert status == 200 and etag and body["estimates"], (status, body)
+            etags[name] = (etag, body)
+        status, _, listing = fetch_json(base_url + "/datasets")
+        assert status == 200 and len(listing["datasets"]) == 2, listing
+
+        # kill the replica that owns alpha's estimate placement mid-run
+        fleet = router.fleet
+        rset = fleet.sets["smoke/alpha"]
+        identity = StatsRequest("estimate", "improved").identity
+        victim = rset.rank(identity)[0]
+        victim.kill()
+
+        # the request survives (failover retries), body is byte-identical,
+        # and the pre-kill ETag still revalidates as 304 on the survivor
+        url = router.url_for("smoke", "alpha", "estimate") + "?mode=improved"
+        status, etag, body = fetch_json(url)
+        assert status == 200, status
+        assert etag == etags["alpha"][0], (etag, etags["alpha"][0])
+        assert body == etags["alpha"][1], "failover changed the body"
+        status, etag304, _ = fetch_json(url, etag=etags["alpha"][0])
+        assert status == 304 and etag304 == etags["alpha"][0], (status, etag304)
+        assert rset.failovers >= 1 and rset.health[victim.name].healthy is False
+
+        # a freshly started replica warms from the shared spill:
+        # first estimate is a cache hit — zero engine packs
+        fresh = LocalReplica(
+            "smoke/alpha#fresh", registry.get("smoke", "alpha").root,
+            engine_config=cfg,
+        ).start()
+        try:
+            resp = fresh.handle(StatsRequest("estimate", "improved"))
+            assert resp.status == 200 and resp.etag == etags["alpha"][0]
+            packs = fresh.service.catalog.stats.packs
+            assert packs == 0, f"fresh replica packed {packs}x despite spill"
+        finally:
+            fresh.stop()
+
+        status, _, health = fetch_json(base_url + "/health")
+        assert status == 200 and health["status"] == "serving", health
+        print(f"[serve_fleet --smoke] ok: 2 datasets x 2 replicas, "
+              f"failover after kill ({rset.failovers} failovers), ETag "
+              f"stable across replicas, 304 revalidation on survivor, "
+              f"fresh replica warm from spill (0 packs)")
+    # context exit shut everything down; a second connect must now fail
+    try:
+        fetch_json(base_url + "/health")
+    except (urllib.error.URLError, ConnectionError):
+        print("[serve_fleet --smoke] clean shutdown verified")
+        return 0
+    print("[serve_fleet --smoke] ERROR: router still answering after stop()",
+          file=sys.stderr)
+    return 1
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    if args.smoke:
+        return run_smoke(args)
+    if not args.dataset:
+        print("error: at least one --dataset NS/NAME=ROOT is required "
+              "(or use --smoke)", file=sys.stderr)
+        return 2
+    registry = DatasetRegistry()
+    cfg = _engine_config(args)
+    for spec in args.dataset:
+        ns, ds, root = parse_spec(spec)
+        registry.add(ns, ds, root, engine_config=cfg)
+    with _make_router(args, registry) as router:
+        print(f"[serve_fleet] routing {len(registry)} datasets x "
+              f"{args.replicas} replicas at {router.url}")
+        for key in registry.keys():
+            print(f"[serve_fleet]   {router.url}/{key}/estimate")
+        try:
+            while True:
+                time.sleep(3600)
+        except KeyboardInterrupt:
+            print("\n[serve_fleet] shutting down")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

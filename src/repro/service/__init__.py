@@ -48,9 +48,14 @@ dataset) rides along in every body for observability; the ETag, not the
 generation, is the cache key.
 
 Entry points: `repro.launch.serve_stats` (CLI), `serve()` (library),
-`examples/profile_dataset.py --serve` (demo).
+`examples/profile_dataset.py --serve` (demo). For many datasets behind
+one endpoint with N replicas each, see the fleet tier (`repro.fleet`):
+it composes this package's `StatsService` into health-checked replica
+sets — the state-derived ETag contract above is exactly what makes
+replicas interchangeable there.
 """
 from repro.service.http import (  # noqa: F401
+    JSONResponseHandler,
     StatsServer,
     fetch_json,
     make_handler,

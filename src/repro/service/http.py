@@ -73,14 +73,16 @@ def parse_bounds(raw: str) -> Dict[str, float]:
     return bounds
 
 
-class _Handler(BaseHTTPRequestHandler):
-    """Routes one request onto the shared `StatsService`."""
+class JSONResponseHandler(BaseHTTPRequestHandler):
+    """Shared wire plumbing for the stats JSON servers.
 
-    service: StatsService  # injected by make_handler
-    server_version = "ndv-stats"
+    One place owns the `Response` -> HTTP translation (ETag header,
+    Content-Length, no Content-Type on 304, quiet logging), so the
+    per-dataset server here and the fleet router (`repro.fleet.router`)
+    cannot drift apart in revalidation behavior.
+    """
+
     protocol_version = "HTTP/1.1"
-
-    # -- plumbing ------------------------------------------------------------
 
     def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
         pass
@@ -101,6 +103,13 @@ class _Handler(BaseHTTPRequestHandler):
 
     def _error(self, status: int, message: str) -> None:
         self._send(Response(status, {"error": message}, None))
+
+
+class _Handler(JSONResponseHandler):
+    """Routes one request onto the shared `StatsService`."""
+
+    service: StatsService  # injected by make_handler
+    server_version = "ndv-stats"
 
     # -- routes --------------------------------------------------------------
 

@@ -56,6 +56,7 @@ class ServiceStats:
     engine_runs: int = 0            # estimate-cache misses served (executions)
     single_flight_leaders: int = 0  # cold computations actually performed
     coalesced_waits: int = 0        # requests that rode a leader's result
+    spill_reloads: int = 0          # shared-spill rechecks that found entries
 
 
 class _Call:
@@ -127,6 +128,17 @@ class StatsService:
         rewritten (compacted) after each committed refresh that changed the
         dataset, and again whenever a cold request populates a new entry,
         so a restarted server serves the newest state warm.
+      shared_spill: run this service as one replica of a set sharing the
+        dataset's on-disk estimate-cache spill. Implies `auto_load_cache`
+        and `save_cache_on_commit`, and additionally re-checks the spill
+        (mtime-guarded, one stat when nothing changed) before every cold
+        computation — so a request this replica never computed is served
+        from a sibling replica's spill instead of re-running the engine.
+        Spill writes are merge-not-clobber and atomic under concurrent
+        replicas (see `StatsCatalog.save_cache`).
+      health_hook: optional callable polled by `probe()`; returning False
+        marks this replica unhealthy to replica managers (the fleet tier's
+        ejection signal) without affecting direct request serving.
     """
 
     def __init__(
@@ -138,7 +150,12 @@ class StatsService:
         poll_interval: Optional[float] = None,
         auto_load_cache: bool = False,
         save_cache_on_commit: bool = False,
+        shared_spill: bool = False,
+        health_hook: Optional[Callable[[], bool]] = None,
     ):
+        if shared_spill:
+            auto_load_cache = True
+            save_cache_on_commit = True
         if isinstance(source, StatsCatalog):
             self.catalog = source
         else:
@@ -148,6 +165,9 @@ class StatsService:
         self.engine = self.catalog.engine
         self.lock = threading.RLock()
         self.save_cache_on_commit = save_cache_on_commit
+        self.shared_spill = shared_spill
+        self.health_hook = health_hook
+        self.closed = False
         self.ingestor = AsyncIngestor(
             self.catalog,
             max_workers=max_workers,
@@ -164,12 +184,28 @@ class StatsService:
 
     def start(self) -> None:
         """Initial synchronous refresh, then the polling loop (if any)."""
+        self.closed = False
         self.refresh()
         if self.ingestor.poll_interval:
             self.ingestor.start()
 
     def stop(self) -> None:
         self.ingestor.stop()
+        self.closed = True
+
+    def probe(self) -> bool:
+        """Replica-manager liveness probe (the fleet tier's health signal).
+
+        True while the service can serve: not stopped, and the optional
+        `health_hook` (fault injection, external circuit breakers) agrees.
+        Deliberately cheap — no catalog work, no lock — so a prober can
+        hammer it.
+        """
+        if self.closed:
+            return False
+        if self.health_hook is not None and not self.health_hook():
+            return False
+        return True
 
     def __enter__(self) -> "StatsService":
         self.start()
@@ -354,6 +390,13 @@ class StatsService:
                 # committed since the cheap pre-check, and the body must
                 # describe the state its ETag names.
                 etag_now = self._etag(kind, mode, bounds_key)
+                if self.shared_spill:
+                    # A sibling replica may have computed (and spilled)
+                    # this entry already: one stat when nothing changed,
+                    # and a cache line instead of an engine run when it did.
+                    self.stats.spill_reloads += bool(
+                        self.catalog.maybe_load_cache()
+                    )
                 misses = self.catalog.stats.estimate_cache_misses
                 body = build(etag_now, self.ingestor.generation)
                 new_runs = (

@@ -463,3 +463,94 @@ def test_pipeline_plans_through_catalog(dataset):
     assert pipe.vocab_estimate() is ests["tok"] or (
         pipe.vocab_estimate() == ests["tok"]
     )
+
+
+def test_concurrent_save_cache_merges_not_clobbers(dataset):
+    # Two catalogs (standing in for two replica processes) spill different
+    # entries to the shared file: the union must survive, whichever order
+    # the writes land in.
+    import json
+
+    a = StatsCatalog(dataset)
+    b = StatsCatalog(dataset)
+    a.estimate(mode="paper")
+    b.estimate(mode="improved")
+    path = a.save_cache()
+    assert b.save_cache() == path
+    with open(path) as f:
+        entries = json.load(f)["entries"]
+    assert sorted(e["key"]["mode"] for e in entries) == ["improved", "paper"]
+
+    # a third cold catalog warms from the merged spill: both modes, no packs
+    c = StatsCatalog(dataset, auto_load_cache=True)
+    assert c.estimate(mode="paper") == a.estimate(mode="paper")
+    assert c.estimate(mode="improved") == b.estimate(mode="improved")
+    assert c.stats.packs == 0
+
+
+def test_save_cache_skips_when_disk_is_newer_and_complete(dataset):
+    import os
+
+    a = StatsCatalog(dataset)
+    b = StatsCatalog(dataset)
+    a.estimate(mode="paper")
+    b.estimate(mode="paper")
+    b.estimate(mode="improved")
+    path = b.save_cache()                  # b's spill is a superset of a's
+    mtime = os.stat(path).st_mtime_ns
+    a.save_cache()                         # nothing to add -> skipped
+    assert os.stat(path).st_mtime_ns == mtime
+    # with something new to contribute the write happens (and merges)
+    a.estimate(mode="paper", schema_bounds={"tok": 8.0})
+    a.save_cache()
+    assert os.stat(path).st_mtime_ns != mtime
+    fresh = StatsCatalog(dataset, auto_load_cache=True)
+    assert fresh.estimate(mode="improved") == b.estimate(mode="improved")
+    assert fresh.stats.packs == 0
+
+
+def test_save_cache_survives_concurrent_thread_writers(dataset):
+    # Hammer one spill path from many threads; every write must stay
+    # atomic and the final file must contain every writer's entry.
+    import json
+    import os
+    import threading
+
+    catalogs = []
+    bounds = [{"tok": float(2 ** i)} for i in range(6)]
+    for sb in bounds:
+        c = StatsCatalog(dataset)
+        c.estimate(mode="paper", schema_bounds=sb)
+        catalogs.append(c)
+    threads = [
+        threading.Thread(target=c.save_cache) for c in catalogs for _ in range(3)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    path = catalogs[0]._default_cache_path()
+    with open(path) as f:
+        entries = json.load(f)["entries"]   # parses: no torn writes
+    got = {tuple(e["key"]["schema_bounds"][0]) for e in entries}
+    assert got == {("tok", b["tok"]) for b in bounds}
+    # no temp-file litter left next to the dataset
+    litter = [f for f in os.listdir(dataset) if f.endswith(".tmp")]
+    assert litter == []
+
+
+def test_spill_with_foreign_shape_is_treated_as_absent(dataset):
+    # Valid JSON, right version, wrong shape: loads as a cold start and
+    # save_cache overwrites it rather than crashing replica boot.
+    import json
+
+    catalog = StatsCatalog(dataset)
+    catalog.estimate(mode="paper")
+    path = catalog._default_cache_path()
+    for junk in ('{"version": 1}', '{"version": 1, "entries": [{}]}', "[1]"):
+        with open(path, "w") as f:
+            f.write(junk)
+        assert StatsCatalog(dataset, auto_load_cache=True).load_cache() == 0
+        assert catalog.save_cache() == path
+        with open(path) as f:
+            assert len(json.load(f)["entries"]) == 1

@@ -322,3 +322,79 @@ def test_pipeline_engine_config_threads_through(tmp_path):
     pipe = TokenPipeline(cfg)
     assert pipe.catalog.engine.config.strategy == "chunked"
     assert pipe.plan.estimates  # planned through the chunked engine
+
+
+# -- "auto" chunk budget -------------------------------------------------------
+
+
+def test_auto_chunk_budget_math():
+    from repro.engine import DEFAULT_MAX_BATCH, auto_chunk_budget
+    from repro.engine.engine import (
+        AUTO_MAX_BATCH,
+        AUTO_MEM_FRACTION,
+        AUTO_MIN_BATCH,
+        NOMINAL_LANE_BYTES,
+    )
+
+    # no memory report -> historical constant
+    assert auto_chunk_budget(None) == DEFAULT_MAX_BATCH
+    assert auto_chunk_budget(0) == DEFAULT_MAX_BATCH
+    # 16 GiB at the documented fraction and lane footprint, floor-pow2
+    want = int(16 * 2**30 * AUTO_MEM_FRACTION / NOMINAL_LANE_BYTES)
+    got = auto_chunk_budget(16 * 2**30)
+    assert got == 1 << (want.bit_length() - 1) == 65536
+    # clamps on both ends, always a power of two
+    assert auto_chunk_budget(1) == AUTO_MIN_BATCH
+    assert auto_chunk_budget(1 << 60) == AUTO_MAX_BATCH
+    for mem in (2**28, 2**31, 7 * 10**9):
+        b = auto_chunk_budget(mem)
+        assert b & (b - 1) == 0 and AUTO_MIN_BATCH <= b <= AUTO_MAX_BATCH
+
+
+def test_engine_config_auto_max_batch_validation():
+    assert EngineConfig(max_batch="auto").max_batch == "auto"
+    with pytest.raises(ValueError, match="auto"):
+        EngineConfig(max_batch="turbo")
+
+
+def test_resolve_max_batch_auto_detects_once(monkeypatch):
+    from repro.engine import engine as engine_mod
+
+    calls = []
+
+    def fake_detect():
+        calls.append(1)
+        return 16 * 2**30
+
+    monkeypatch.setattr(engine_mod, "detect_device_memory", fake_detect)
+    eng = EstimationEngine(EngineConfig(strategy="chunked", max_batch="auto"))
+    assert eng.resolve_max_batch() == 65536
+    assert eng.resolve_max_batch() == 65536
+    assert len(calls) == 1  # detection is cached per engine
+    # a fixed budget never consults the device
+    calls.clear()
+    fixed = EstimationEngine(EngineConfig(max_batch=128))
+    assert fixed.resolve_max_batch() == 128 and not calls
+
+
+def test_auto_budget_identity_stays_unresolved_and_portable():
+    # Chunk width is numerics-neutral (parity contract), so "auto" must
+    # not leak the per-host resolution into cache keys or ETag material:
+    # a spill written on a big-memory host stays warm on a small one.
+    eng = EstimationEngine(EngineConfig(strategy="chunked", max_batch="auto"))
+    assert eng.cache_key == ("chunked", "auto", 0, "auto")
+    assert eng.cache_token.endswith(".bauto")
+
+
+def test_auto_budget_chunked_parity_with_local():
+    local = EstimationEngine(EngineConfig(strategy="local"))
+    auto = EstimationEngine(EngineConfig(strategy="chunked", max_batch="auto"))
+    auto._auto_max_batch = 2  # force real chunking at test width
+    cols = _columns(7)
+    packer = BatchPacker()
+    batch = packer.pack(cols)
+    for mode in ("paper", "improved"):
+        ref = local.estimate(batch, mode=mode)
+        got = auto.estimate(batch, mode=mode)
+        for f_ref, f_got in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(f_ref), np.asarray(f_got))

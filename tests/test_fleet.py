@@ -1,0 +1,435 @@
+"""Fleet tier: registry, rendezvous placement, failover, ETag stability.
+
+Covers the serving acceptance criteria of the fleet subsystem:
+  * two independently-constructed `StatsService`s over one dataset emit
+    byte-identical ETags and bodies for identical requests — the property
+    every router failover and client revalidation relies on
+  * the router serves >=2 datasets x >=2 replicas; killing a replica
+    mid-burst loses no requests (failover retries succeed) and the old
+    ETag still revalidates 304 on the survivor
+  * a freshly started replica serves its first estimate from the shared
+    on-disk spill with zero engine packs
+  * rendezvous hashing is deterministic, spreads distinct identities, and
+    moves only the ejected replica's keys
+"""
+import concurrent.futures
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.columnar.writer import WriterOptions, write_file
+from repro.engine import EngineConfig
+from repro.fleet import (
+    DatasetRegistry,
+    DatasetSpec,
+    Fleet,
+    LocalReplica,
+    NoReplicaAvailable,
+    RemoteReplica,
+    ReplicaSet,
+    StatsRequest,
+    StatsRouter,
+    parse_spec,
+)
+from repro.service import StatsServer, StatsService, fetch_json
+
+
+def _write(root, name, seed, vocab=64):
+    rng = np.random.default_rng(seed)
+    return write_file(
+        os.path.join(root, name),
+        {
+            "tok": rng.integers(0, vocab, 512).astype(np.int64),
+            "val": np.round(rng.uniform(0, 100, 512), 1),
+        },
+        options=WriterOptions(row_group_size=128),
+    )
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    root = str(tmp_path / "ds")
+    for i in range(3):
+        _write(root, f"shard_{i:03d}", seed=i)
+    return root
+
+
+@pytest.fixture()
+def registry(tmp_path):
+    reg = DatasetRegistry()
+    for name, seed in (("alpha", 10), ("beta", 20)):
+        root = str(tmp_path / name)
+        for i in range(2):
+            _write(root, f"shard_{i:03d}", seed=seed + i, vocab=32 * (seed + 1))
+        reg.add("wh", name, root)
+    return reg
+
+
+@pytest.fixture()
+def routed(registry):
+    router = StatsRouter(Fleet(registry, replicas_per_dataset=2)).start()
+    yield router
+    router.stop()
+
+
+# -- ETag stability across replicas (the failover invariant) -----------------
+
+
+def test_etags_byte_identical_across_independent_services(dataset):
+    # Two services, two engines, two ingestion passes — zero shared state
+    # beyond the dataset directory. Identical requests must produce
+    # byte-identical ETags AND bodies, or router failover would invalidate
+    # every client cache.
+    a = StatsService(dataset)
+    b = StatsService(dataset)
+    a.start(), b.start()
+    try:
+        for kind, kwargs in (
+            ("columns", {}),
+            ("estimate", {"mode": "paper"}),
+            ("estimate", {"mode": "improved"}),
+            ("estimate", {"mode": "paper", "schema_bounds": {"tok": 9.0}}),
+            ("plan", {"mode": "improved"}),
+        ):
+            ra = getattr(a, kind)(**kwargs)
+            rb = getattr(b, kind)(**kwargs)
+            assert ra.etag == rb.etag and ra.etag, (kind, kwargs)
+            assert ra.body == rb.body, (kind, kwargs)
+            # a tag minted by a validates on b (and vice versa): 304
+            assert getattr(b, kind)(
+                **kwargs, if_none_match=ra.etag
+            ).status == 304
+            assert getattr(a, kind)(
+                **kwargs, if_none_match=rb.etag
+            ).status == 304
+    finally:
+        a.stop(), b.stop()
+
+
+# -- registry ----------------------------------------------------------------
+
+
+def test_registry_validation_and_parse_spec(tmp_path):
+    reg = DatasetRegistry()
+    spec = reg.add("wh", "lineitem", str(tmp_path))
+    assert spec.key == "wh/lineitem" and "wh/lineitem" in reg
+    assert reg.get("wh", "lineitem") is spec
+    with pytest.raises(ValueError, match="already registered"):
+        reg.add("wh", "lineitem", str(tmp_path))
+    with pytest.raises(KeyError, match="not registered"):
+        reg.get("wh", "nope")
+    with pytest.raises(ValueError, match="path segment"):
+        DatasetSpec("bad/ns", "x", str(tmp_path))
+    with pytest.raises(ValueError, match="path segment"):
+        DatasetSpec("wh", "", str(tmp_path))
+
+    assert parse_spec("wh/li=/data/x") == ("wh", "li", "/data/x")
+    for bad in ("wh/li", "noslash=/x", "wh/li=", "a/b c=/x"):
+        with pytest.raises(ValueError):
+            parse_spec(bad)
+
+
+# -- rendezvous placement ----------------------------------------------------
+
+
+class _StubReplica:
+    def __init__(self, name, fail=False):
+        self.name = name
+        self.fail = fail
+        self.calls = 0
+
+    def start(self):
+        return self
+
+    def stop(self):
+        pass
+
+    def probe(self):
+        return not self.fail
+
+    def handle(self, req):
+        self.calls += 1
+        if self.fail:
+            raise ConnectionError(f"{self.name} down")
+        from repro.service import Response
+
+        return Response(200, {"replica": self.name}, '"tag"')
+
+
+def test_rendezvous_placement_deterministic_spreads_and_moves_minimally():
+    names = [f"r{i}" for i in range(4)]
+    rset = ReplicaSet("wh/a", [_StubReplica(n) for n in names])
+    identities = [("estimate", m, b) for m in ("paper", "improved")
+                  for b in [(), (("tok", 2.0),), (("val", 8.0),)]]
+    placement = {i: rset.rank(i)[0].name for i in identities}
+    # deterministic: an independently-built set places identically
+    rset2 = ReplicaSet("wh/a", [_StubReplica(n) for n in names])
+    assert placement == {i: rset2.rank(i)[0].name for i in identities}
+    # spreads: more than one replica owns something across identities
+    assert len(set(placement.values())) > 1
+    # minimal movement: ejecting one replica only moves its own keys
+    victim = placement[identities[0]]
+    survivors = [r for r in rset.replicas if r.name != victim]
+    rset3 = ReplicaSet("wh/a", survivors)
+    for ident, owner in placement.items():
+        if owner != victim:
+            assert rset3.rank(ident)[0].name == owner
+    # a different dataset key reshuffles placement independently
+    other = ReplicaSet("wh/b", [_StubReplica(n) for n in names])
+    assert any(
+        other.rank(i)[0].name != placement[i] for i in identities
+    )
+
+
+def test_replica_set_failover_ejection_and_rejoin():
+    good, bad = _StubReplica("good"), _StubReplica("bad", fail=True)
+    rset = ReplicaSet("wh/a", [bad, good])
+    req = StatsRequest("estimate", "paper")
+    for _ in range(4):
+        resp, name, _ = rset.call(req)
+        assert resp.status == 200 and name == "good"
+    # the failing replica was ejected after the first attempt: exactly one
+    # failed call ever reached it
+    assert bad.calls <= 1 and rset.failovers >= 1
+    assert rset.health["bad"].healthy is False
+    # probe_all rejoins it once it recovers
+    bad.fail = False
+    assert rset.probe_all() == {"bad": True, "good": True}
+    assert rset.health["bad"].healthy is True
+    # all-down set raises with every replica's error
+    good.fail = bad.fail = True
+    with pytest.raises(NoReplicaAvailable, match="all 2 replicas"):
+        rset.call(req)
+
+
+# -- router HTTP e2e ---------------------------------------------------------
+
+
+def test_router_serves_datasets_and_survives_replica_kill(routed):
+    # both datasets serve through one endpoint with distinct estimates
+    bodies = {}
+    for name in ("alpha", "beta"):
+        url = routed.url_for("wh", name, "estimate") + "?mode=improved"
+        status, etag, body = fetch_json(url)
+        assert status == 200 and etag and body["estimates"]
+        bodies[name] = (etag, body)
+    assert bodies["alpha"][1] != bodies["beta"][1]
+
+    status, _, listing = fetch_json(routed.url + "/datasets")
+    assert status == 200
+    assert [d["key"] for d in listing["datasets"]] == ["wh/alpha", "wh/beta"]
+    assert all(d["healthy"] == 2 for d in listing["datasets"])
+
+    # kill the replica that owns alpha's placement, then hammer the route
+    # concurrently: every request must succeed via failover
+    rset = routed.fleet.sets["wh/alpha"]
+    victim = rset.rank(StatsRequest("estimate", "improved").identity)[0]
+    victim.kill()
+    url = routed.url_for("wh", "alpha", "estimate") + "?mode=improved"
+    with concurrent.futures.ThreadPoolExecutor(8) as pool:
+        results = list(pool.map(lambda _: fetch_json(url), range(16)))
+    assert all(status == 200 for status, _, _ in results)
+    assert all(etag == bodies["alpha"][0] for _, etag, _ in results)
+    assert all(body == bodies["alpha"][1] for _, _, body in results)
+    assert rset.failovers >= 1
+    assert rset.health[victim.name].healthy is False
+
+    # the pre-kill ETag revalidates 304 on the survivor — client caches
+    # survive the failover byte-for-byte
+    status, etag, _ = fetch_json(url, etag=bodies["alpha"][0])
+    assert status == 304 and etag == bodies["alpha"][0]
+
+    # beta never noticed
+    status, etag, body = fetch_json(
+        routed.url_for("wh", "beta", "estimate") + "?mode=improved",
+        etag=bodies["beta"][0],
+    )
+    assert status == 304
+
+    # /health reports the degraded set but keeps serving
+    status, _, health = fetch_json(routed.url + "/health")
+    assert status == 200 and health["status"] == "serving"
+    assert health["datasets"]["wh/alpha"]["healthy"] == 1
+    assert health["router"]["retried"] >= 1
+
+    # revived replica rejoins on probe and serves the same tags
+    victim.revive()
+    routed.fleet.probe_all()
+    assert rset.health[victim.name].healthy is True
+    assert victim.handle(
+        StatsRequest("estimate", "improved", if_none_match=bodies["alpha"][0])
+    ).status == 304
+
+
+def test_router_refresh_broadcast_keeps_replica_etags_aligned(routed, registry):
+    url = routed.url_for("wh", "alpha", "estimate") + "?mode=paper"
+    _, etag, _ = fetch_json(url)
+    # dataset change: the old tag must rotate on EVERY replica, or a later
+    # failover would serve a stale 304
+    _write(registry.get("wh", "alpha").root, "shard_new", seed=99)
+    status, _, body = fetch_json(
+        routed.url + "/wh/alpha/refresh", method="POST"
+    )
+    assert status == 200
+    summaries = body["refreshed"]["wh/alpha"]
+    assert len(summaries) == 2
+    assert all(s["added"] == 1 for s in summaries.values())
+    for replica in routed.fleet.sets["wh/alpha"].replicas:
+        resp = replica.handle(
+            StatsRequest("estimate", "paper", if_none_match=etag)
+        )
+        assert resp.status == 200 and resp.etag != etag
+    # global refresh touches every dataset
+    status, _, body = fetch_json(routed.url + "/refresh", method="POST")
+    assert status == 200 and set(body["refreshed"]) == {"wh/alpha", "wh/beta"}
+
+
+def test_router_error_paths(routed):
+    status, _, body = fetch_json(routed.url + "/wh/nope/estimate")
+    assert status == 404 and "not registered" in body["error"]
+    status, _, _ = fetch_json(routed.url + "/no/such/route/at/all")
+    assert status == 404
+    status, _, body = fetch_json(
+        routed.url + "/wh/alpha/estimate?bounds=junk"
+    )
+    assert status == 400 and "bounds" in body["error"]
+    status, _, body = fetch_json(
+        routed.url + "/wh/alpha/estimate?mode=bogus"
+    )
+    assert status == 400
+    # all replicas of one dataset down -> 503 for it, degraded /health,
+    # but the sibling dataset keeps serving
+    for replica in routed.fleet.sets["wh/alpha"].replicas:
+        replica.kill()
+    status, _, body = fetch_json(routed.url + "/wh/alpha/estimate")
+    assert status == 503 and "all 2 replicas" in body["error"]
+    status, _, health = fetch_json(routed.url + "/health")
+    assert health["status"] == "degraded"
+    status, _, _ = fetch_json(routed.url_for("wh", "beta", "estimate"))
+    assert status == 200
+
+
+# -- shared-spill warm start -------------------------------------------------
+
+
+def test_fresh_replica_first_estimate_zero_packs(routed, registry):
+    url = routed.url_for("wh", "alpha", "estimate") + "?mode=improved"
+    _, etag, body = fetch_json(url)
+    fresh = LocalReplica(
+        "wh/alpha#fresh", registry.get("wh", "alpha").root
+    ).start()
+    try:
+        resp = fresh.handle(StatsRequest("estimate", "improved"))
+        assert resp.status == 200
+        assert resp.etag == etag and resp.body["estimates"] == body["estimates"]
+        assert fresh.service.catalog.stats.packs == 0
+        assert fresh.service.catalog.stats.estimate_cache_hits == 1
+    finally:
+        fresh.stop()
+
+
+def test_running_replica_picks_up_sibling_spill_without_engine_run(dataset):
+    # Replica A boots first (nothing spilled yet), THEN replica B computes
+    # and spills: A's cold path must re-check the shared spill and serve
+    # B's entry without an engine run of its own.
+    a = LocalReplica("ds#a", dataset).start()
+    b = LocalReplica("ds#b", dataset).start()
+    try:
+        b.handle(StatsRequest("estimate", "improved"))
+        resp = a.handle(StatsRequest("estimate", "improved"))
+        assert resp.status == 200
+        assert a.service.catalog.stats.packs == 0
+        assert a.service.stats.engine_runs == 0
+        assert a.service.stats.spill_reloads == 1
+    finally:
+        a.stop(), b.stop()
+
+
+# -- RemoteReplica proxying --------------------------------------------------
+
+
+def test_remote_replica_proxies_and_fails_over(dataset):
+    with StatsServer(StatsService(dataset)) as upstream:
+        remote = RemoteReplica("up", upstream.url)
+        dead = RemoteReplica("dead", "http://127.0.0.1:9")  # discard port
+        assert remote.probe() is True and dead.probe() is False
+        rset = ReplicaSet("wh/a", [dead, remote])
+        req = StatsRequest(
+            "estimate", "improved", schema_bounds=(("tok", 7.0),)
+        )
+        resp, name, _ = rset.call(req)
+        assert resp.status == 200 and name == "up"
+        assert resp.body["schema_bounds"] == {"tok": 7.0}
+        # If-None-Match forwards through the proxy
+        resp2, _, _ = rset.call(StatsRequest(
+            "estimate", "improved", schema_bounds=(("tok", 7.0),),
+            if_none_match=resp.etag,
+        ))
+        assert resp2.status == 304 and resp2.etag == resp.etag
+        assert rset.health["dead"].healthy is False
+
+
+def test_request_scoped_errors_propagate_without_ejection():
+    # A deterministic per-request failure (every replica would fail it
+    # identically) must NOT eject anyone — one poison request must not
+    # degrade the set. Transport failures still do.
+    class _Poisoned(_StubReplica):
+        def handle(self, req):
+            self.calls += 1
+            raise ValueError("dataset schema mismatch")
+
+    rset = ReplicaSet("wh/a", [_Poisoned("r0"), _Poisoned("r1")])
+    with pytest.raises(ValueError, match="schema mismatch"):
+        rset.call(StatsRequest("estimate"))
+    assert rset.failovers == 0
+    assert all(h.healthy for h in rset.health.values())
+    # exactly one replica was attempted: no retry cascade either
+    assert sum(r.calls for r in rset.replicas) == 1
+
+
+def test_remote_replica_percent_encodes_bounds(dataset):
+    # bounds values with URL metacharacters must round-trip through the
+    # proxy intact (and must not raise mid-URL-construction).
+    with StatsServer(StatsService(dataset)) as upstream:
+        remote = RemoteReplica("up", upstream.url)
+        bounds = (("tok", 7.5),)
+        resp = remote.handle(StatsRequest(
+            "estimate", "improved",
+            schema_bounds=(("a&b=c d", 3.0),) + bounds,
+        ))
+        assert resp.status == 200
+        assert resp.body["schema_bounds"] == {"a&b=c d": 3.0, "tok": 7.5}
+
+
+def test_remote_replica_passes_5xx_through_without_ejection():
+    # An upstream 500 is an application/dataset error (every replica would
+    # produce it identically) — it must relay as-is, not eject the set.
+    import json as _json
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    class _AlwaysFailing(BaseHTTPRequestHandler):
+        def log_message(self, *a):
+            pass
+
+        def do_GET(self):
+            payload = _json.dumps({"error": "ValueError: schema"}).encode()
+            self.send_response(500)
+            self.send_header("Content-Length", str(len(payload)))
+            self.end_headers()
+            self.wfile.write(payload)
+
+    httpd = ThreadingHTTPServer(("127.0.0.1", 0), _AlwaysFailing)
+    t = threading.Thread(target=httpd.serve_forever, daemon=True)
+    t.start()
+    try:
+        url = f"http://127.0.0.1:{httpd.server_address[1]}"
+        rset = ReplicaSet("wh/a", [RemoteReplica("sick", url)])
+        resp, name, attempts = rset.call(StatsRequest("estimate"))
+        assert resp.status == 500 and "schema" in resp.body["error"]
+        assert rset.failovers == 0
+        assert rset.health["sick"].healthy is True
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
