@@ -1,11 +1,14 @@
-"""Engine-strategy throughput: local vs sharded vs chunked over batch width.
+"""Engine-strategy throughput: local/sharded/chunked/composed over width.
 
 The estimators are embarrassingly parallel over columns, so the interesting
 axis is B — how wide a merged column set one `estimate()` call can serve.
-For each width (including one wider than the chunk budget) the three
+For each width (including one wider than the chunk budget) the four
 `EstimationEngine` strategies run over identical packed batches; `derived`
 records columns/second plus the resolved shard count / chunk count so a
-single-device CPU run (shards=1) is distinguishable from a real mesh.
+single-device CPU run (shards=1) is distinguishable from a real mesh. The
+composed column reports super-chunk dispatches (each `shards * budget`
+lanes wide), the working-set shape that lets a mesh of small devices
+stream a catalog wider than any one device's memory.
 
 Metadata is synthesized directly (no file IO): this measures the execution
 seam, not ingestion.
@@ -20,7 +23,7 @@ import numpy as np
 
 from benchmarks._quick import pick
 from repro.core.ndv.types import ColumnMetadata, PhysicalType
-from repro.engine import EngineConfig, EstimationEngine
+from repro.engine import EngineConfig, EstimationEngine, composed_plan
 
 ROW_GROUPS = 8
 
@@ -66,7 +69,7 @@ def run() -> List[tuple]:
     rows: List[tuple] = []
     for width in widths:
         cols = _columns(width)
-        for strategy in ("local", "sharded", "chunked"):
+        for strategy in ("local", "sharded", "chunked", "composed"):
             eng = EstimationEngine(
                 EngineConfig(strategy=strategy, max_batch=budget)
             )
@@ -75,9 +78,14 @@ def run() -> List[tuple]:
             us = _timeit(
                 lambda e=eng, bt=batch: e.estimate(bt, mode="improved").ndv
             )
-            chunks = (
-                -(-batch.batch // budget) if resolved == "chunked" else 1
-            )
+            if resolved == "chunked":
+                chunks = -(-batch.batch // budget)
+            elif resolved == "composed":
+                chunks = len(
+                    composed_plan(batch.batch, eng.shard_count, budget)[1]
+                )
+            else:
+                chunks = 1
             rows.append((
                 f"engine_scale/{strategy}/B{width}", us,
                 f"cols_per_s={width / (us / 1e6):.0f};"

@@ -7,7 +7,7 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   batch_memory.py — §8 batch dictionary prediction vs measured
   catalog_scale.py— StatsCatalog cold/warm/incremental latency + retraces
   complexity.py   — §10.2 single-pass complexity table
-  engine_scale.py — EstimationEngine local/sharded/chunked throughput
+  engine_scale.py — EstimationEngine local/sharded/chunked/composed throughput
   fleet_latency.py — routed vs direct overhead, failover, shared-spill warmth
   kernels.py      — Pallas kernel suite throughput
   service_latency.py — stats-service cold/warm/304 latency + throughput
@@ -15,9 +15,16 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
 
 ``--quick`` runs every module at tiny shapes (CI smoke: exercises the
 harness end to end in seconds; the numbers mean nothing).
+
+``--json PATH`` additionally writes the rows as a machine-readable
+artifact — the CI quick-benchmark step uploads it per run, so the repo
+accumulates a perf trajectory across PRs instead of one-off terminal
+output. The schema is deliberately flat: ``{"quick": bool, "rows":
+[{"name", "us_per_call", "derived"}, ...], "errors": [module, ...]}``.
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import traceback
@@ -30,6 +37,14 @@ def main(argv=None) -> None:
         # Before importing any benchmark module: they read the flag at
         # module/call scope through benchmarks._quick.
         os.environ["NDV_BENCH_QUICK"] = "1"
+    json_path = None
+    if "--json" in argv:
+        i = argv.index("--json")
+        try:
+            json_path = argv[i + 1]
+        except IndexError:
+            raise SystemExit("--json requires a PATH argument")
+        del argv[i : i + 2]
     if argv:
         raise SystemExit(f"unknown arguments: {argv}")
 
@@ -59,16 +74,31 @@ def main(argv=None) -> None:
         ("kernels", kernels),
     ]
     print("name,us_per_call,derived")
-    failed = 0
+    rows = []
+    errors = []
     for name, mod in modules:
         try:
             for row_name, us, derived in mod.run():
                 print(f"{row_name},{us:.1f},{derived}")
+                rows.append({
+                    "name": row_name,
+                    "us_per_call": round(us, 1),
+                    "derived": derived,
+                })
         except Exception as e:  # pragma: no cover
-            failed += 1
+            errors.append(name)
             traceback.print_exc()
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
-    if failed:
+    if json_path:
+        payload = {
+            "quick": bool(os.environ.get("NDV_BENCH_QUICK")),
+            "rows": rows,
+            "errors": errors,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)
+    if errors:
         sys.exit(1)
 
 

@@ -11,11 +11,14 @@ The catalog's contract (see the package docstring for the design):
     pool and commit through the same code path.
   * `estimate()` packs the merged view through the bucketing `BatchPacker`
     and executes through an injected `EstimationEngine` (local / sharded /
-    chunked — see `repro.engine`). Packed batches are cached per
-    (fingerprint set, packer), estimates per (fingerprint set, mode,
-    schema bounds, engine config) — a warm call performs zero packing and
-    zero tracing, just a dict hit, and two differently-configured engines
-    never share an entry.
+    chunked / composed — see `repro.engine`). Packed batches are cached
+    per (fingerprint set, packer), estimates per (fingerprint set, mode,
+    schema bounds, engine identity) — a warm call performs zero packing
+    and zero tracing, just a dict hit. Engine identity is `cache_key`:
+    only the numerics-bearing backend, so engines differing merely in
+    execution shape (strategy, shards, chunk budget — all bit-identical
+    by the parity contract) share entries, and a strategy change never
+    cools the cache; engines that could answer differently never share.
   * `save_cache()` / `load_cache()` spill the estimate cache to a JSON file
     next to the dataset so restarts serve warm.
   * `plan()` turns estimates into `NDVPlanner` memory plans.
@@ -46,7 +49,11 @@ from repro.core.ndv.estimator import estimates_from_batch
 from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimate
 
 CACHE_FILE_NAME = ".ndv_estimate_cache.json"
-_CACHE_VERSION = 1
+# v2: engine identity in entry keys went from the 4-field config tuple to
+# the backend-only `cache_key` (strategy/shards/budget are numerics-neutral).
+# v1 files load as clean cold starts instead of as permanently-unreachable
+# entries that the merge-not-clobber save path would re-persist forever.
+_CACHE_VERSION = 2
 
 # One lock per spill path: replicas of the same dataset inside one process
 # (the fleet tier runs several `StatsService`s over one root) serialize
@@ -400,8 +407,10 @@ class StatsCatalog:
           schema_bounds: optional column -> upper-bound NDV (Eq 14-15 family
             of schema knowledge, e.g. an enum's domain size).
           engine: optional `EstimationEngine` override for this call. The
-            cache key includes the engine's config, so calls through
-            differently-configured engines are cached independently.
+            cache key includes the engine's numeric identity
+            (`engine.cache_key` — the backend), so engines that could
+            answer differently are cached independently while execution
+            shapes that are bit-identical by the parity contract share.
         """
         self._ensure_scanned()
         engine = engine or self.engine

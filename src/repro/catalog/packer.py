@@ -55,6 +55,14 @@ class BatchPacker:
       col_multiple: round B up to a multiple of this after bucketing, so a
         sharded engine can split the batch evenly on the B axis. The extra
         lanes are ordinary masked padding (`valid=False`, `n_groups=0`).
+      col_chunk: the composed engine's per-shard chunk budget. When
+        nonzero, a batch wider than one super-chunk
+        (`col_multiple * col_chunk` lanes — one dispatch of `col_chunk`
+        per shard) rounds B up to a whole number of super-chunks, so every
+        shard's slice splits into equal full chunks: one jit trace shape,
+        no ragged tail, no engine-side re-padding. Batches that fit a
+        single super-chunk only round to `col_multiple` (plain even
+        sharding) — narrow datasets never pad out to a full super-chunk.
     """
 
     bucket_rows: bool = True
@@ -62,6 +70,7 @@ class BatchPacker:
     row_floor: int = 8
     col_floor: int = 1
     col_multiple: int = 1
+    col_chunk: int = 0
 
     def shape_for(self, num_columns: int, max_groups: int) -> tuple:
         b = (
@@ -71,6 +80,9 @@ class BatchPacker:
         )
         m = max(int(self.col_multiple), 1)
         b = -(-b // m) * m
+        stride = m * max(int(self.col_chunk), 0)
+        if stride and b > stride:
+            b = -(-b // stride) * stride
         r = (
             bucket_size(max_groups, self.row_floor)
             if self.bucket_rows

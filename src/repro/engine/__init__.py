@@ -26,12 +26,23 @@ pure per-shard kernel. Three execution strategies hide behind one config:
            trace shapes — stays bounded regardless of dataset width. The
            budget is either a fixed power of two or "auto", derived from
            the device's reported memory (`resolve_max_batch()`).
+  composed sharded AND chunked: the batch streams through the mesh in
+           super-chunks of `num_shards * max_batch` lanes, so each device
+           sees at most its per-shard budget per dispatch. This is the
+           strategy that lets a mesh of small devices serve a catalog
+           wider than any single device's memory; "auto" picks it when
+           both >1 device and over-the-mesh-budget hold. The shape math
+           lives in `composed_plan()` (pure, property-tested).
 
-The parity contract is strict: for real (non-padding) lanes, the sharded
-and chunked paths produce bit-identical outputs to the local path (asserted
-by tests/test_engine.py on simulated multi-device CPU). That holds because
-padding lanes are fully masked and no estimator op mixes information across
-B — the engine only ever re-tiles the same per-lane program.
+The parity contract is strict: for real (non-padding) lanes, the sharded,
+chunked, and composed paths produce bit-identical outputs to the local path
+(asserted by tests/test_engine.py, run as a strategy×device CI matrix on
+simulated multi-device CPU). That holds because padding lanes are fully
+masked and no estimator op mixes information across B — the engine only
+ever re-tiles the same per-lane program. The contract extends upward: since
+strategies are numerics-neutral, they never enter `cache_key`/`cache_token`,
+so estimate caches, on-disk spills, and client ETag caches all survive
+strategy changes unchanged.
 
 The config also carries the `kernels/ops` backend knob ("auto" / "pallas" /
 "ref"), which used to be unreachable from the public API: the engine threads
@@ -42,6 +53,7 @@ from repro.engine.config import DEFAULT_MAX_BATCH, EngineConfig  # noqa: F401
 from repro.engine.engine import (  # noqa: F401
     EstimationEngine,
     auto_chunk_budget,
+    composed_plan,
     default_engine,
     default_packer,
     detect_device_memory,

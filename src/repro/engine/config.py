@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Union
 
-STRATEGIES = ("auto", "local", "sharded", "chunked")
+STRATEGIES = ("auto", "local", "sharded", "chunked", "composed")
 BACKENDS = ("auto", "pallas", "ref")
 
 # The chunk budget used when max_batch="auto" finds no usable device memory
@@ -25,26 +25,44 @@ class EngineConfig:
 
     Attributes:
       strategy: "local" (single-device jit), "sharded" (split B across a
-        device mesh), "chunked" (bounded-B streaming), or "auto" — sharded
-        when more than one device is visible, otherwise chunked only when
-        the batch exceeds `max_batch`, otherwise local.
+        device mesh), "chunked" (bounded-B streaming), "composed" (split B
+        across the mesh AND chunk-stream each shard's slice under a
+        per-shard budget — the strategy for meshes of small devices serving
+        catalogs wider than any one device's memory), or "auto" — composed
+        when more than one device is visible and the batch exceeds the
+        mesh-wide budget (`num_shards * per-shard max_batch`), sharded when
+        more than one device is visible, otherwise chunked only when the
+        batch exceeds `max_batch`, otherwise local.
       backend: the `repro.kernels.ops` knob, threaded into `estimate_batch`.
         "auto" picks the fastest correct path per platform (compiled Pallas
         kernels on TPU, the jnp reference elsewhere — interpret-mode Pallas
         is a correctness tool, not a serving path); "pallas" forces the
         kernels (interpreted off-TPU); "ref" forces the jnp reference.
-      num_shards: device count for the sharded strategy; 0 means all
-        visible devices. Clamped to the visible device count at run time.
+      num_shards: device count for the sharded and composed strategies; 0
+        means all visible devices. Clamped to the visible device count at
+        run time (the clamp is logged once per engine: under composed a
+        silently wrong shard count would also silently change the
+        per-shard chunk budget).
       max_batch: the chunk budget — the widest B a single `estimate_batch`
-        call may see under the chunked strategy. Must be a power of two so
+        call may see under the chunked strategy, and the widest slice a
+        single SHARD may see under composed. Must be a power of two so
         power-of-two-bucketed batches always split into equal full chunks
         (one jit trace shape, no ragged tail). "auto" derives the budget
         from the accelerator's reported memory at first use
         (`EstimationEngine.resolve_max_batch()`), falling back to
-        `DEFAULT_MAX_BATCH` where no report exists (host CPU). Like
-        `strategy`, "auto" stays unresolved in `cache_key`/`cache_token`:
-        chunking is numerics-neutral under the engine parity contract, so
-        differently-sized chunks may share cache lines and ETags.
+        `DEFAULT_MAX_BATCH` where no report exists (host CPU); under
+        composed the report is divided by the shard count first (simulated
+        host meshes share one physical pool), so the per-shard budget
+        shrinks as the mesh grows.
+
+    Cache-key neutrality rules: by the engine parity contract every
+    strategy produces bit-identical estimates for real lanes, so
+    `strategy`, `num_shards`, and `max_batch` are execution-shape knobs
+    that never enter `EstimationEngine.cache_key` or `cache_token`.
+    Estimate caches, on-disk spills, and client ETag caches therefore stay
+    valid across strategy changes — switching a dataset from local to
+    composed invalidates nothing. Only `backend` can change numerics, and
+    only it is identity.
     """
 
     strategy: str = "auto"

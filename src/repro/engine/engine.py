@@ -8,7 +8,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence
+import logging
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +39,8 @@ NOMINAL_LANE_BYTES = 1 << 16
 AUTO_MIN_BATCH = 1024
 AUTO_MAX_BATCH = 1 << 20
 
+logger = logging.getLogger(__name__)
+
 
 def detect_device_memory() -> Optional[int]:
     """Bytes of memory on the first visible device, or None.
@@ -56,15 +59,50 @@ def detect_device_memory() -> Optional[int]:
     return int(limit) if limit else None
 
 
-def auto_chunk_budget(mem_bytes: Optional[int]) -> int:
+def auto_chunk_budget(mem_bytes: Optional[int], shards: int = 1) -> int:
     """Device memory -> chunk budget: the largest power of two of nominal
     lanes fitting in `AUTO_MEM_FRACTION` of memory, clamped to
-    [AUTO_MIN_BATCH, AUTO_MAX_BATCH]. None -> `DEFAULT_MAX_BATCH`."""
+    [AUTO_MIN_BATCH, AUTO_MAX_BATCH]. None -> `DEFAULT_MAX_BATCH`.
+
+    `shards > 1` (the composed strategy) divides the memory report first:
+    `memory_stats()` on a forced-host-platform mesh reports the one shared
+    physical pool from every simulated device, so the per-shard budget must
+    shrink as the mesh grows. On real accelerators with dedicated HBM the
+    division is merely conservative — chunk width is numerics-neutral, so
+    a smaller budget bounds the working set tighter at no accuracy cost.
+    """
     if not mem_bytes:
         return DEFAULT_MAX_BATCH
-    lanes = int(mem_bytes * AUTO_MEM_FRACTION / NOMINAL_LANE_BYTES)
+    lanes = int(mem_bytes * AUTO_MEM_FRACTION / NOMINAL_LANE_BYTES / max(shards, 1))
     lanes = max(AUTO_MIN_BATCH, min(lanes, AUTO_MAX_BATCH))
     return 1 << (lanes.bit_length() - 1)  # previous power of two
+
+
+def composed_plan(
+    width: int, shards: int, chunk: int
+) -> Tuple[int, List[Tuple[int, int]]]:
+    """(padded B, super-chunk spans) for the composed strategy.
+
+    A super-chunk is one `shard_map` dispatch: `shards * chunk` lanes, of
+    which each shard sees exactly `chunk`. A batch wider than one
+    super-chunk pads up to a whole number of them — every span has the same
+    width (one jit trace shape) and every shard's slice of every span is a
+    full `chunk` (no ragged tail). A batch that already fits one dispatch
+    pads only to a multiple of the shard count and runs as plain sharding,
+    so narrow catalogs never blow up to `shards * chunk` lanes of padding.
+
+    Pure shape math (no device access) — the hypothesis coverage property
+    in tests runs directly against this function.
+    """
+    if width < 1 or shards < 1 or chunk < 1:
+        raise ValueError(f"need positive width/shards/chunk, got "
+                         f"({width}, {shards}, {chunk})")
+    stride = shards * chunk
+    if width <= stride:
+        padded = -(-width // shards) * shards
+        return padded, [(0, padded)]
+    padded = -(-width // stride) * stride
+    return padded, [(lo, lo + stride) for lo in range(0, padded, stride)]
 
 
 @functools.lru_cache(maxsize=None)
@@ -105,29 +143,48 @@ class EstimationEngine:
     def __init__(self, config: Optional[EngineConfig] = None):
         self.config = config or EngineConfig()
         self._packer: Optional[BatchPacker] = None
-        self._auto_max_batch: Optional[int] = None
+        self._mem_checked = False
+        self._mem_bytes: Optional[int] = None
+        self._auto_budgets: Dict[int, int] = {}
+        self._clamp_logged = False
 
     # -- identity ------------------------------------------------------------
 
     @property
     def shard_count(self) -> int:
-        """Resolved shard count: config, clamped to visible devices."""
+        """Resolved shard count: config, clamped to visible devices.
+
+        The clamp is surfaced (one log line per engine, not per call): a
+        `num_shards` larger than the mesh silently becoming "all devices"
+        used to be invisible, and under the composed strategy a wrong shard
+        count also silently changes the per-shard chunk budget.
+        """
         n_dev = jax.device_count()
         want = self.config.num_shards or n_dev
+        if want > n_dev and not self._clamp_logged:
+            self._clamp_logged = True
+            logger.warning(
+                "EngineConfig(num_shards=%d) exceeds the %d visible "
+                "device(s); clamping to %d (this also sets the composed "
+                "per-shard chunk budget)",
+                want, n_dev, n_dev,
+            )
         return max(1, min(want, n_dev))
 
     @property
     def cache_key(self) -> tuple:
         """Hashable config identity (catalog cache key component).
 
-        Deliberately the CONFIG, not the resolved device topology: by the
-        parity contract, estimates are bit-identical across strategies and
-        shard counts, so a persisted cache written on one topology must
-        stay warm on another (the whole point of `save_cache()`). Only
-        `backend` can change numerics, and it is part of the config.
+        Deliberately only the fields that can change numerics — which, by
+        the engine parity contract, is `backend` alone. Strategy, shard
+        count, and chunk budget are execution-shape knobs with bit-identical
+        outputs, so engines that differ only in those SHARE cache lines: a
+        persisted cache written under "local" on one topology stays warm
+        under "composed" on another (the whole point of `save_cache()`).
+        The backend stays unresolved ("auto" as configured) so spills stay
+        portable across hosts of one platform class.
         """
-        c = self.config
-        return (c.strategy, c.backend, c.num_shards, c.max_batch)
+        return (self.config.backend,)
 
     @property
     def cache_token(self) -> str:
@@ -139,40 +196,54 @@ class EstimationEngine:
         Unlike `cache_key`, the backend appears RESOLVED ("auto" becomes
         the kernel path it picks on this platform): a TPU replica and a CPU
         replica both configured "auto" execute different numerics, so their
-        tags must differ even though their configs match. The strategy
-        fields stay unresolved — the parity contract makes them
-        numerics-neutral, and `cache_key` portability covers them.
+        tags must differ even though their configs match. Nothing else
+        enters the token — strategy, shard count, and chunk budget are
+        numerics-neutral by the parity contract, so a composed replica and
+        a local replica of one dataset emit byte-identical ETags and a
+        strategy change invalidates no client cache.
         """
         from repro.kernels import ops
 
-        c = self.config
-        backend = "pallas" if ops.use_pallas(c.backend) else "ref"
-        return f"{c.strategy}.{backend}.s{c.num_shards}.b{c.max_batch}"
+        backend = "pallas" if ops.use_pallas(self.config.backend) else "ref"
+        return f"k.{backend}"
 
     def make_packer(self) -> BatchPacker:
-        """Shard-aware packer: B rounds up to a multiple of the shard count
-        so the sharded split is even and padding lanes stay masked.
+        """Shard- and chunk-aware packer, coordinated with this engine.
+
+        B rounds up to a multiple of the shard count so the sharded split
+        is even; under the composed strategy (and "auto", which may resolve
+        to it on a mesh) the packer additionally carries the per-shard
+        chunk budget (`col_chunk`), so batches wider than one super-chunk
+        round up to `num_shards * chunk` — every shard's slice then splits
+        into equal full chunks with no engine-side re-padding copy.
 
         One instance per engine (packers are stateless frozen dataclasses;
         sharing keeps every caller on the same bucketing policy object).
         """
         if self._packer is None:
+            strategy = self.config.strategy
             mult = (
                 self.shard_count
-                if self.config.strategy in ("auto", "sharded")
+                if strategy in ("auto", "sharded", "composed")
                 else 1
             )
-            self._packer = BatchPacker(col_multiple=mult)
+            chunk = 0
+            if mult > 1 and strategy in ("auto", "composed"):
+                chunk = self.resolve_max_batch(shards=mult)
+            self._packer = BatchPacker(col_multiple=mult, col_chunk=chunk)
         return self._packer
 
     # -- strategy resolution --------------------------------------------------
 
-    def resolve_max_batch(self) -> int:
+    def resolve_max_batch(self, *, shards: int = 1) -> int:
         """The chunk budget this engine executes with.
 
-        A fixed config value passes through; "auto" is derived once per
-        engine from the first device's reported memory (fallback:
+        A fixed config value passes through; "auto" is derived per engine
+        from the first device's reported memory, detected once (fallback:
         `DEFAULT_MAX_BATCH` where the backend reports none, e.g. host CPU).
+        `shards > 1` is the composed strategy's PER-SHARD budget: the memory
+        report is divided across the mesh before sizing (see
+        `auto_chunk_budget`), so the budget shrinks as the mesh grows.
         Resolution never enters `cache_key`/`cache_token` — chunk width is
         numerics-neutral by the parity contract, so caches and ETags stay
         portable across differently-sized hosts.
@@ -180,15 +251,30 @@ class EstimationEngine:
         mb = self.config.max_batch
         if mb != "auto":
             return mb
-        if self._auto_max_batch is None:
-            self._auto_max_batch = auto_chunk_budget(detect_device_memory())
-        return self._auto_max_batch
+        if not self._mem_checked:
+            self._mem_bytes = detect_device_memory()
+            self._mem_checked = True
+        budget = self._auto_budgets.get(shards)
+        if budget is None:
+            budget = self._auto_budgets[shards] = auto_chunk_budget(
+                self._mem_bytes, shards
+            )
+        return budget
+
+    def per_shard_budget(self) -> int:
+        """The composed strategy's per-shard chunk budget on this engine."""
+        return self.resolve_max_batch(shards=self.shard_count)
 
     def resolve_strategy(self, batch_width: int) -> str:
         s = self.config.strategy
         if s != "auto":
             return s
-        if self.shard_count > 1:
+        n = self.shard_count
+        if n > 1:
+            # Over the mesh-wide budget: plain sharding would hand some
+            # device a slice wider than its chunk budget — stream instead.
+            if batch_width > n * self.per_shard_budget():
+                return "composed"
             return "sharded"
         if batch_width > self.resolve_max_batch():
             return "chunked"
@@ -214,6 +300,8 @@ class EstimationEngine:
             return self._estimate_sharded(batch, schema_bound, mode)
         if strategy == "chunked":
             return self._estimate_chunked(batch, schema_bound, mode)
+        if strategy == "composed":
+            return self._estimate_composed(batch, schema_bound, mode)
         return estimate_batch(
             batch, schema_bound, mode=mode, backend=self.config.backend
         )
@@ -252,13 +340,58 @@ class EstimationEngine:
                 batch, schema_bound, mode=mode, backend=self.config.backend
             )
         batch, schema_bound, b = self._padded_to_multiple(batch, schema_bound, c)
+        spans = [(lo, lo + c) for lo in range(0, batch.batch, c)]
+        return self._stream_spans(
+            batch, schema_bound, b, spans,
+            lambda sub, sb: estimate_batch(
+                sub, sb, mode=mode, backend=self.config.backend
+            ),
+        )
+
+    def _estimate_composed(self, batch, schema_bound, mode) -> BatchEstimates:
+        """Sharded AND chunked: stream super-chunks through the mesh.
+
+        Each super-chunk is one `shard_map` dispatch of `shards * chunk`
+        lanes — every device sees exactly `chunk` lanes per dispatch, so
+        the per-device working set stays bounded by the per-shard budget
+        no matter how wide the catalog grows, while all `shards` devices
+        advance in lockstep through the stream. `composed_plan` guarantees
+        equal spans (one jit trace shape) and no ragged tail; concatenating
+        span outputs in order preserves lane order because `shard_map`'s
+        `P("cols")` out-spec already concatenates device outputs in order.
+        Bit-identical to local for real lanes: this path only re-tiles the
+        B axis twice (chunk-of-sharded), and both tilings are proven
+        numerics-neutral by the parity contract.
+        """
+        n = self.shard_count
+        chunk = self.per_shard_budget()
+        target, spans = composed_plan(batch.batch, n, chunk)
+        batch, schema_bound, b = self._padded_to_multiple(
+            batch, schema_bound, target
+        )
+        if schema_bound is None:
+            schema_bound = jnp.full(batch.batch, np.inf, jnp.float32)
+        fn = _sharded_fn(
+            tuple(jax.devices()[:n]), mode, self.config.backend
+        )
+        return self._stream_spans(batch, schema_bound, b, spans, fn)
+
+    def _stream_spans(
+        self, batch, schema_bound, b, spans, fn
+    ) -> BatchEstimates:
+        """Run `fn` over each B-axis span, concatenate in order, trim to `b`.
+
+        The one streaming loop shared by the chunked (fn = estimate_batch)
+        and composed (fn = the sharded dispatch) strategies — span order is
+        lane order, so concatenation reassembles the unstreamed result.
+        """
         parts: List[BatchEstimates] = []
-        for lo in range(0, batch.batch, c):
-            sub = jax.tree.map(lambda x: x[lo : lo + c], batch)
-            sb = None if schema_bound is None else schema_bound[lo : lo + c]
-            parts.append(
-                estimate_batch(sub, sb, mode=mode, backend=self.config.backend)
-            )
+        for lo, hi in spans:
+            sub = jax.tree.map(lambda x: x[lo:hi], batch)
+            sb = None if schema_bound is None else schema_bound[lo:hi]
+            parts.append(fn(sub, sb))
+        if len(parts) == 1:
+            return self._trim(parts[0], b)
         out = BatchEstimates(
             *[jnp.concatenate(field) for field in zip(*parts)]
         )

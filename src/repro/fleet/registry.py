@@ -5,8 +5,12 @@ root on disk plus the per-dataset `EngineConfig` the replicas must share.
 The engine config lives HERE, not on individual replicas, deliberately:
 every response ETag folds in the engine's `cache_token`, so replicas of one
 dataset may only be interchangeable (byte-identical tags, shared estimate
-caches) if they run the same config. The registry is the single place that
-invariant is pinned.
+caches) if they run numerically identical engines. The registry is the
+single place that invariant is pinned. Since the parity contract makes
+execution strategy numerics-neutral (and the token backend-only), a spec
+may freely name "composed" — or be migrated between strategies across a
+deploy — without rotating a single tag or cooling a single cache; only a
+backend change is a real identity change.
 
 Keys are two URL path segments (`{namespace}/{dataset}`), validated at
 registration so the router can mount them directly as HTTP paths.

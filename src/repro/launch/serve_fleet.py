@@ -52,7 +52,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--probe-interval", type=float, default=5.0,
                     help="replica health-probe seconds; 0 disables")
     ap.add_argument("--strategy", default="auto",
-                    help="engine strategy (auto/local/sharded/chunked)")
+                    help="engine strategy (auto/local/sharded/chunked/composed)")
     ap.add_argument("--backend", default="auto",
                     help="kernel backend (auto/pallas/ref)")
     ap.add_argument("--max-batch", default="auto",

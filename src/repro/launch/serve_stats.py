@@ -36,7 +36,7 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--workers", type=int, default=8,
                     help="ingestion scatter-gather thread-pool width")
     ap.add_argument("--strategy", default="auto",
-                    help="engine strategy (auto/local/sharded/chunked)")
+                    help="engine strategy (auto/local/sharded/chunked/composed)")
     ap.add_argument("--backend", default="auto",
                     help="kernel backend (auto/pallas/ref)")
     ap.add_argument("--auto-load-cache", action="store_true",

@@ -27,9 +27,13 @@ strong ETag computed as SHA-1 over:
   1. the catalog's fingerprint set — one `file_id@fingerprint` token per
      live file (`StatsCatalog.fingerprint_key()`), so any file addition,
      removal, or rewrite rotates the tag, and *only* dataset changes do;
-  2. the engine's `cache_token` — differently-configured engines (which
-     may differ numerically via the kernel backend) never validate each
-     other's responses;
+  2. the engine's `cache_token` — engines that can differ numerically
+     (i.e. via the resolved kernel backend) never validate each other's
+     responses. Execution shape (strategy, shard count, chunk budget) is
+     numerics-neutral by the engine parity contract and deliberately
+     absent: a composed server and a local server over one dataset emit
+     byte-identical ETags, so a strategy change invalidates no client
+     cache;
   3. the request identity — endpoint kind, estimation mode, and schema
      bounds — so a tag validates exactly the response it was issued for.
 

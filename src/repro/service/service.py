@@ -10,10 +10,12 @@ testable without sockets.
 Coherence model (see the package docstring for the client-facing contract):
 
   * Every cacheable response carries an ETag = SHA-1 over the catalog's
-    fingerprint set, the engine's `cache_token`, and the request identity
-    (endpoint kind, mode, schema bounds). Any file add/remove/rewrite
-    changes the fingerprint set and therefore rotates every ETag; an
-    unchanged dataset validates forever.
+    fingerprint set, the engine's `cache_token` (the resolved backend —
+    the only numerics-bearing knob; execution strategy is neutral, so
+    tags survive strategy changes), and the request identity (endpoint
+    kind, mode, schema bounds). Any file add/remove/rewrite changes the
+    fingerprint set and therefore rotates every ETag; an unchanged
+    dataset validates forever.
   * An `If-None-Match` hit is answered before any catalog work: zero packs,
     zero engine executions, zero merges, and no lock — the fingerprint-set
     digest is precomputed at each commit (`_state_token`), so revalidation

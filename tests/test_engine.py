@@ -2,11 +2,14 @@
 and estimate-cache persistence.
 
 The engine's contract is bit-for-bit parity across execution strategies for
-real (non-padding) lanes. Sharded parity on >= 4 devices runs in a
-subprocess (XLA device count is fixed at process start); when the host
-process itself has >= 4 simulated devices (the CI engine-parity step sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=4``) the in-process
-variants run too.
+real (non-padding) lanes. `test_strategy_parity_matrix` is the CI parity
+matrix selector: the workflow runs it once per (strategy, device count)
+cell via ``-k "parity_matrix and <strategy>"`` under
+``XLA_FLAGS=--xla_force_host_platform_device_count={1,4}``, so a parity
+break names the exact strategy/topology that diverged. Sharded parity on
+>= 4 devices additionally runs in a subprocess (XLA device count is fixed
+at process start); when the host process itself has >= 4 simulated devices
+the in-process variants run too.
 """
 import json
 import os
@@ -47,6 +50,30 @@ def _column(seed: int, r: int, name: str = "c") -> ColumnMetadata:
 def _columns(width: int):
     # Ragged row-group counts: exercises padding in both axes.
     return [_column(i, r=1 + (i % 7)) for i in range(width)]
+
+
+# -- strategy×device parity matrix (the CI selector) --------------------------
+
+
+@pytest.mark.parametrize("strategy", ["local", "sharded", "chunked", "composed"])
+def test_strategy_parity_matrix(strategy):
+    """One cell of the CI parity matrix: `strategy` vs local, bit for bit.
+
+    Runs at whatever device count the process was started with (the CI
+    matrix forces 1 and 4 via XLA_FLAGS) — every strategy must hold parity
+    on every topology, including the degenerate single-device mesh.
+    """
+    ref_engine = EstimationEngine(EngineConfig(strategy="local"))
+    eng = EstimationEngine(EngineConfig(strategy=strategy, max_batch=8))
+    # Widths straddling the mesh-wide budget, plus one below the shard count.
+    for width in (3, 13, 64):
+        cols = _columns(width)
+        bounds = [np.inf] * width
+        bounds[width // 2] = 5.0
+        for mode in ("paper", "improved"):
+            ref = ref_engine.estimate_columns(cols, bounds, mode=mode)
+            got = eng.estimate_columns(cols, bounds, mode=mode)
+            assert got == ref, (strategy, width, mode)
 
 
 # -- chunked parity (any device count) ---------------------------------------
@@ -99,12 +126,29 @@ for width in (3, 13, 64):          # 3 < shards: pure padding lanes on 3 shards
         local = EstimationEngine(EngineConfig(strategy="local"))
         sharded = EstimationEngine(EngineConfig(strategy="sharded"))
         chunked = EstimationEngine(EngineConfig(strategy="chunked", max_batch=8))
+        composed = EstimationEngine(EngineConfig(strategy="composed", max_batch=4))
         ref = local.estimate_columns(cols, mode=mode)
-        for name, eng in (("sharded", sharded), ("chunked", chunked)):
+        for name, eng in (
+            ("sharded", sharded), ("chunked", chunked), ("composed", composed)
+        ):
             got = eng.estimate_columns(cols, mode=mode)
             if got != ref:
                 out["ok"] = False
                 out["fail"].append([name, mode, width])
+
+# auto resolves to composed when both multi-device and over-budget hold,
+# and the composed result still matches local bit for bit.
+auto = EstimationEngine(EngineConfig(strategy="auto", max_batch=4))
+cols = _columns(64)
+batch = auto.make_packer().pack(cols)
+resolved = auto.resolve_strategy(batch.batch)
+if resolved != "composed":
+    out["ok"] = False
+    out["fail"].append(["auto-resolution", resolved, batch.batch])
+ref = EstimationEngine(EngineConfig(strategy="local")).estimate_columns(cols)
+if auto.estimate_columns(cols) != ref:
+    out["ok"] = False
+    out["fail"].append(["auto-composed-parity", "paper", 64])
 print(json.dumps(out))
 """
 
@@ -139,6 +183,93 @@ def test_sharded_matches_local_in_process(mode):
         cols, mode=mode
     )
     assert got == ref
+
+
+# -- composed strategy ---------------------------------------------------------
+
+
+def test_composed_plan_shapes():
+    from repro.engine import composed_plan
+
+    # wider than one super-chunk: whole super-chunks, equal spans
+    padded, spans = composed_plan(100, 3, 4)
+    assert padded == 108 and padded % (3 * 4) == 0
+    assert spans == [(lo, lo + 12) for lo in range(0, 108, 12)]
+    # fits one dispatch: pad only to the shard count, not a full super-chunk
+    assert composed_plan(5, 3, 4) == (6, [(0, 6)])
+    assert composed_plan(8, 4, 1024) == (8, [(0, 8)])
+    with pytest.raises(ValueError, match="positive"):
+        composed_plan(0, 1, 1)
+
+
+def test_composed_matches_local_any_device_count():
+    # Parity must hold even on the degenerate 1-device mesh (CPU default):
+    # composed then reduces to pure chunk streaming.
+    cols = _columns(37)
+    local = EstimationEngine(EngineConfig(strategy="local"))
+    comp = EstimationEngine(EngineConfig(strategy="composed", max_batch=8))
+    for mode in ("paper", "improved"):
+        assert comp.estimate_columns(cols, mode=mode) == local.estimate_columns(
+            cols, mode=mode
+        )
+
+
+def test_auto_resolves_composed_when_multi_device_and_over_budget(monkeypatch):
+    eng = EstimationEngine(EngineConfig(strategy="auto", max_batch=8))
+    monkeypatch.setattr(
+        EstimationEngine, "shard_count", property(lambda self: 4)
+    )
+    # over the mesh-wide budget (4 shards x 8) -> composed
+    assert eng.resolve_strategy(64) == "composed"
+    # at or under it -> plain sharded
+    assert eng.resolve_strategy(32) == "sharded"
+    assert eng.resolve_strategy(4) == "sharded"
+
+
+@pytest.mark.skipif(
+    jax.device_count() < 4, reason="needs >= 4 devices (CI parity step)"
+)
+def test_auto_resolves_composed_in_process():
+    eng = EstimationEngine(EngineConfig(strategy="auto", max_batch=4))
+    batch = eng.make_packer().pack(_columns(64))
+    assert eng.resolve_strategy(batch.batch) == "composed"
+    ref = EstimationEngine(EngineConfig(strategy="local")).estimate_columns(
+        _columns(64)
+    )
+    assert eng.estimate_columns(_columns(64)) == ref
+
+
+def test_composed_packer_coordinates_shards_and_chunks(monkeypatch):
+    monkeypatch.setattr(
+        EstimationEngine, "shard_count", property(lambda self: 3)
+    )
+    eng = EstimationEngine(EngineConfig(strategy="composed", max_batch=4))
+    packer = eng.make_packer()
+    assert packer.col_multiple == 3 and packer.col_chunk == 4
+    # bucket(37) = 64 > one super-chunk (12) -> whole super-chunks
+    assert packer.shape_for(37, 4)[0] == 72
+    # narrow batch: multiple of shards only, NOT padded to a super-chunk
+    assert packer.shape_for(5, 4)[0] == 9  # bucket 8 -> next multiple of 3
+
+
+def test_shard_clamp_is_surfaced_once(caplog):
+    n_dev = jax.device_count()
+    eng = EstimationEngine(
+        EngineConfig(strategy="sharded", num_shards=n_dev + 60)
+    )
+    with caplog.at_level("WARNING", logger="repro.engine.engine"):
+        assert eng.shard_count == n_dev
+        assert eng.shard_count == n_dev  # second read: no duplicate log
+    clamps = [r for r in caplog.records if "clamping" in r.message]
+    assert len(clamps) == 1
+    assert str(n_dev + 60) in clamps[0].getMessage()
+    # a satisfiable config never logs
+    caplog.clear()
+    with caplog.at_level("WARNING", logger="repro.engine.engine"):
+        assert EstimationEngine(
+            EngineConfig(strategy="sharded", num_shards=n_dev)
+        ).shard_count == n_dev
+    assert not [r for r in caplog.records if "clamping" in r.message]
 
 
 # -- packer shard-awareness ----------------------------------------------------
@@ -217,11 +348,18 @@ def _dataset(tmp_path, n_files=2):
     return str(tmp_path)
 
 
-def test_catalog_cache_keys_separate_engine_configs(tmp_path):
+def test_catalog_cache_shared_across_strategies_split_by_backend(tmp_path):
+    # The neutrality rules: strategy / shard count / chunk budget are
+    # numerics-neutral (parity contract), so engines differing only in them
+    # SHARE a cache line — a strategy change invalidates nothing. Only the
+    # backend can change numerics, so it still splits entries.
     root = _dataset(tmp_path)
     catalog = StatsCatalog(root)
     e_local = EstimationEngine(EngineConfig(strategy="local"))
     e_chunked = EstimationEngine(EngineConfig(strategy="chunked", max_batch=2))
+    e_composed = EstimationEngine(
+        EngineConfig(strategy="composed", max_batch=2, num_shards=1)
+    )
 
     first = catalog.estimate(engine=e_local)
     assert catalog.stats.estimate_cache_misses == 1
@@ -229,14 +367,14 @@ def test_catalog_cache_keys_separate_engine_configs(tmp_path):
     again = catalog.estimate(engine=EstimationEngine(EngineConfig(strategy="local")))
     assert catalog.stats.estimate_cache_hits == 1
     assert again == first
-    # different engine config -> separate entry, but identical values
-    other = catalog.estimate(engine=e_chunked)
-    assert catalog.stats.estimate_cache_misses == 2
-    assert other == first
-    # both entries stay warm independently
-    catalog.estimate(engine=e_local)
-    catalog.estimate(engine=e_chunked)
+    # different execution shape, same numerics -> same entry stays warm
+    assert catalog.estimate(engine=e_chunked) == first
+    assert catalog.estimate(engine=e_composed) == first
     assert catalog.stats.estimate_cache_hits == 3
+    assert catalog.stats.estimate_cache_misses == 1
+    # a different backend is a different numeric identity -> separate entry
+    catalog.estimate(engine=EstimationEngine(EngineConfig(backend="ref")))
+    assert catalog.stats.estimate_cache_misses == 2
 
 
 def test_catalog_estimates_match_direct_engine_call(tmp_path):
@@ -351,6 +489,27 @@ def test_auto_chunk_budget_math():
         assert b & (b - 1) == 0 and AUTO_MIN_BATCH <= b <= AUTO_MAX_BATCH
 
 
+def test_auto_budget_shrinks_per_shard(monkeypatch):
+    # The composed per-shard budget divides the memory report across the
+    # mesh (simulated host devices all report the one shared pool), so the
+    # budget shrinks as the mesh grows — and the report is read only once
+    # per engine no matter how many shard counts are resolved.
+    from repro.engine import engine as engine_mod
+
+    calls = []
+
+    def fake_detect():
+        calls.append(1)
+        return 16 * 2**30
+
+    monkeypatch.setattr(engine_mod, "detect_device_memory", fake_detect)
+    eng = EstimationEngine(EngineConfig(strategy="composed", max_batch="auto"))
+    assert eng.resolve_max_batch() == 65536
+    assert eng.resolve_max_batch(shards=4) == 65536 // 4
+    assert eng.resolve_max_batch(shards=3) == 16384  # pow2 floor of /3
+    assert len(calls) == 1
+
+
 def test_engine_config_auto_max_batch_validation():
     assert EngineConfig(max_batch="auto").max_batch == "auto"
     with pytest.raises(ValueError, match="auto"):
@@ -377,19 +536,27 @@ def test_resolve_max_batch_auto_detects_once(monkeypatch):
     assert fixed.resolve_max_batch() == 128 and not calls
 
 
-def test_auto_budget_identity_stays_unresolved_and_portable():
-    # Chunk width is numerics-neutral (parity contract), so "auto" must
-    # not leak the per-host resolution into cache keys or ETag material:
-    # a spill written on a big-memory host stays warm on a small one.
-    eng = EstimationEngine(EngineConfig(strategy="chunked", max_batch="auto"))
-    assert eng.cache_key == ("chunked", "auto", 0, "auto")
-    assert eng.cache_token.endswith(".bauto")
+def test_engine_identity_is_backend_only():
+    # The execution shape (strategy, shards, chunk budget — resolved or
+    # not) is numerics-neutral, so none of it may leak into cache keys or
+    # ETag material: a spill written on a big-memory host under "local"
+    # stays warm on a small sharded mesh, and a client cache survives a
+    # server-side strategy change.
+    for cfg in (
+        EngineConfig(strategy="chunked", max_batch="auto"),
+        EngineConfig(strategy="composed", max_batch=128, num_shards=8),
+        EngineConfig(strategy="local"),
+    ):
+        eng = EstimationEngine(cfg)
+        assert eng.cache_key == ("auto",)
+        assert eng.cache_token == "k.ref"  # resolved backend, nothing else
+    assert EstimationEngine(EngineConfig(backend="ref")).cache_key == ("ref",)
 
 
 def test_auto_budget_chunked_parity_with_local():
     local = EstimationEngine(EngineConfig(strategy="local"))
     auto = EstimationEngine(EngineConfig(strategy="chunked", max_batch="auto"))
-    auto._auto_max_batch = 2  # force real chunking at test width
+    auto._auto_budgets = {1: 2}  # force real chunking at test width
     cols = _columns(7)
     packer = BatchPacker()
     batch = packer.pack(cols)

@@ -1,0 +1,68 @@
+"""Property tests for the composed execution plan (hypothesis-gated).
+
+The composed strategy's whole correctness burden sits on `composed_plan`:
+if every column lands in exactly one span, every span is the same width,
+and every shard's slice of every span is a whole number of equal chunks,
+then the executor is just the (already parity-proven) sharded dispatch
+looped over spans. So the shape math gets the exhaustive treatment.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.engine import composed_plan
+
+pow2 = st.integers(0, 12).map(lambda e: 1 << e)
+
+
+@settings(max_examples=300, deadline=None)
+@given(width=pow2, chunk=pow2, shards=pow2)
+def test_composed_plan_covers_each_column_once_no_ragged_tail(
+    width, chunk, shards
+):
+    padded, spans = composed_plan(width, shards, chunk)
+
+    # every real column is covered, and padding stays bounded: less than
+    # one extra stride (or shard group, on the single-dispatch path)
+    assert padded >= width
+    stride = shards * chunk
+    assert padded - width < (stride if width > stride else shards)
+
+    # spans tile [0, padded) exactly once, in order, equal widths
+    assert spans[0][0] == 0 and spans[-1][1] == padded
+    widths = {hi - lo for lo, hi in spans}
+    assert len(widths) == 1  # one jit trace shape
+    for (_, hi), (lo2, _) in zip(spans, spans[1:]):
+        assert hi == lo2  # no gap, no overlap
+
+    # every shard's slice of every span is equal-width with no ragged
+    # tail, and multi-span plans never exceed the per-shard chunk budget
+    (span_width,) = widths
+    assert span_width % shards == 0
+    per_shard = span_width // shards
+    assert per_shard <= chunk
+    if len(spans) > 1:
+        assert per_shard == chunk  # full chunks only — one trace shape
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    width=st.integers(1, 5000),
+    chunk=pow2,
+    shards=st.integers(1, 9),
+)
+def test_composed_plan_holds_for_non_pow2_widths_and_shards(
+    width, chunk, shards
+):
+    # The packer buckets B to a power of two, but the plan must stay sound
+    # for any width/shard count (e.g. a 3-device mesh, an unbucketed pack).
+    padded, spans = composed_plan(width, shards, chunk)
+    assert padded >= width and padded % shards == 0
+    covered = 0
+    for lo, hi in spans:
+        assert lo == covered and (hi - lo) % shards == 0
+        assert (hi - lo) // shards <= chunk
+        covered = hi
+    assert covered == padded

@@ -108,6 +108,38 @@ def test_etags_byte_identical_across_independent_services(dataset):
         a.stop(), b.stop()
 
 
+def test_etags_byte_identical_across_engine_strategies(dataset):
+    # The parity contract extended to the wire: a composed replica and a
+    # local replica of one dataset are interchangeable — byte-identical
+    # ETags and bodies, cross-validating 304s — so migrating a dataset's
+    # EngineConfig between strategies invalidates no client cache.
+    from repro.engine import EngineConfig, EstimationEngine
+
+    a = StatsService(dataset)  # default engine: strategy "auto"
+    b = StatsService(
+        dataset,
+        engine=EstimationEngine(
+            EngineConfig(strategy="composed", max_batch=2)
+        ),
+    )
+    a.start(), b.start()
+    try:
+        for kind, kwargs in (
+            ("estimate", {"mode": "paper"}),
+            ("estimate", {"mode": "improved"}),
+            ("plan", {"mode": "paper"}),
+        ):
+            ra = getattr(a, kind)(**kwargs)
+            rb = getattr(b, kind)(**kwargs)
+            assert ra.etag == rb.etag and ra.etag, (kind, kwargs)
+            assert ra.body == rb.body, (kind, kwargs)
+            assert getattr(b, kind)(
+                **kwargs, if_none_match=ra.etag
+            ).status == 304
+    finally:
+        a.stop(), b.stop()
+
+
 # -- registry ----------------------------------------------------------------
 
 
