@@ -1,0 +1,108 @@
+"""Diff two benchmark JSON artifacts; fail on latency regressions.
+
+Usage:
+    python benchmarks/compare.py BASE.json NEW.json [--threshold 0.2]
+
+Rows are matched by ``name``; a row regresses when its ``us_per_call``
+grows by more than ``threshold`` (fractional — 0.2 means +20%) over the
+base. Exit status is nonzero iff at least one matched row regresses, so
+the script can gate CI directly:
+
+    python benchmarks/run.py --quick --json BENCH_new.json
+    python benchmarks/compare.py BENCH_6.json BENCH_new.json
+
+Rows present in only one file are reported but never fail the run (the
+benchmark surface legitimately grows across PRs), and rows measuring
+effectively nothing (< 1 us on either side) are skipped — at that scale
+the timer jitter dwarfs any signal. Quick-mode artifacts compare fine
+against each other but a quick-vs-full comparison is refused: the shapes
+differ, so every ratio would be noise.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Dict, List, Tuple
+
+MIN_US = 1.0  # rows faster than this are all timer jitter
+
+
+def load_rows(path: str) -> Tuple[Dict[str, float], bool]:
+    """BENCH file -> ({row name: us_per_call}, quick-mode flag)."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = {r["name"]: float(r["us_per_call"]) for r in payload["rows"]}
+    return rows, bool(payload.get("quick"))
+
+
+def compare(
+    base: Dict[str, float], new: Dict[str, float], threshold: float
+) -> Tuple[List[tuple], List[tuple], List[str], List[str]]:
+    """-> (regressions, improvements, only_in_base, only_in_new).
+
+    Regressions/improvements are (name, base_us, new_us, ratio) for rows
+    past the threshold in either direction; ratio is new/base.
+    """
+    regressions, improvements = [], []
+    for name in sorted(set(base) & set(new)):
+        b, n = base[name], new[name]
+        if b < MIN_US or n < MIN_US:
+            continue
+        ratio = n / b
+        if ratio > 1.0 + threshold:
+            regressions.append((name, b, n, ratio))
+        elif ratio < 1.0 - threshold:
+            improvements.append((name, b, n, ratio))
+    only_base = sorted(set(base) - set(new))
+    only_new = sorted(set(new) - set(base))
+    return regressions, improvements, only_base, only_new
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    threshold = 0.2
+    if "--threshold" in argv:
+        i = argv.index("--threshold")
+        try:
+            threshold = float(argv[i + 1])
+        except (IndexError, ValueError):
+            print("--threshold requires a fractional number (e.g. 0.2)",
+                  file=sys.stderr)
+            return 2
+        del argv[i : i + 2]
+    if len(argv) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    base_path, new_path = argv
+
+    base, base_quick = load_rows(base_path)
+    new, new_quick = load_rows(new_path)
+    if base_quick != new_quick:
+        print(
+            f"refusing to compare a quick-mode artifact against a full one "
+            f"({base_path}: quick={base_quick}, {new_path}: quick={new_quick})",
+            file=sys.stderr,
+        )
+        return 2
+
+    regressions, improvements, only_base, only_new = compare(
+        base, new, threshold
+    )
+    for name, b, n, ratio in regressions:
+        print(f"REGRESSION {name}: {b:.1f}us -> {n:.1f}us ({ratio:.2f}x)")
+    for name, b, n, ratio in improvements:
+        print(f"improvement {name}: {b:.1f}us -> {n:.1f}us ({ratio:.2f}x)")
+    if only_base:
+        print(f"rows only in {base_path}: {', '.join(only_base)}")
+    if only_new:
+        print(f"rows only in {new_path}: {', '.join(only_new)}")
+    compared = len(set(base) & set(new))
+    print(
+        f"{compared} rows compared at threshold +{threshold:.0%}: "
+        f"{len(regressions)} regressed, {len(improvements)} improved"
+    )
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

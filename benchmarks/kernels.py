@@ -26,6 +26,103 @@ def _timeit(fn, *args, iters=3) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _dispatch_count(fn) -> int:
+    """Number of `pallas_call` sites a fresh trace of `fn` dispatches.
+
+    Every kernel module resolves `pl.pallas_call` as a module attribute at
+    call time, so patching the attribute during one forced retrace
+    (`jax.clear_caches()`) counts kernel launches for any entry point —
+    the launch-count half of the fused-vs-separate story, which wall-clock
+    on an interpret-mode CPU cannot show.
+    """
+    from jax.experimental import pallas as pl
+
+    count = 0
+    orig = pl.pallas_call
+
+    def counting(*args, **kwargs):
+        nonlocal count
+        count += 1
+        return orig(*args, **kwargs)
+
+    pl.pallas_call = counting
+    try:
+        jax.clear_caches()
+        jax.block_until_ready(fn())
+    finally:
+        pl.pallas_call = orig
+    return count
+
+
+def _column_batch(rng, b: int, r: int):
+    """Synthetic packed ColumnBatch, shaped like a catalog estimate call."""
+    from repro.core.ndv.types import ColumnBatch
+
+    mins = np.sort(rng.uniform(0, 1e5, (b, r)).astype(np.float32), axis=1)
+    maxs = mins + rng.uniform(10.0, 1e4, (b, r)).astype(np.float32)
+    rows = np.full((b, r), 4096.0, np.float32)
+    nulls = rng.uniform(0, 64, (b, r)).astype(np.float32)
+    J = jnp.asarray
+    return ColumnBatch(
+        chunk_S=J(rng.uniform(2e3, 9e4, (b, r)).astype(np.float32)),
+        chunk_rows=J(rows),
+        chunk_nulls=J(nulls),
+        chunk_dict_encoded=J(rng.uniform(size=(b, r)) > 0.2),
+        N=J(rows.sum(1)),
+        nulls=J(nulls.sum(1)),
+        n_groups=J(np.full(b, r, np.int32)),
+        mins=J(mins),
+        maxs=J(maxs),
+        valid=J(np.ones((b, r), bool)),
+        m_min=J(np.full(b, float(max(r - 1, 1)), np.float32)),
+        m_max=J(np.full(b, float(r), np.float32)),
+        mean_len=J(np.full(b, 8.0, np.float32)),
+        len_sample=J(np.full(b, 2 * r, np.int32)),
+        fixed_width=J(np.ones(b, bool)),
+        int_like=J(np.ones(b, bool)),
+        single_byte=J(np.zeros(b, bool)),
+    )
+
+
+def _fused_vs_separate(rng) -> List[tuple]:
+    """§4-§7 pipeline: one fused `pallas_call` vs separate kernel launches.
+
+    Both paths are pinned to `backend="pallas"` so the launch structure is
+    the TPU serving shape (on this CPU the kernels run interpreted — the
+    latency column characterizes dispatch overhead trends, not TPU time;
+    the dispatch counts are exact and platform-independent).
+    """
+    from repro.core.ndv.estimator import estimate_batch
+    from repro.kernels import ops
+
+    out: List[tuple] = []
+    widths = pick((64, 256, 1024), (4, 8, 16))
+    r = pick(32, 4)
+    for b in widths:
+        batch = _column_batch(rng, b, r)
+
+        sep = lambda: estimate_batch(  # noqa: E731
+            batch, None, mode="paper", backend="pallas", fuse="off"
+        )
+        fus = lambda: ops.fused_estimate(  # noqa: E731
+            batch, None, mode="paper", backend="pallas"
+        )
+        d_sep = _dispatch_count(sep)
+        d_fus = _dispatch_count(fus)
+        us_sep = _timeit(sep)
+        us_fus = _timeit(fus)
+        out.append((
+            f"kernels/estimate_separate_pallas_{b}x{r}", us_sep,
+            f"dispatches={d_sep}",
+        ))
+        out.append((
+            f"kernels/estimate_fused_pallas_{b}x{r}", us_fus,
+            f"dispatches={d_fus};separate_dispatches={d_sep};"
+            f"dispatch_reduction_x={d_sep / max(d_fus, 1):.1f}",
+        ))
+    return out
+
+
 def run() -> List[tuple]:
     rng = np.random.default_rng(0)
     rows: List[tuple] = []
@@ -76,4 +173,6 @@ def run() -> List[tuple]:
     )
     rows.append((f"kernels/hll_fold_ref_{b}x{r}", us,
                  f"keys_per_s={b*r/(us/1e6):.0f}"))
+
+    rows.extend(_fused_vs_separate(rng))
     return rows

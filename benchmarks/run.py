@@ -19,15 +19,44 @@ harness end to end in seconds; the numbers mean nothing).
 ``--json PATH`` additionally writes the rows as a machine-readable
 artifact — the CI quick-benchmark step uploads it per run, so the repo
 accumulates a perf trajectory across PRs instead of one-off terminal
-output. The schema is deliberately flat: ``{"quick": bool, "rows":
-[{"name", "us_per_call", "derived"}, ...], "errors": [module, ...]}``.
+output. The schema is deliberately flat: ``{"quick": bool, "git_sha":
+str, "generated_at": iso8601, "rows": [{"name", "us_per_call",
+"derived"}, ...], "errors": [module, ...]}``. `git_sha`/`generated_at`
+pin each artifact to the exact tree and wall-clock it measured, so two
+BENCH files can be diffed meaningfully (`benchmarks/compare.py`).
 """
 from __future__ import annotations
 
+import datetime
 import json
 import os
+import subprocess
 import sys
 import traceback
+
+
+def git_sha() -> str:
+    """HEAD commit of the tree being measured; "unknown" outside a repo."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10, check=True,
+        ).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def build_payload(rows, errors) -> dict:
+    """The BENCH artifact schema (see module docstring)."""
+    return {
+        "quick": bool(os.environ.get("NDV_BENCH_QUICK")),
+        "git_sha": git_sha(),
+        "generated_at": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "rows": rows,
+        "errors": errors,
+    }
 
 
 def main(argv=None) -> None:
@@ -90,11 +119,7 @@ def main(argv=None) -> None:
             traceback.print_exc()
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", file=sys.stderr)
     if json_path:
-        payload = {
-            "quick": bool(os.environ.get("NDV_BENCH_QUICK")),
-            "rows": rows,
-            "errors": errors,
-        }
+        payload = build_payload(rows, errors)
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=1)
         print(f"wrote {len(rows)} rows to {json_path}", file=sys.stderr)

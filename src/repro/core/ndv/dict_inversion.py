@@ -124,10 +124,12 @@ def invert_dict_size(
       num_values: (B,) row count N.
       null_count: (B,) null count.
       mean_len: (B,) mean value byte length (Eq 4 / schema width).
-      backend: execution route. "auto"/"ref" solve here in jnp; "pallas"
-        (or "auto" on TPU) routes the Newton solve through the
-        `repro.kernels` Pallas kernel, with the Eq 5 flags and fixed
-        iteration count filled in from the closed forms.
+      backend: execution route. "auto"/"ref" solve here in jnp — the route
+        the fused megakernel's body (`repro.kernels.fused_estimate`) also
+        takes, since a nested `pallas_call` is not allowed; "pallas" (or
+        "auto" on TPU) routes the Newton solve through the `repro.kernels`
+        Pallas kernel, with the Eq 5 flags and fixed iteration count filled
+        in from the closed forms.
 
     Returns:
       DictInversionResult with ndv clamped to [1, N - nulls].

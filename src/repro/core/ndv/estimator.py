@@ -82,26 +82,20 @@ def dict_estimate_column(
     return ndv_col, fallback_col, iters
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "backend"))
-def estimate_batch(
+def estimate_batch_core(
     batch: ColumnBatch,
     schema_bound: Optional[jnp.ndarray] = None,
     *,
     mode: str = "paper",
     backend: str = "auto",
 ) -> BatchEstimates:
-    """Vectorized zero-cost NDV estimation over a ColumnBatch.
+    """The unjitted §4-§7 pipeline body: ColumnBatch tiles in, estimates out.
 
-    This is the pure per-shard kernel: the `repro.engine` package is the
-    public path onto it and owns sharding/chunking of the B axis.
-
-    Args:
-      mode: "paper" — faithful reproduction (per-chunk max + Eq 13 hybrid);
-            "improved" — beyond-paper layout-aware aggregation
-            (coverage-corrected mean / disjoint-sum routing, see improved.py).
-      backend: `repro.kernels.ops` execution knob, threaded through the
-        engine config. "auto" = fastest correct path per platform (Pallas
-        kernels on TPU, jnp reference elsewhere); "pallas"/"ref" force one.
+    Shared verbatim by the unfused `estimate_batch` path and (with
+    ``backend="ref"``) by the fused megakernel's body and its oracle
+    (`repro.kernels.fused_estimate` / `repro.kernels.ref.ref_fused_estimate`)
+    — one definition of the numerics is what makes the fuse knob provably
+    numerics-neutral.
     """
     # --- §6: distribution detection --------------------------------------
     metrics = distribution.detect_distribution(
@@ -170,6 +164,44 @@ def estimate_batch(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("mode", "backend", "fuse"))
+def estimate_batch(
+    batch: ColumnBatch,
+    schema_bound: Optional[jnp.ndarray] = None,
+    *,
+    mode: str = "paper",
+    backend: str = "auto",
+    fuse: str = "auto",
+) -> BatchEstimates:
+    """Vectorized zero-cost NDV estimation over a ColumnBatch.
+
+    This is the pure per-shard kernel: the `repro.engine` package is the
+    public path onto it and owns sharding/chunking of the B axis.
+
+    Args:
+      mode: "paper" — faithful reproduction (per-chunk max + Eq 13 hybrid);
+            "improved" — beyond-paper layout-aware aggregation
+            (coverage-corrected mean / disjoint-sum routing, see improved.py).
+      backend: `repro.kernels.ops` execution knob, threaded through the
+        engine config. "auto" = fastest correct path per platform (Pallas
+        kernels on TPU, jnp reference elsewhere); "pallas"/"ref" force one.
+      fuse: megakernel routing knob ("auto"/"on"/"off", threaded from
+        `EngineConfig.fuse`). "on" (and "auto" on TPU) runs the whole §4-§7
+        pipeline as one fused computation of the REFERENCE numerics: a
+        single `pallas_call` (`repro.kernels.fused_estimate`) where the
+        kernel path is production, the pure-XLA twin elsewhere — instead of
+        3-4 kernel dispatches plus XLA glue. Numerics-neutral by the engine
+        parity contract (the fused body IS `estimate_batch_core` with the
+        reference backend), so the knob never enters
+        `cache_key`/`cache_token`. "off" pins the unfused per-stage path.
+    """
+    from repro.kernels import ops  # local: kernels.ref imports this module
+
+    if ops.use_fused(fuse):
+        return ops.fused_estimate(batch, schema_bound, mode=mode, backend=backend)
+    return estimate_batch_core(batch, schema_bound, mode=mode, backend=backend)
+
+
 def estimates_from_batch(
     out: BatchEstimates, batch: ColumnBatch, names: Sequence[str]
 ) -> List[NDVEstimate]:
@@ -177,21 +209,29 @@ def estimates_from_batch(
 
     `names` may be shorter than the batch axis: the packer pads B up to a
     shape bucket, and the padding lanes carry no column.
+
+    Each field is pulled to the host once (one device-to-host copy per
+    field, not one per column) and indexed as numpy from there — per-column
+    indexing of device arrays would dispatch a device gather per scalar,
+    shipping every Python index host-to-device, which both scales badly on
+    wide catalogs and breaks the catalog's zero-H2D warm-path contract.
     """
+    host = {f: np.asarray(getattr(out, f)) for f in out._fields}
+    len_sample = np.asarray(batch.len_sample)
     res: List[NDVEstimate] = []
     for i, name in enumerate(names):
         res.append(
             NDVEstimate(
-                ndv=float(out.ndv[i]),
-                ndv_dict=float(out.ndv_dict[i]),
-                ndv_minmax=float(out.ndv_minmax[i]),
-                layout=Layout(int(out.layout[i])),
-                is_lower_bound=bool(out.is_lower_bound[i]),
-                mean_len=float(out.mean_len[i]),
-                len_sample_size=int(batch.len_sample[i]),
-                overlap_ratio=float(out.overlap_ratio[i]),
-                monotonicity=float(out.monotonicity[i]),
-                confidence=float(out.confidence[i]),
+                ndv=float(host["ndv"][i]),
+                ndv_dict=float(host["ndv_dict"][i]),
+                ndv_minmax=float(host["ndv_minmax"][i]),
+                layout=Layout(int(host["layout"][i])),
+                is_lower_bound=bool(host["is_lower_bound"][i]),
+                mean_len=float(host["mean_len"][i]),
+                len_sample_size=int(len_sample[i]),
+                overlap_ratio=float(host["overlap_ratio"][i]),
+                monotonicity=float(host["monotonicity"][i]),
+                confidence=float(host["confidence"][i]),
                 column_name=name,
             )
         )

@@ -12,6 +12,7 @@ from typing import Union
 
 STRATEGIES = ("auto", "local", "sharded", "chunked", "composed")
 BACKENDS = ("auto", "pallas", "ref")
+FUSE_MODES = ("auto", "on", "off")
 
 # The chunk budget used when max_batch="auto" finds no usable device memory
 # report (host CPU backends return no `memory_stats()`), and the historical
@@ -55,20 +56,36 @@ class EngineConfig:
         host meshes share one physical pool), so the per-shard budget
         shrinks as the mesh grows.
 
+      fuse: the estimation-megakernel knob, threaded into `estimate_batch`
+        and resolved by `repro.kernels.ops.use_fused`. "on" (and "auto" on
+        TPU, where the separate path costs 3-4 kernel launches plus XLA
+        glue per estimate) runs the whole §4-§7 pipeline as ONE fused
+        computation of the reference numerics — a single `pallas_call`
+        (`repro.kernels.fused_estimate`) where the kernel path is
+        production, its pure-XLA twin elsewhere. "off" pins the unfused
+        per-stage path. Off-TPU the twin is literally the same program as
+        the unfused reference path, so the knob is bit-neutral by
+        construction; pinning ``backend="pallas"`` off-TPU remains the
+        interpret-mode validation configuration, not a serving path.
+
     Cache-key neutrality rules: by the engine parity contract every
     strategy produces bit-identical estimates for real lanes, so
     `strategy`, `num_shards`, and `max_batch` are execution-shape knobs
     that never enter `EstimationEngine.cache_key` or `cache_token`.
     Estimate caches, on-disk spills, and client ETag caches therefore stay
     valid across strategy changes — switching a dataset from local to
-    composed invalidates nothing. Only `backend` can change numerics, and
-    only it is identity.
+    composed invalidates nothing. `fuse` is the same kind of knob one level
+    down — dispatch shape over the same reference numerics, bit-identical
+    by the fused parity cells — so it too stays out of both identities and
+    a fuse flip invalidates no cache line or client ETag. Only `backend`
+    can change numerics, and only it is identity.
     """
 
     strategy: str = "auto"
     backend: str = "auto"
     num_shards: int = 0
     max_batch: Union[int, str] = DEFAULT_MAX_BATCH
+    fuse: str = "auto"
 
     def __post_init__(self):
         if self.strategy not in STRATEGIES:
@@ -77,6 +94,8 @@ class EngineConfig:
             )
         if self.backend not in BACKENDS:
             raise ValueError(f"backend {self.backend!r} not in {BACKENDS}")
+        if self.fuse not in FUSE_MODES:
+            raise ValueError(f"fuse {self.fuse!r} not in {FUSE_MODES}")
         if self.num_shards < 0:
             raise ValueError("num_shards must be >= 0 (0 = all devices)")
         mb = self.max_batch

@@ -106,17 +106,22 @@ def composed_plan(
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_fn(devices: tuple, mode: str, backend: str):
+def _sharded_fn(devices: tuple, mode: str, backend: str, fuse: str = "auto"):
     """Jitted shard_map of `estimate_batch` over a 1-D column mesh.
 
-    Cached per (device tuple, mode, backend): shard_map construction and
-    tracing are not free, and warm engine calls must stay dispatch-only
-    (the jit cache then keys on batch shape as usual).
+    Cached per (device tuple, mode, backend, fuse): shard_map construction
+    and tracing are not free, and warm engine calls must stay dispatch-only
+    (the jit cache then keys on batch shape as usual). `fuse` is in the
+    MEMO key because it changes the traced computation (megakernel vs
+    separate launches) — never in the engine's cache identity, because it
+    does not change the results.
     """
     mesh = Mesh(np.asarray(devices), ("cols",))
     return jax.jit(
         shard_map(
-            functools.partial(estimate_batch, mode=mode, backend=backend),
+            functools.partial(
+                estimate_batch, mode=mode, backend=backend, fuse=fuse
+            ),
             mesh=mesh,
             in_specs=(P("cols"), P("cols")),
             out_specs=P("cols"),
@@ -303,7 +308,8 @@ class EstimationEngine:
         if strategy == "composed":
             return self._estimate_composed(batch, schema_bound, mode)
         return estimate_batch(
-            batch, schema_bound, mode=mode, backend=self.config.backend
+            batch, schema_bound, mode=mode,
+            backend=self.config.backend, fuse=self.config.fuse,
         )
 
     def _padded_to_multiple(self, batch, schema_bound, multiple):
@@ -328,7 +334,8 @@ class EstimationEngine:
             # min(ndv, +inf) is the identity, bit-for-bit.
             schema_bound = jnp.full(batch.batch, np.inf, jnp.float32)
         fn = _sharded_fn(
-            tuple(jax.devices()[:n]), mode, self.config.backend
+            tuple(jax.devices()[:n]), mode, self.config.backend,
+            self.config.fuse,
         )
         out = fn(batch, schema_bound)
         return self._trim(out, b)
@@ -337,14 +344,16 @@ class EstimationEngine:
         c = self.resolve_max_batch()
         if batch.batch <= c:
             return estimate_batch(
-                batch, schema_bound, mode=mode, backend=self.config.backend
+                batch, schema_bound, mode=mode,
+                backend=self.config.backend, fuse=self.config.fuse,
             )
         batch, schema_bound, b = self._padded_to_multiple(batch, schema_bound, c)
         spans = [(lo, lo + c) for lo in range(0, batch.batch, c)]
         return self._stream_spans(
             batch, schema_bound, b, spans,
             lambda sub, sb: estimate_batch(
-                sub, sb, mode=mode, backend=self.config.backend
+                sub, sb, mode=mode,
+                backend=self.config.backend, fuse=self.config.fuse,
             ),
         )
 
@@ -372,7 +381,8 @@ class EstimationEngine:
         if schema_bound is None:
             schema_bound = jnp.full(batch.batch, np.inf, jnp.float32)
         fn = _sharded_fn(
-            tuple(jax.devices()[:n]), mode, self.config.backend
+            tuple(jax.devices()[:n]), mode, self.config.backend,
+            self.config.fuse,
         )
         return self._stream_spans(batch, schema_bound, b, spans, fn)
 

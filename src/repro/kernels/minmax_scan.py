@@ -40,11 +40,24 @@ class MinMaxMetrics(NamedTuple):
     shared_bounds: jnp.ndarray
 
 
-def _minmax_body(mins_ref, maxs_ref, valid_ref, out_ref):
-    mins = mins_ref[...]
-    maxs = maxs_ref[...]
-    valid = valid_ref[...] > 0.5
+def lane_padded_groups(r: int) -> int:
+    """The row-group axis padded to the vector lane width.
 
+    This is the kernel's reduction extent — reduction extent is part of the
+    numerics, so it is named here rather than inlined at the pad site.
+    """
+    return max((r + LANES - 1) // LANES * LANES, LANES)
+
+
+def minmax_metrics_math(
+    mins: jnp.ndarray, maxs: jnp.ndarray, valid: jnp.ndarray
+) -> MinMaxMetrics:
+    """The §6 metric reductions over a (b, r) tile (``valid`` is bool).
+
+    Factored out of the pallas_call plumbing so the metric math is testable
+    independent of tiling; the kernel body packs these reductions into the
+    lane-aligned output tile.
+    """
     n = jnp.sum(valid.astype(jnp.float32), axis=1)
     gmin = jnp.min(jnp.where(valid, mins, BIG), axis=1)
     gmax = jnp.max(jnp.where(valid, maxs, -BIG), axis=1)
@@ -65,6 +78,22 @@ def _minmax_body(mins_ref, maxs_ref, valid_ref, out_ref):
     shared = jnp.sum(
         jnp.where(pv & (maxs[:, :-1] == mins[:, 1:]), 1.0, 0.0), axis=1
     )
+    return MinMaxMetrics(
+        overlap_sum=overlap,
+        gmin=gmin,
+        gmax=gmax,
+        sign_changes=changes,
+        n_valid=n,
+        shared_bounds=shared,
+    )
+
+
+def _minmax_body(mins_ref, maxs_ref, valid_ref, out_ref):
+    mins = mins_ref[...]
+    maxs = maxs_ref[...]
+    m = minmax_metrics_math(mins, maxs, valid_ref[...] > 0.5)
+    overlap, gmin, gmax = m.overlap_sum, m.gmin, m.gmax
+    changes, n, shared = m.sign_changes, m.n_valid, m.shared_bounds
 
     block_b = mins.shape[0]
     out = jnp.zeros((block_b, LANES), jnp.float32)
@@ -89,7 +118,7 @@ def minmax_scan(
     b, r = mins.shape
     pb = (b + BLOCK_B - 1) // BLOCK_B * BLOCK_B
     # Pad R to the lane width so the tile is vector-aligned.
-    pr = max((r + LANES - 1) // LANES * LANES, LANES)
+    pr = lane_padded_groups(r)
     pad = lambda x, fill: jnp.pad(  # noqa: E731
         x.astype(jnp.float32), ((0, pb - b), (0, pr - r)), constant_values=fill
     )

@@ -34,18 +34,23 @@ LANES = 128       # TPU vector lane count
 
 
 # ---------------------------------------------------------------------------
-# Kernel bodies (operate on (BLOCK_M, 128) tiles)
+# Solve math (shared by the standalone kernel bodies and the fused megakernel)
 # ---------------------------------------------------------------------------
+#
+# The `*_math` functions are the kernels' numerics, factored out of the
+# pallas_call plumbing: pure elementwise array -> array, shape-polymorphic,
+# so the fixed-iteration solves are testable (and reusable) independent of
+# tiling and padding geometry.
 
 
 def _ceil_log2(x):
     return jnp.maximum(jnp.ceil(jnp.log2(jnp.maximum(x, 1.0)) - 1e-9), 1.0)
 
 
-def _dict_newton_body(s_ref, rows_ref, nulls_ref, len_ref, out_ref):
-    s = s_ref[...]
-    non_null = jnp.maximum(rows_ref[...] - nulls_ref[...], 0.0)
-    mean_len = jnp.maximum(len_ref[...], 1e-6)
+def dict_newton_math(s, rows, nulls, mean_len):
+    """Eq-2 fixed-iteration Newton inversion, elementwise over any shape."""
+    non_null = jnp.maximum(rows - nulls, 0.0)
+    mean_len = jnp.maximum(mean_len, 1e-6)
     cap = jnp.maximum(non_null, 1.0)
 
     ndv = jnp.clip(s / mean_len, 1.0, cap)
@@ -57,12 +62,11 @@ def _dict_newton_body(s_ref, rows_ref, nulls_ref, len_ref, out_ref):
     bits = _ceil_log2(ndv)
     lin = (s - non_null * bits / 8.0) / mean_len
     keep = (_ceil_log2(jnp.maximum(lin, 1.0)) == bits) & (lin >= 1.0)
-    out_ref[...] = jnp.clip(jnp.where(keep, lin, ndv), 1.0, cap)
+    return jnp.clip(jnp.where(keep, lin, ndv), 1.0, cap)
 
 
-def _coupon_newton_body(m_ref, n_ref, out_ref):
-    m = m_ref[...]
-    n = n_ref[...]
+def coupon_newton_math(m, n):
+    """Eq-8 fixed-iteration log-space Newton inversion, elementwise."""
     saturated = m >= n - 0.5
     m_eff = jnp.where(saturated, jnp.maximum(n - 0.5, 0.5), m)
     m_eff = jnp.clip(m_eff, 0.5, jnp.maximum(n - 1e-3, 0.5))
@@ -81,7 +85,22 @@ def _coupon_newton_body(m_ref, n_ref, out_ref):
     ndv = jnp.where(saturated, jnp.maximum(m, 1.0), ndv)
     ndv = jnp.where(n <= 0, 1.0, ndv)
     ndv = jnp.where(m_eff <= 0.5001, jnp.maximum(m, 1.0), ndv)
-    out_ref[...] = jnp.maximum(ndv, jnp.maximum(m, 1.0))
+    return jnp.maximum(ndv, jnp.maximum(m, 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies (operate on (BLOCK_M, 128) tiles)
+# ---------------------------------------------------------------------------
+
+
+def _dict_newton_body(s_ref, rows_ref, nulls_ref, len_ref, out_ref):
+    out_ref[...] = dict_newton_math(
+        s_ref[...], rows_ref[...], nulls_ref[...], len_ref[...]
+    )
+
+
+def _coupon_newton_body(m_ref, n_ref, out_ref):
+    out_ref[...] = coupon_newton_math(m_ref[...], n_ref[...])
 
 
 # ---------------------------------------------------------------------------
@@ -89,12 +108,24 @@ def _coupon_newton_body(m_ref, n_ref, out_ref):
 # ---------------------------------------------------------------------------
 
 
-def _pad_to_tiles(x: jnp.ndarray, fill: float) -> tuple[jnp.ndarray, int]:
-    m = x.shape[0]
+@functools.lru_cache(maxsize=1024)
+def _tile_geometry(m: int) -> tuple[int, int]:
+    """(padded length, tile-row count) for a flat (m,) input.
+
+    Pure shape math, memoized per length: `_pad_to_tiles` runs inside every
+    traced call of the kernel wrappers, and the fleet path re-pads the same
+    handful of bucketed shapes millions of times.
+    """
     per = BLOCK_M * LANES
     padded = (m + per - 1) // per * per
+    return padded, padded // LANES
+
+
+def _pad_to_tiles(x: jnp.ndarray, fill: float) -> tuple[jnp.ndarray, int]:
+    m = x.shape[0]
+    padded, rows = _tile_geometry(m)
     x = jnp.pad(x, (0, padded - m), constant_values=fill)
-    return x.reshape(padded // LANES, LANES), m
+    return x.reshape(rows, LANES), m
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -13,6 +13,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_estimate as _fused
 from repro.kernels import hll as _hll
 from repro.kernels import minmax_scan as _mm
 from repro.kernels import newton_ndv as _newton
@@ -42,6 +43,45 @@ def use_pallas(backend: Backend) -> bool:
     if backend == "ref":
         return False
     return _on_tpu()
+
+
+def use_fused(fuse: str) -> bool:
+    """Resolve the `EngineConfig.fuse` knob to a fused-pipeline decision.
+
+    "on" always takes the fused pipeline; "off" never does; "auto" takes it
+    exactly where fusing buys anything — on TPU, where the separate path
+    costs 3-4 kernel launches plus XLA glue per estimate. The fused pipeline
+    computes the REFERENCE numerics (`fused_estimate`'s body runs
+    `estimate_batch_core(..., backend="ref")`), and `fused_estimate` below
+    only compiles the kernel where the kernel path is the production path —
+    elsewhere the pure-XLA twin runs, which is the same program as the
+    unfused reference path. That is why the knob is numerics-neutral and
+    never enters `cache_key`/`cache_token`.
+    """
+    if fuse == "off":
+        return False
+    if fuse == "on":
+        return True
+    if fuse != "auto":
+        raise ValueError(f'fuse must be "auto", "on", or "off", got {fuse!r}')
+    return _on_tpu()
+
+
+def fused_estimate(batch, schema_bound=None, *, mode: str = "paper",
+                   backend: Backend = "auto"):
+    """One-dispatch §4-§7 pipeline over a packed ColumnBatch (megakernel).
+
+    Backend resolution mirrors `use_pallas`: the Pallas megakernel runs
+    where the kernel path is production (compiled on TPU) or explicitly
+    pinned (``backend="pallas"``, interpreted off-TPU — the validation
+    configuration). Otherwise the pure-jnp twin (`ref.ref_fused_estimate`)
+    serves — bit-identical to the unfused reference path by construction.
+    """
+    if use_pallas(backend):
+        return _fused.fused_estimate(
+            batch, schema_bound, mode=mode, interpret=_interpret()
+        )
+    return _ref.ref_fused_estimate(batch, schema_bound, mode=mode)
 
 
 def dict_newton(size, rows, nulls, mean_len, *, backend: Backend = "auto"):

@@ -72,6 +72,27 @@ def ref_minmax_scan(
     return RefMinMaxMetrics(overlap, gmin, gmax, changes, n, shared)
 
 
+def ref_fused_estimate(batch, schema_bound=None, *, mode: str = "paper"):
+    """Oracle for fused_estimate.fused_estimate — the same core, no kernel.
+
+    The megakernel body runs the reference pipeline
+    (``estimate_batch_core(..., backend="ref")``) on its tile refs; this
+    twin runs the identical call outside any kernel, materializing the
+    absent schema bound as +inf the same way the kernel wrapper does. It is
+    also the off-TPU serving path for ``fuse="on"`` (see `ops.fused_estimate`),
+    which is what makes the fuse knob bit-neutral there by construction.
+    """
+    # local: estimator imports repro.kernels.ops lazily; importing it at
+    # module scope here would close the cycle ops -> ref -> estimator.
+    from repro.core.ndv.estimator import estimate_batch_core
+
+    if schema_bound is None:
+        schema_bound = jnp.full((batch.batch,), jnp.inf, jnp.float32)
+    return estimate_batch_core(
+        batch, schema_bound, mode=mode, backend="ref"
+    )
+
+
 def ref_hll_fold(keys: jnp.ndarray, valid: jnp.ndarray, *, p: int = 8) -> jnp.ndarray:
     """Oracle for hll.hll_fold — scatter-max formulation."""
     b, _ = keys.shape

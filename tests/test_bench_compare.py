@@ -1,0 +1,99 @@
+"""benchmarks/compare.py + the BENCH artifact schema from benchmarks/run.py."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import compare, run  # noqa: E402
+
+
+def _bench(path, rows, quick=False):
+    payload = {
+        "quick": quick,
+        "git_sha": "cafe" * 10,
+        "generated_at": "2026-08-08T00:00:00+00:00",
+        "rows": [
+            {"name": n, "us_per_call": us, "derived": ""} for n, us in rows
+        ],
+        "errors": [],
+    }
+    path.write_text(json.dumps(payload))
+    return str(path)
+
+
+def test_regression_over_threshold_exits_nonzero(tmp_path, capsys):
+    base = _bench(tmp_path / "a.json", [("k/x", 100.0), ("k/y", 50.0)])
+    new = _bench(tmp_path / "b.json", [("k/x", 130.0), ("k/y", 50.0)])
+    assert compare.main([base, new]) == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION k/x" in out
+
+
+def test_within_threshold_exits_zero(tmp_path):
+    base = _bench(tmp_path / "a.json", [("k/x", 100.0), ("k/y", 50.0)])
+    new = _bench(tmp_path / "b.json", [("k/x", 115.0), ("k/y", 41.0)])
+    assert compare.main([base, new]) == 0
+
+
+def test_custom_threshold(tmp_path):
+    base = _bench(tmp_path / "a.json", [("k/x", 100.0)])
+    new = _bench(tmp_path / "b.json", [("k/x", 115.0)])
+    assert compare.main(["--threshold", "0.1", base, new]) == 1
+    assert compare.main(["--threshold", "0.5", base, new]) == 0
+
+
+def test_unmatched_rows_never_fail(tmp_path, capsys):
+    base = _bench(tmp_path / "a.json", [("k/old", 100.0), ("k/x", 10.0)])
+    new = _bench(tmp_path / "b.json", [("k/new", 9999.0), ("k/x", 10.0)])
+    assert compare.main([base, new]) == 0
+    out = capsys.readouterr().out
+    assert "k/old" in out and "k/new" in out
+
+
+def test_sub_microsecond_rows_are_skipped(tmp_path):
+    base = _bench(tmp_path / "a.json", [("k/tiny", 0.2)])
+    new = _bench(tmp_path / "b.json", [("k/tiny", 0.9)])  # 4.5x, all jitter
+    assert compare.main([base, new]) == 0
+
+
+def test_quick_vs_full_is_refused(tmp_path):
+    base = _bench(tmp_path / "a.json", [("k/x", 100.0)], quick=True)
+    new = _bench(tmp_path / "b.json", [("k/x", 100.0)], quick=False)
+    assert compare.main([base, new]) == 2
+
+
+def test_bad_usage_exits_2(tmp_path):
+    assert compare.main([]) == 2
+    base = _bench(tmp_path / "a.json", [("k/x", 1.0)])
+    assert compare.main(["--threshold", "nope", base, base]) == 2
+
+
+def test_run_payload_carries_sha_and_timestamp():
+    payload = run.build_payload(
+        [{"name": "k/x", "us_per_call": 1.0, "derived": ""}], []
+    )
+    assert payload["rows"] and payload["errors"] == []
+    # In this repo checkout the SHA is a real 40-hex commit.
+    sha = payload["git_sha"]
+    assert sha == "unknown" or (len(sha) == 40 and int(sha, 16) >= 0)
+    # ISO-8601 with explicit UTC offset.
+    assert "T" in payload["generated_at"]
+    assert payload["generated_at"].endswith("+00:00")
+
+
+def test_compare_round_trips_run_schema(tmp_path):
+    payload = run.build_payload(
+        [{"name": "k/x", "us_per_call": 10.0, "derived": "d=1"}], []
+    )
+    p = tmp_path / "r.json"
+    p.write_text(json.dumps(payload))
+    rows, quick = compare.load_rows(str(p))
+    assert rows == {"k/x": 10.0}
+    assert quick is False
+
+
+if __name__ == "__main__":
+    sys.exit(pytest.main([__file__, "-q"]))

@@ -76,6 +76,32 @@ def test_strategy_parity_matrix(strategy):
             assert got == ref, (strategy, width, mode)
 
 
+@pytest.mark.parametrize(
+    "strategy", ["local", "composed"], ids=["fused_local", "fused_composed"]
+)
+def test_fused_parity_matrix(strategy):
+    """Fused cells of the CI parity matrix: fuse=on vs fuse=off, bit for bit.
+
+    The fuse knob stays out of engine cache identity, so it must be
+    numerics-invisible on every strategy/topology the matrix runs
+    (`-k "parity_matrix and fused_<strategy>"` under 1 and 4 simulated
+    devices). Local and composed bracket the strategy space: single jit
+    call vs mesh-split + per-shard chunk streaming.
+    """
+    on = EstimationEngine(EngineConfig(strategy=strategy, max_batch=8, fuse="on"))
+    off = EstimationEngine(EngineConfig(strategy=strategy, max_batch=8, fuse="off"))
+    assert on.cache_key == off.cache_key
+    assert on.cache_token == off.cache_token
+    for width in (3, 13, 64):
+        cols = _columns(width)
+        bounds = [np.inf] * width
+        bounds[width // 2] = 5.0
+        for mode in ("paper", "improved"):
+            ref = off.estimate_columns(cols, bounds, mode=mode)
+            got = on.estimate_columns(cols, bounds, mode=mode)
+            assert got == ref, (strategy, width, mode)
+
+
 # -- chunked parity (any device count) ---------------------------------------
 
 

@@ -1,0 +1,216 @@
+"""Fused estimation megakernel + device-resident catalog batches.
+
+Covers the acceptance criteria of the fusion PR:
+  * fuse=on vs fuse=off is bit-identical through the real jitted entry
+    (`estimate_batch`) and through engines — `test_fused_parity_matrix` in
+    test_engine.py runs the strategy-level cells under the CI matrix.
+  * the interpret-mode megakernel agrees with its pure-XLA twin
+    (`ref_fused_estimate`) exactly on discrete fields and last-ulp-tight on
+    floats — the same kernel-vs-oracle contract every kernel here carries.
+  * `fuse` never enters engine cache identity (`cache_key`/`cache_token`).
+  * the catalog's device-resident batch tier: one `jax.device_put` per
+    fingerprint generation, zero host-to-device transfers on the warm
+    estimate path (asserted under `jax.transfer_guard_host_to_device`),
+    residency dropped when a commit changes the dataset.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.catalog import BatchPacker, StatsCatalog
+from repro.columnar import write_file
+from repro.columnar.writer import WriterOptions
+from repro.core.ndv.estimator import estimate_batch
+from repro.core.ndv.types import ColumnMetadata, PhysicalType
+from repro.engine import EngineConfig, EstimationEngine
+from repro.kernels import ops
+
+
+def _column(seed: int, r: int) -> ColumnMetadata:
+    rng = np.random.default_rng(seed)
+    mins = np.sort(rng.uniform(0, 1e5, r))
+    return ColumnMetadata(
+        chunk_sizes=rng.uniform(2_000.0, 90_000.0, r),
+        chunk_rows=np.full(r, 4096.0),
+        chunk_nulls=rng.integers(0, 64, r).astype(np.float64),
+        chunk_dict_encoded=rng.uniform(size=r) > 0.2,
+        mins=mins,
+        maxs=mins + rng.uniform(10.0, 1e4, r),
+        min_lengths=np.full(r, 8.0),
+        max_lengths=np.full(r, 8.0),
+        distinct_min_count=float(max(r - 1, 1)),
+        distinct_max_count=float(r),
+        physical_type=PhysicalType.INT64,
+        column_name=f"c{seed}",
+    )
+
+
+def _batch(width: int):
+    cols = [_column(i, r=1 + (i % 7)) for i in range(width)]
+    return BatchPacker(bucket_cols=False, bucket_rows=False).pack(cols)
+
+
+# -- fuse knob: bit-neutrality through the real entry point -------------------
+
+
+@pytest.mark.parametrize("mode", ["paper", "improved"])
+@pytest.mark.parametrize("width", [3, 13, 64])
+def test_fuse_on_off_bitwise_identical(mode, width):
+    """fuse=on must be indistinguishable from fuse=off, field by field."""
+    batch = _batch(width)
+    on = estimate_batch(batch, None, mode=mode, fuse="on")
+    off = estimate_batch(batch, None, mode=mode, fuse="off")
+    for field in on._fields:
+        a = np.asarray(getattr(on, field))
+        b = np.asarray(getattr(off, field))
+        assert np.array_equal(a, b), (mode, width, field)
+
+
+def test_fuse_on_off_bitwise_identical_with_schema_bounds():
+    batch = _batch(9)
+    sb = jnp.asarray(
+        np.where(np.arange(9) % 3 == 0, 5.0, np.inf).astype(np.float32)
+    )
+    on = estimate_batch(batch, sb, fuse="on")
+    off = estimate_batch(batch, sb, fuse="off")
+    assert np.array_equal(np.asarray(on.ndv), np.asarray(off.ndv))
+
+
+def test_use_fused_rejects_unknown_modes():
+    with pytest.raises(ValueError, match="fuse"):
+        ops.use_fused("sometimes")
+    assert ops.use_fused("on") is True
+    assert ops.use_fused("off") is False
+
+
+def test_fuse_absent_from_engine_identity():
+    """A fuse flip must not cool any cache line or client ETag."""
+    base = EstimationEngine(EngineConfig(fuse="auto"))
+    for fuse in ("on", "off"):
+        other = EstimationEngine(EngineConfig(fuse=fuse))
+        assert other.cache_key == base.cache_key
+        assert other.cache_token == base.cache_token
+
+
+# -- megakernel vs twin (kernel-vs-oracle contract) ---------------------------
+
+
+_EXACT_FIELDS = ("layout", "is_lower_bound", "dict_iterations")
+_FLOAT_FIELDS = (
+    "ndv", "ndv_dict", "ndv_minmax", "confidence",
+    "overlap_ratio", "monotonicity", "mean_len",
+)
+
+
+@pytest.mark.parametrize("mode", ["paper", "improved"])
+@pytest.mark.parametrize("width", [5, 13, 64])
+def test_fused_kernel_matches_twin(mode, width):
+    """Interpret-mode megakernel vs `ref_fused_estimate`, whole pipeline.
+
+    Discrete outputs must agree exactly; float outputs to the usual
+    kernel-vs-oracle tightness (the pallas_call wrapping shifts codegen
+    context, which can move transcendental tails by an ulp).
+    """
+    batch = _batch(width)
+    kern = ops.fused_estimate(batch, None, mode=mode, backend="pallas")
+    twin = ops.fused_estimate(batch, None, mode=mode, backend="ref")
+    for field in _EXACT_FIELDS:
+        a = np.asarray(getattr(kern, field))
+        b = np.asarray(getattr(twin, field))
+        assert np.array_equal(a, b), (mode, width, field)
+    for field in _FLOAT_FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(kern, field)),
+            np.asarray(getattr(twin, field)),
+            rtol=1e-5, atol=1e-6, err_msg=f"{mode}/{width}/{field}",
+        )
+
+
+def test_fused_twin_is_the_unfused_reference_path():
+    """Off-TPU serving contract: the fused route IS the reference program."""
+    batch = _batch(11)
+    twin = ops.fused_estimate(batch, None, mode="paper", backend="auto")
+    unfused = estimate_batch(batch, None, mode="paper", fuse="off")
+    for field in twin._fields:
+        assert np.array_equal(
+            np.asarray(getattr(twin, field)),
+            np.asarray(getattr(unfused, field)),
+        ), field
+
+
+# -- device-resident catalog batches ------------------------------------------
+
+
+def _shard(seed, rows=512, vocab=64):
+    rng = np.random.default_rng(seed)
+    return {
+        "tok": rng.integers(0, vocab, rows).astype(np.int64),
+        "val": np.round(rng.uniform(0, 100, rows), 1),
+    }
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    for i in range(3):
+        write_file(
+            str(tmp_path / f"shard_{i:03d}"), _shard(i),
+            options=WriterOptions(row_group_size=128),
+        )
+    return str(tmp_path)
+
+
+def test_warm_estimate_has_zero_host_to_device_transfers(dataset):
+    catalog = StatsCatalog(dataset)
+    first = catalog.estimate()
+    assert catalog.stats.device_puts == 1
+    assert catalog.num_resident_batches == 1
+    # Force the full estimation path (not just the estimate-cache dict hit):
+    # the resident tier must carry it without a single H2D transfer.
+    catalog._estimate_cache.clear()
+    with jax.transfer_guard_host_to_device("disallow"):
+        second = catalog.estimate()
+    assert second == first
+    assert catalog.stats.device_puts == 1   # no re-transfer
+    assert catalog.stats.resident_hits >= 1
+
+
+def test_residency_dropped_when_commit_changes_fingerprint(dataset, tmp_path):
+    catalog = StatsCatalog(dataset)
+    catalog.estimate()
+    assert catalog.num_resident_batches == 1
+    # Grow the dataset: the commit changes the fingerprint set, so the
+    # resident device arrays for the old generation must be released.
+    write_file(
+        str(tmp_path / "shard_new"), _shard(99),
+        options=WriterOptions(row_group_size=128),
+    )
+    summary = catalog.update()
+    assert summary.changed
+    assert catalog.num_resident_batches == 0
+    catalog.estimate()
+    assert catalog.stats.device_puts == 2
+    assert catalog.num_resident_batches == 1
+
+
+def test_unchanged_commit_keeps_residency(dataset):
+    catalog = StatsCatalog(dataset)
+    catalog.estimate()
+    summary = catalog.update()   # nothing changed on disk
+    assert not summary.changed
+    assert catalog.num_resident_batches == 1
+
+
+def test_compact_caches_drops_stale_resident_entries(dataset, tmp_path):
+    catalog = StatsCatalog(dataset)
+    catalog.estimate()
+    stale = catalog.fingerprint_key()
+    # Simulate a foreign key surviving in the resident tier (e.g. loaded
+    # under compact=False semantics): compaction must evict it.
+    catalog._resident_cache[frozenset({"ghost@deadbeef"})] = (
+        catalog._resident_cache[stale]
+    )
+    assert catalog.num_resident_batches == 2
+    assert catalog.compact_caches() >= 1
+    assert catalog.num_resident_batches == 1

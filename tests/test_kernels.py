@@ -73,6 +73,42 @@ def test_hll_count_accuracy():
     assert np.max(rel) < 0.14, rel
 
 
+def test_tile_geometry_memoized_per_shape():
+    """Pad geometry is computed once per flat length, not once per call."""
+    from repro.kernels import newton_ndv as nk
+
+    nk._tile_geometry.cache_clear()
+    for _ in range(5):
+        padded, tile_rows = nk._tile_geometry(777)
+    assert padded % (nk.BLOCK_M * nk.LANES) == 0
+    assert tile_rows == padded // nk.LANES
+    info = nk._tile_geometry.cache_info()
+    assert info.misses == 1
+    assert info.hits == 4
+
+
+def test_repeated_same_shape_newton_calls_do_not_retrace(monkeypatch):
+    """`_pad_to_tiles` runs only at trace time, so its call count counts
+    traces: a second same-shape `dict_newton` call must add zero."""
+    from repro.kernels import newton_ndv as nk
+
+    calls = []
+    orig = nk._pad_to_tiles
+
+    def counting(x, fill):
+        calls.append(x.shape)
+        return orig(x, fill)
+
+    monkeypatch.setattr(nk, "_pad_to_tiles", counting)
+    m = 731  # unlikely to be warm in this process's jit cache
+    args = [jnp.asarray(RNG.uniform(1, 100, m), jnp.float32) for _ in range(4)]
+    first = np.asarray(nk.dict_newton(*args))
+    traces_after_first = len(calls)
+    second = np.asarray(nk.dict_newton(*args))
+    assert len(calls) == traces_after_first
+    assert np.array_equal(first, second)
+
+
 def test_estimator_matches_kernel_path():
     """core dict inversion == kernel dict_newton on the same metadata."""
     from repro.core.ndv import dict_inversion
