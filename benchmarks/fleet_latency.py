@@ -14,9 +14,27 @@ What a planner pays for the fleet tier over a direct per-dataset server:
                        over an already-spilled dataset — served from the
                        shared estimate-cache spill with zero engine packs
                        (asserted)
+
+Batched RPC + wire protocol (per-tuple / per-call microseconds):
+
+  fleet/seq_warm_json     N warm estimates as N sequential JSON /estimate
+                          requests through the router (fresh connection
+                          each — the pre-batch client behavior)
+  fleet/batch_warm_binary the same N tuples as ONE binary POST /batch over
+                          a pooled keep-alive connection (asserts >=3x
+                          faster per tuple than the sequential row outside
+                          --quick)
+  fleet/batch_cold        one cold batch of distinct-bounds tuples —
+                          asserts exactly ONE engine dispatch and ONE pack
+                          for the whole replica sub-batch
+  wire/encode, wire/decode  binary codec throughput on a real /estimate
+                          body (derived: size vs JSON)
+  wire/conn_reuse vs wire/conn_fresh  pooled keep-alive GET vs a fresh
+                          TCP connection per request (urllib)
 """
 from __future__ import annotations
 
+import json
 import os
 import tempfile
 import time
@@ -24,7 +42,7 @@ from typing import List
 
 import numpy as np
 
-from benchmarks._quick import pick
+from benchmarks._quick import pick, quick
 from repro.engine import EngineConfig
 from repro.fleet import (
     DatasetRegistry,
@@ -34,12 +52,16 @@ from repro.fleet import (
     StatsRouter,
 )
 from repro.service import StatsServer, StatsService, fetch_json
+from repro.wire import ConnectionPool, decode_frame, encode_frame, fetch
 
 NUM_DATASETS = 2
 NUM_REPLICAS = 2
 NUM_SHARDS = pick(4, 2)
 ROWS_PER_SHARD = pick(1 << 12, 1 << 10)
 WARM_REQS = pick(100, 5)
+BATCH_N = pick(64, 8)
+CODEC_REPS = pick(2000, 50)
+POOL_REQS = pick(200, 10)
 
 
 def _write_dataset(root: str, seed: int) -> str:
@@ -137,5 +159,129 @@ def run() -> List[tuple]:
         rows.append((
             "fleet/warm_start", warm_start_us,
             f"packs=0;spill_entries>=1",
+        ))
+
+        # -- batched RPC: N tuples, one frame, vs N sequential requests --
+        tuples = []
+        for i in range(BATCH_N):
+            tuples.append({
+                "namespace": "bench",
+                "dataset": f"ds{i % NUM_DATASETS}",
+                "mode": "improved" if i % 2 else "paper",
+            })
+        urls = [
+            router.url_for("bench", t["dataset"], "estimate")
+            + f"?mode={t['mode']}"
+            for t in tuples
+        ]
+        for u in sorted(set(urls)):
+            fetch_json(u)  # prime every (dataset, mode) warm
+        t0 = time.perf_counter()
+        for u in urls:
+            status, _, _ = fetch_json(u)
+            assert status == 200
+        seq_us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            "fleet/seq_warm_json", seq_us / BATCH_N,
+            f"n={BATCH_N};total_us={seq_us:.0f}",
+        ))
+
+        pool = ConnectionPool()
+        payload = {"tuples": tuples}
+        fetch(router.url + "/batch", pool=pool, method="POST",
+              payload=payload)  # prime the pooled connection
+        t0 = time.perf_counter()
+        status, _, env = fetch(
+            router.url + "/batch", pool=pool, method="POST", payload=payload
+        )
+        batch_us = (time.perf_counter() - t0) * 1e6
+        assert status == 200
+        assert all(e["status"] == 200 for e in env["responses"])
+        speedup = seq_us / batch_us
+        if not quick():
+            assert speedup >= 3.0, (
+                f"batched /batch must beat sequential /estimate by >=3x "
+                f"warm at n={BATCH_N}, got {speedup:.2f}x"
+            )
+        rows.append((
+            "fleet/batch_warm_binary", batch_us / BATCH_N,
+            f"n={BATCH_N};total_us={batch_us:.0f};speedup={speedup:.1f}x",
+        ))
+
+        # representative body for the codec micro-rows below
+        _, _, est_body = fetch_json(urls[0])
+
+        # -- cold batch: one engine dispatch for the whole sub-batch --
+        cold_root = _write_dataset(os.path.join(base, "cold"), seed=7)
+        cold_reg = DatasetRegistry()
+        cold_reg.add("bench", "cold", cold_root, engine_config=cfg)
+        # one replica -> exactly one sub-batch, so the counters are exact
+        with StatsRouter(Fleet(cold_reg, replicas_per_dataset=1)) as cold_r:
+            cold_tuples = [
+                {"namespace": "bench", "dataset": "cold",
+                 "bounds": {"tok": float(8 << i)}}
+                for i in range(4)
+            ]
+            t0 = time.perf_counter()
+            status, _, env = fetch(
+                cold_r.url + "/batch", pool=pool, method="POST",
+                payload={"tuples": cold_tuples},
+            )
+            cold_us = (time.perf_counter() - t0) * 1e6
+            assert status == 200
+            assert all(e["status"] == 200 for e in env["responses"])
+            svc = cold_r.fleet.sets["bench/cold"].replicas[0].service
+            assert svc.stats.engine_runs == 1, (
+                f"cold sub-batch must be ONE engine dispatch, "
+                f"got {svc.stats.engine_runs}"
+            )
+            assert svc.catalog.stats.packs == 1
+            rows.append((
+                "fleet/batch_cold", cold_us,
+                f"tuples={len(cold_tuples)};engine_runs=1;packs=1",
+            ))
+
+    # -- wire codec throughput on a real estimate body --
+    frame = encode_frame(est_body)
+    json_len = len(json.dumps(est_body).encode())
+    assert decode_frame(frame) == json.loads(json.dumps(est_body))
+    t0 = time.perf_counter()
+    for _ in range(CODEC_REPS):
+        encode_frame(est_body)
+    enc_us = (time.perf_counter() - t0) * 1e6 / CODEC_REPS
+    t0 = time.perf_counter()
+    for _ in range(CODEC_REPS):
+        decode_frame(frame)
+    dec_us = (time.perf_counter() - t0) * 1e6 / CODEC_REPS
+    ratio = json_len / len(frame)
+    rows.append((
+        "wire/encode", enc_us,
+        f"bytes={len(frame)};json_bytes={json_len};ratio={ratio:.2f}x",
+    ))
+    rows.append(("wire/decode", dec_us, f"reps={CODEC_REPS}"))
+
+    # -- keep-alive pool vs fresh connection per request --
+    with StatsServer(StatsService(direct_root)) as srv:
+        url = srv.url + "/health"
+        fetch_json(url)
+        t0 = time.perf_counter()
+        for _ in range(POOL_REQS):
+            fetch_json(url)
+        fresh_us = (time.perf_counter() - t0) * 1e6 / POOL_REQS
+        pool2 = ConnectionPool()
+        fetch(url, pool=pool2)
+        t0 = time.perf_counter()
+        for _ in range(POOL_REQS):
+            fetch(url, pool=pool2)
+        reuse_us = (time.perf_counter() - t0) * 1e6 / POOL_REQS
+        snap = pool2.stats.snapshot()
+        assert snap["opened"] == 1 and snap["reused"] >= POOL_REQS
+        rows.append((
+            "wire/conn_fresh", fresh_us, f"reqs={POOL_REQS};keepalive=0",
+        ))
+        rows.append((
+            "wire/conn_reuse", reuse_us,
+            f"reqs={POOL_REQS};opened=1;"
+            f"vs_fresh={fresh_us / max(reuse_us, 1e-9):.1f}x",
         ))
     return rows

@@ -37,6 +37,31 @@ fleet router instead (`python -m repro.launch.serve_fleet`, see
     # ETags derive from dataset state, not from which replica answered,
     # so a 304 survives crashes, restarts, and cold replicas.
     urllib.request.urlopen("http://127.0.0.1:8090/datasets")  # namespace map
+
+A planner polling many datasets batches everything into ONE round trip
+over a keep-alive connection, with the compact binary framing negotiated
+automatically (`repro.wire`) — all cold tuples execute as a single
+super-packed engine call on the serving side:
+
+    from repro.wire import ConnectionPool, fetch
+    pool = ConnectionPool()
+    status, _, env = fetch(
+        "http://127.0.0.1:8090/batch", pool=pool, method="POST",
+        payload={"tuples": [
+            {"namespace": "wh", "dataset": "lineitem", "mode": "improved"},
+            {"namespace": "wh", "dataset": "orders",
+             "columns": ["o_custkey"], "bounds": {"o_custkey": 150000}},
+        ]},
+    )
+    for entry in env["responses"]:       # one per tuple, same order
+        print(entry["status"], entry["etag"])
+    # revalidate the whole sweep: per-tuple 304s, still one round trip
+    tuples = [
+        {"namespace": "wh", "dataset": "lineitem", "mode": "improved",
+         "if_none_match": env["responses"][0]["etag"]},
+    ]
+    fetch("http://127.0.0.1:8090/batch", pool=pool, method="POST",
+          payload={"tuples": tuples})    # responses[0]["status"] == 304
 """
 import argparse
 import os

@@ -38,6 +38,12 @@ estimates and memory plans":
               `repro.engine.EstimationEngine` (local / sharded / chunked
               behind one config) — the catalog never calls the jit'd
               `estimate_batch` directly.
+  batching    `superpack_estimate` — many (catalog, mode, bounds) jobs
+              concatenated along the packed B axis (`concat_batches`) and
+              executed as one engine call per (engine, mode, R) group,
+              bit-identical per lane to the individual calls and cached
+              through the same per-catalog estimate caches. The batched
+              RPC tier (`POST /batch`) rides on this seam.
 
 Everything downstream (data/pipeline planning, NDVPlanner, benchmarks, and
 the `repro.service` async-ingestion + stats-serving layer) talks to this
@@ -54,7 +60,16 @@ from repro.catalog.catalog import (  # noqa: F401
     estimate_to_json,
 )
 from repro.catalog.merge import merge_column_metadata  # noqa: F401
-from repro.catalog.packer import BatchPacker, bucket_size  # noqa: F401
+from repro.catalog.packer import (  # noqa: F401
+    BatchPacker,
+    bucket_size,
+    concat_batches,
+)
+from repro.catalog.superpack import (  # noqa: F401
+    SuperpackJob,
+    SuperpackResult,
+    superpack_estimate,
+)
 from repro.catalog.source import (  # noqa: F401
     InMemoryMetadataSource,
     MetadataSource,

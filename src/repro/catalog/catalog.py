@@ -445,6 +445,71 @@ class StatsCatalog:
         while len(cache) > self._max_cache_entries:
             cache.popitem(last=False)
 
+    def estimate_key(
+        self,
+        *,
+        mode: str = "paper",
+        schema_bounds: Optional[Dict[str, float]] = None,
+        engine=None,
+    ) -> tuple:
+        """The estimate-cache key one `estimate()` call would use.
+
+        Shared with `repro.catalog.superpack`, which probes and fills the
+        same cache so super-packed and individual estimates are one cache
+        population (and one spill file).
+        """
+        self._ensure_scanned()
+        engine = engine or self.engine
+        sb_key = (
+            tuple(sorted(schema_bounds.items())) if schema_bounds else None
+        )
+        return (self.fingerprint_key(), mode, sb_key, engine.cache_key)
+
+    def bounds_array(
+        self, schema_bounds: Optional[Dict[str, float]], width: int
+    ) -> Optional[np.ndarray]:
+        """Per-lane schema-bound array for a `width`-lane packed batch.
+
+        Unnamed and padding lanes get +inf ("no bound" — the combine step's
+        identity); None when no bounds were given (the engine materializes
+        the same +inf lanes itself, bit-identically).
+        """
+        if not schema_bounds:
+            return None
+        arr = np.full(width, np.inf, np.float32)
+        for i, name in enumerate(self._column_names):
+            if name in schema_bounds:
+                arr[i] = float(schema_bounds[name])
+        return arr
+
+    def packed_batch(self) -> ColumnBatch:
+        """The current fingerprint generation's packed batch (cached,
+        device-resident — see `_packed`)."""
+        self._ensure_scanned()
+        return self._packed(self.fingerprint_key())
+
+    def estimate_cache_peek(self, key: tuple) -> Optional[Dict[str, NDVEstimate]]:
+        """Cache probe by `estimate_key()`, counting hit/miss like
+        `estimate()` does. Returns a copy, or None on miss."""
+        cached = self._estimate_cache.get(key)
+        if cached is not None:
+            self.stats.estimate_cache_hits += 1
+            self._estimate_cache.move_to_end(key)
+            return dict(cached)
+        self.stats.estimate_cache_misses += 1
+        return None
+
+    def estimate_cache_store(
+        self, key: tuple, result: Dict[str, NDVEstimate]
+    ) -> None:
+        """Insert an externally-computed estimate map under `estimate_key()`.
+
+        The superpack write-back seam: results land in the same LRU the
+        spill serializes, so batched cold estimates warm-start restarts
+        exactly like individually-computed ones.
+        """
+        self._cache_put(self._estimate_cache, key, dict(result))
+
     def estimate(
         self,
         *,
@@ -466,28 +531,17 @@ class StatsCatalog:
         """
         self._ensure_scanned()
         engine = engine or self.engine
-        fp_key = self.fingerprint_key()
-        sb_key = (
-            tuple(sorted(schema_bounds.items())) if schema_bounds else None
+        key = self.estimate_key(
+            mode=mode, schema_bounds=schema_bounds, engine=engine
         )
-        key = (fp_key, mode, sb_key, engine.cache_key)
-        cached = self._estimate_cache.get(key)
+        cached = self.estimate_cache_peek(key)
         if cached is not None:
-            self.stats.estimate_cache_hits += 1
-            self._estimate_cache.move_to_end(key)
-            return dict(cached)
-        self.stats.estimate_cache_misses += 1
+            return cached
         if not self._column_names:
             return {}
-        batch = self._packed(fp_key)
-        sb = None
-        if schema_bounds:
-            # padded lanes get +inf (no bound) — masked out downstream anyway
-            arr = np.full(batch.batch, np.inf, np.float32)
-            for i, name in enumerate(self._column_names):
-                if name in schema_bounds:
-                    arr[i] = float(schema_bounds[name])
-            sb = jnp.asarray(arr)
+        batch = self._packed(self.fingerprint_key())
+        arr = self.bounds_array(schema_bounds, batch.batch)
+        sb = None if arr is None else jnp.asarray(arr)
         out = engine.estimate(batch, sb, mode=mode)
         ests = estimates_from_batch(out, batch, self._column_names)
         result = {e.column_name: e for e in ests}

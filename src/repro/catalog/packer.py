@@ -18,8 +18,9 @@ pack because every estimator reduction is masked or per-lane.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -39,6 +40,49 @@ def bucket_size(n: int, floor: int = 1) -> int:
     """Round n up to the next power of two, at least `floor`."""
     n = max(int(n), int(floor), 1)
     return 1 << (n - 1).bit_length()
+
+
+def concat_batches(
+    batches: Sequence[ColumnBatch], *, pad_to: Optional[int] = None
+) -> ColumnBatch:
+    """Concatenate packed batches along the column (B) axis.
+
+    The super-pack primitive: several already-packed `ColumnBatch`es become
+    one batch of `sum(B_i)` lanes (optionally zero-padded up to `pad_to`),
+    executable as a single engine call. Lane `offset_i + j` of the result is
+    lane `j` of batch `i`, where `offset_i = sum(B_k for k < i)`.
+
+    Exactness: concatenation along B is bit-identical per lane because no
+    estimator op mixes information across the B axis (the engine re-tiling
+    contract), and B padding lanes are the packer's own fully-masked zeros.
+    Batches with ragged row-group (R) axes are zero-padded to the common
+    max — those cells are masked (`valid=False`) so results stay correct,
+    but masked R-axis *reductions* may re-associate at the longer width, so
+    callers that need bit-identity with each batch's standalone estimate
+    should group same-R batches (as `superpack_estimate` does) rather than
+    mix widths.
+    """
+    if not batches:
+        raise ValueError("concat_batches needs at least one batch")
+    R = max(b.max_groups for b in batches)
+    total = sum(b.batch for b in batches)
+    target = max(int(pad_to or 0), total)
+
+    def cat(*leaves):
+        parts = []
+        for x in leaves:
+            if x.ndim == 2 and x.shape[1] < R:
+                x = jnp.pad(x, ((0, 0), (0, R - x.shape[1])))
+            parts.append(x)
+        out = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        if out.shape[0] < target:
+            pad = [(0, target - out.shape[0])] + [(0, 0)] * (out.ndim - 1)
+            out = jnp.pad(out, pad)
+        return out
+
+    if len(batches) == 1 and batches[0].batch == target:
+        return batches[0]  # nothing to do — keep the (resident) arrays as-is
+    return jax.tree.map(cat, *batches)
 
 
 @dataclasses.dataclass(frozen=True)

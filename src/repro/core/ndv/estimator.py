@@ -203,12 +203,16 @@ def estimate_batch(
 
 
 def estimates_from_batch(
-    out: BatchEstimates, batch: ColumnBatch, names: Sequence[str]
+    out: BatchEstimates, batch: ColumnBatch, names: Sequence[str],
+    *, offset: int = 0
 ) -> List[NDVEstimate]:
     """Materialize per-column NDVEstimate objects from batched output.
 
     `names` may be shorter than the batch axis: the packer pads B up to a
-    shape bucket, and the padding lanes carry no column.
+    shape bucket, and the padding lanes carry no column. `offset` selects
+    where on the B axis the named lanes start — a super-packed batch
+    (`repro.catalog.superpack`) concatenates several column sets along B
+    and materializes each set from its own lane span.
 
     Each field is pulled to the host once (one device-to-host copy per
     field, not one per column) and indexed as numpy from there — per-column
@@ -219,7 +223,8 @@ def estimates_from_batch(
     host = {f: np.asarray(getattr(out, f)) for f in out._fields}
     len_sample = np.asarray(batch.len_sample)
     res: List[NDVEstimate] = []
-    for i, name in enumerate(names):
+    for j, name in enumerate(names):
+        i = offset + j
         res.append(
             NDVEstimate(
                 ndv=float(host["ndv"][i]),

@@ -40,6 +40,16 @@ replicas run `StatsService(shared_spill=True)`, so every computed entry is
 merged into the dataset's on-disk cache file and a freshly booted replica
 loads it before serving.
 
+Batched RPC: the router's `POST /batch` accepts tuples spanning any mix of
+registered datasets in one frame (JSON or the binary wire encoding,
+negotiated per request). `Fleet.batch` groups tuples by dataset, each
+`ReplicaSet.call_batch` groups its tuples by rendezvous-chosen replica and
+forwards one `handle_batch` sub-batch RPC per replica over a keep-alive
+connection pool; the serving side executes all cold tuples of a sub-batch
+as a single cross-dataset super-pack engine call. Per-tuple ETags, 304s,
+and failover semantics are identical to the singleton routes — a sub-batch
+whose replica dies mid-flight requeues whole onto the next candidate.
+
 Entry points: `repro.launch.serve_fleet` (CLI; `--smoke` is the CI boot
 test), `serve_fleet()` (library), `Fleet` + `StatsRouter` for embedding.
 """

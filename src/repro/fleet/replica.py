@@ -40,7 +40,13 @@ from typing import Dict, List, Optional, Tuple
 from urllib.parse import urlencode
 
 from repro.engine import EngineConfig, EstimationEngine
-from repro.service import Response, StatsService, fetch_json
+from repro.service import (
+    EstimateQuery,
+    Response,
+    StatsService,
+    format_bounds,
+)
+from repro.wire import ConnectionPool, WireError, fetch
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,19 +57,63 @@ class StatsRequest:
     mode: str = "paper"
     schema_bounds: Optional[Tuple[Tuple[str, float], ...]] = None
     if_none_match: Optional[str] = None
+    # Batched-estimate column filter. None = every column; a tuple narrows
+    # the body and extends the identity/ETag (a filtered response is a
+    # different cacheable thing than the full one).
+    columns: Optional[Tuple[str, ...]] = None
 
     @property
     def identity(self) -> tuple:
         """The placement key: everything that names the cached response —
         and nothing that does not (`if_none_match` must not move a request
         between replicas, or revalidations would land cold)."""
-        return (self.kind, self.mode, self.schema_bounds or ())
+        base = (self.kind, self.mode, self.schema_bounds or ())
+        # Appended only when present, so pre-existing identities (and the
+        # rendezvous placement derived from them) are unchanged.
+        return base if self.columns is None else base + (self.columns,)
 
     @property
     def bounds_dict(self) -> Optional[Dict[str, float]]:
         if not self.schema_bounds:
             return None
         return dict(self.schema_bounds)
+
+    def to_query(self) -> EstimateQuery:
+        """The service-level batch tuple this request maps onto."""
+        return EstimateQuery(
+            columns=self.columns,
+            mode=self.mode,
+            schema_bounds=self.bounds_dict,
+            if_none_match=self.if_none_match,
+        )
+
+    @classmethod
+    def from_query(cls, q: EstimateQuery) -> "StatsRequest":
+        """Inverse of `to_query` for estimate tuples (router `/batch`)."""
+        sb = (
+            tuple(sorted(q.schema_bounds.items()))
+            if q.schema_bounds else None
+        )
+        return cls(
+            kind="estimate",
+            mode=q.mode,
+            schema_bounds=sb,
+            if_none_match=q.if_none_match,
+            columns=q.columns,
+        )
+
+    def to_wire(self) -> dict:
+        """The `/batch` tuple dict (absent fields elided, compact frames)."""
+        d: dict = {}
+        if self.columns is not None:
+            d["columns"] = list(self.columns)
+        if self.mode != "paper":
+            d["mode"] = self.mode
+        if self.schema_bounds:
+            d["bounds"] = self.bounds_dict
+        if self.if_none_match is not None:
+            d["if_none_match"] = self.if_none_match
+        return d
 
 
 class ReplicaError(ConnectionError):
@@ -147,29 +197,72 @@ class LocalReplica:
             return self.service.refresh()
         return Response(400, {"error": f"unknown kind {req.kind!r}"}, None)
 
+    def handle_batch(self, reqs: List[StatsRequest]) -> List[Response]:
+        """One sub-batch: all cold tuples share one super-pack engine call."""
+        if self._killed:
+            raise ReplicaError(f"replica {self.name} is down")
+        return self.service.batch([r.to_query() for r in reqs])
+
 
 class RemoteReplica:
-    """HTTP proxy to a `StatsServer` whose lifecycle is owned elsewhere."""
+    """HTTP proxy to a `StatsServer` whose lifecycle is owned elsewhere.
 
-    def __init__(self, name: str, base_url: str, *, timeout: float = 30.0):
+    The hop runs over a keep-alive `ConnectionPool` (one TCP connection
+    serves the replica's whole request stream, stale sockets retried once
+    on a fresh connection — `repro.wire.client`) and negotiates the binary
+    wire encoding; both are transparent to callers because the two
+    encodings decode to bit-identical bodies with the same ETags.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        base_url: str,
+        *,
+        timeout: float = 30.0,
+        pool: Optional[ConnectionPool] = None,
+        binary: bool = True,
+    ):
         self.name = name
         self.base_url = base_url.rstrip("/")
         self.timeout = timeout
+        self.binary = binary
+        self._own_pool = pool is None
+        self.pool = pool or ConnectionPool(timeout=timeout)
 
     def start(self) -> "RemoteReplica":
         return self
 
     def stop(self) -> None:
-        pass
+        if self._own_pool:
+            self.pool.close()
 
     def probe(self) -> bool:
         try:
-            status, _, body = fetch_json(
-                self.base_url + "/health", timeout=self.timeout
-            )
-        except OSError:
+            status, _, body = self._fetch(self.base_url + "/health")
+        except ReplicaError:
             return False
         return status == 200 and (body or {}).get("status") == "serving"
+
+    def _fetch(
+        self, url: str, *, etag=None, method: str = "GET", payload=None
+    ) -> Tuple[int, Optional[str], Optional[dict]]:
+        """Pooled fetch with replica-shaped error wrapping."""
+        try:
+            return fetch(
+                url,
+                pool=self.pool,
+                etag=etag,
+                method=method,
+                payload=payload,
+                binary=self.binary,
+            )
+        except (OSError, http.client.HTTPException, WireError,
+                json.JSONDecodeError) as e:
+            # unreachable, hung, or answering garbage: all replica-shaped
+            raise ReplicaError(
+                f"replica {self.name} at {self.base_url}: {e}"
+            ) from e
 
     def handle(self, req: StatsRequest) -> Response:
         path, method = f"/{req.kind}", "GET"
@@ -179,25 +272,15 @@ class RemoteReplica:
         if req.kind in ("estimate", "plan"):
             params["mode"] = req.mode
         if req.kind == "estimate" and req.schema_bounds:
-            params["bounds"] = ",".join(
-                f"{n}:{v}" for n, v in req.schema_bounds
-            )
+            # Percent-escaped per side: a column name containing ':' or ','
+            # survives the trip (parse_bounds unescapes after splitting).
+            params["bounds"] = format_bounds(req.schema_bounds)
         url = self.base_url + path + (
             "?" + urlencode(params) if params else ""
         )
-        try:
-            status, etag, body = fetch_json(
-                url,
-                etag=req.if_none_match,
-                method=method,
-                timeout=self.timeout,
-            )
-        except (OSError, http.client.HTTPException,
-                json.JSONDecodeError) as e:
-            # unreachable, hung, or answering garbage: all replica-shaped
-            raise ReplicaError(
-                f"replica {self.name} at {self.base_url}: {e}"
-            ) from e
+        status, etag, body = self._fetch(
+            url, etag=req.if_none_match, method=method
+        )
         # A 5xx passes through as a response, NOT as a ReplicaError: the
         # upstream _Handler turns application errors (e.g. a ValueError
         # from a schema-mismatched dataset) into 500s, and those would
@@ -205,6 +288,26 @@ class RemoteReplica:
         # LocalReplica propagating the exception (see FAILOVER_ERRORS).
         # Replica-local sickness is the probe loop's job to catch.
         return Response(status, body, etag)
+
+    def handle_batch(self, reqs: List[StatsRequest]) -> List[Response]:
+        """Forward one sub-batch as a single binary `POST /batch` frame."""
+        payload = {"tuples": [r.to_wire() for r in reqs]}
+        status, _, body = self._fetch(
+            self.base_url + "/batch", method="POST", payload=payload
+        )
+        entries = (body or {}).get("responses")
+        if status != 200 or not isinstance(entries, list) \
+                or len(entries) != len(reqs):
+            # A replica that cannot answer the batch shape is as failed as
+            # an unreachable one — the caller retries the sub-batch whole.
+            raise ReplicaError(
+                f"replica {self.name} at {self.base_url}: bad /batch "
+                f"answer (status {status})"
+            )
+        return [
+            Response(e.get("status", 500), e.get("body"), e.get("etag"))
+            for e in entries
+        ]
 
 
 @dataclasses.dataclass
@@ -316,6 +419,63 @@ class ReplicaSet:
             f"all {len(self.replicas)} replicas of {self.dataset_key!r} "
             f"failed: {'; '.join(errors)}"
         )
+
+    def call_batch(
+        self, reqs: List[StatsRequest]
+    ) -> Tuple[List[Response], int]:
+        """Route a batch of estimate tuples; returns (responses aligned
+        with `reqs`, sub-batch dispatches performed).
+
+        Tuples are grouped by their rendezvous-chosen replica — one
+        `handle_batch` RPC per distinct placement, so every tuple still
+        lands where its singleton `/estimate` would (same cache locality),
+        while the common case (all tuples share a placement) is a single
+        RPC. A failed dispatch (`FAILOVER_ERRORS`) ejects the replica and
+        requeues its whole sub-batch for the next pass, where
+        `_candidates` re-ranks around the ejection; passes are bounded by
+        the replica count, and tuples that outlive every pass answer 503
+        in place (the batch envelope itself never fails partway).
+        """
+        responses: List[Optional[Response]] = [None] * len(reqs)
+        pending = list(range(len(reqs)))
+        dispatches = 0
+        for _ in range(len(self.replicas)):
+            if not pending:
+                break
+            groups: Dict[str, List[int]] = {}
+            chosen: Dict[str, object] = {}
+            for i in pending:
+                replica = self._candidates(reqs[i].identity)[0]
+                chosen[replica.name] = replica
+                groups.setdefault(replica.name, []).append(i)
+            requeued: List[int] = []
+            for name, indices in groups.items():
+                replica = chosen[name]
+                dispatches += 1
+                try:
+                    answers = replica.handle_batch(
+                        [reqs[i] for i in indices]
+                    )
+                except FAILOVER_ERRORS as e:
+                    self._mark(name, False, f"{type(e).__name__}: {e}")
+                    with self._mu:
+                        self.failovers += 1
+                    requeued.extend(indices)
+                    continue
+                self._mark(name, True, None)
+                for i, resp in zip(indices, answers):
+                    responses[i] = resp
+            pending = requeued
+        for i in pending:
+            responses[i] = Response(
+                503,
+                {
+                    "error": f"all {len(self.replicas)} replicas of "
+                    f"{self.dataset_key!r} failed"
+                },
+                None,
+            )
+        return list(responses), dispatches
 
     def refresh_all(self) -> List[Tuple[str, Optional[Response]]]:
         """Broadcast a refresh to every replica (each replica ingests

@@ -10,11 +10,21 @@ over it, the same shape as `repro.service.StatsServer`:
   GET  /datasets                              registry + replica health
   GET  /health                                router + per-dataset health
   POST /refresh                               broadcast refresh, all datasets
+  POST /batch                                 many estimate tuples, one frame
   GET  /{ns}/{ds}/columns                     routed        [ETag passthrough]
   GET  /{ns}/{ds}/estimate?mode=&bounds=      routed        [ETag passthrough]
   GET  /{ns}/{ds}/plan?mode=                  routed        [ETag passthrough]
   GET  /{ns}/{ds}/health                      routed (any healthy replica)
   POST /{ns}/{ds}/refresh                     broadcast refresh, one dataset
+
+`POST /batch` tuples carry `namespace`/`dataset` alongside the per-dataset
+batch fields (`repro.service.parse_query_tuple` shape) and may span any
+mix of registered datasets: the router groups tuples by their
+rendezvous-chosen replica and forwards one sub-batch RPC per replica
+(`ReplicaSet.call_batch`), each of which executes its cold tuples as one
+cross-dataset super-pack on the serving side. Content negotiation
+(`Accept: application/x-ndv-wire`) applies to the envelope exactly as to
+single requests.
 
 The router adds nothing to response bodies and nothing to ETags: a tag
 minted by any replica validates on any other, because tags are derived from
@@ -28,7 +38,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 from http.server import ThreadingHTTPServer
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 from urllib.parse import parse_qs, urlsplit
 
 from repro.fleet.registry import DatasetRegistry, DatasetSpec
@@ -38,7 +48,12 @@ from repro.fleet.replica import (
     ReplicaSet,
     StatsRequest,
 )
-from repro.service import Response, parse_bounds
+from repro.service import (
+    Response,
+    batch_envelope,
+    parse_bounds,
+    parse_query_tuple,
+)
 from repro.service.http import JSONResponseHandler
 
 ROUTED_KINDS = ("columns", "estimate", "plan", "health")
@@ -65,6 +80,8 @@ class FleetStats:
     retried: int = 0          # requests that needed >1 replica attempt
     unavailable: int = 0      # 503s: every replica of a set failed
     not_found: int = 0        # 404s: unregistered dataset or bad path
+    batches: int = 0          # /batch envelopes handled
+    batch_tuples: int = 0     # tuples carried inside those envelopes
 
 
 class Fleet:
@@ -161,6 +178,47 @@ class Fleet:
         self._bump(routed=1, retried=int(attempts > 1))
         return resp
 
+    def batch(
+        self, items: Sequence[Tuple[str, str, StatsRequest]]
+    ) -> List[Response]:
+        """Route `(namespace, dataset, estimate request)` tuples in bulk.
+
+        Tuples are grouped per registered dataset and each group forwards
+        through its replica set's `call_batch` — rendezvous placement,
+        sub-batch failover, and the serving-side super-pack all happen
+        there. Per-tuple errors answer in place (404 unknown dataset, 400
+        non-estimate kind, 503 when every replica of a set failed); the
+        envelope itself only fails on transport-level problems.
+        """
+        self._bump(requests=1, batches=1, batch_tuples=len(items))
+        responses: List[Optional[Response]] = [None] * len(items)
+        groups: Dict[str, List[int]] = {}
+        for i, (ns, ds, req) in enumerate(items):
+            if req.kind != "estimate":
+                responses[i] = Response(
+                    400,
+                    {"error": f"batch tuples must be estimates, "
+                              f"got kind {req.kind!r}"},
+                    None,
+                )
+                continue
+            try:
+                key = self.registry.get(ns, ds).key
+            except KeyError as e:
+                self._bump(not_found=1)
+                responses[i] = Response(404, {"error": str(e)}, None)
+                continue
+            groups.setdefault(key, []).append(i)
+        for key, indices in groups.items():
+            answers, _ = self.sets[key].call_batch(
+                [items[i][2] for i in indices]
+            )
+            served = sum(1 for r in answers if r.status != 503)
+            self._bump(routed=served, unavailable=len(answers) - served)
+            for i, resp in zip(indices, answers):
+                responses[i] = resp
+        return list(responses)
+
     def refresh(
         self, namespace: Optional[str] = None, dataset: Optional[str] = None
     ) -> Response:
@@ -227,6 +285,27 @@ class _RouterHandler(JSONResponseHandler):
         parts = [p for p in url.path.split("/") if p]
         return parts, parse_qs(url.query)
 
+    @staticmethod
+    def _parse_batch(payload) -> List[Tuple[str, str, StatsRequest]]:
+        """Router `/batch` body -> routable items (ValueError on junk)."""
+        if not isinstance(payload, dict) or not isinstance(
+            payload.get("tuples"), list
+        ):
+            raise ValueError(
+                "batch body must be an object with a 'tuples' list"
+            )
+        items: List[Tuple[str, str, StatsRequest]] = []
+        for t in payload["tuples"]:
+            query = parse_query_tuple(t)
+            ns, ds = t.get("namespace"), t.get("dataset")
+            if not isinstance(ns, str) or not isinstance(ds, str):
+                raise ValueError(
+                    "router batch tuples need string 'namespace' and "
+                    "'dataset' fields"
+                )
+            items.append((ns, ds, StatsRequest.from_query(query)))
+        return items
+
     def do_GET(self) -> None:  # noqa: N802 — http.server API
         parts, query = self._split()
         try:
@@ -261,6 +340,12 @@ class _RouterHandler(JSONResponseHandler):
         try:
             if parts == ["refresh"]:
                 return self._send(self.fleet.refresh())
+            if parts == ["batch"]:
+                try:
+                    items = self._parse_batch(self._read_body())
+                except ValueError as e:
+                    return self._error(400, str(e))
+                return self._send(batch_envelope(self.fleet.batch(items)))
             if len(parts) == 3 and parts[2] == "refresh":
                 return self._send(self.fleet.refresh(parts[0], parts[1]))
             self.fleet._bump(not_found=1)

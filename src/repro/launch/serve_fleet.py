@@ -7,7 +7,9 @@
 
     # self-contained smoke (CI): router + 2 replicas x 2 temp datasets,
     # estimate, kill a replica, re-estimate through failover, assert 304
-    # revalidation and zero-pack warm start from the shared spill
+    # revalidation and zero-pack warm start from the shared spill, then a
+    # binary POST /batch spanning both datasets (per-tuple 304s asserted
+    # through a second mid-batch replica kill, one pooled connection)
     PYTHONPATH=src python -m repro.launch.serve_fleet --smoke
 
 A planner then addresses the whole namespace through one endpoint:
@@ -35,6 +37,7 @@ from repro.fleet import (
     parse_spec,
 )
 from repro.service import fetch_json
+from repro.wire import ConnectionPool, fetch
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -158,12 +161,50 @@ def run_smoke(args: argparse.Namespace) -> int:
         finally:
             fresh.stop()
 
+        # -- batched RPC: one binary /batch frame spanning both datasets --
+        pool = ConnectionPool()
+        tuples = [
+            {"namespace": "smoke", "dataset": "alpha", "mode": "improved"},
+            {"namespace": "smoke", "dataset": "beta", "mode": "improved"},
+            {"namespace": "smoke", "dataset": "beta"},
+            {"namespace": "smoke", "dataset": "ghost"},
+        ]
+        status, _, env = fetch(base_url + "/batch", pool=pool,
+                               method="POST", payload={"tuples": tuples})
+        entries = env["responses"]
+        assert status == 200, status
+        assert [e["status"] for e in entries] == [200, 200, 200, 404], entries
+        # tuple bodies/ETags match the singleton routed endpoint exactly
+        assert entries[0]["etag"] == etags["alpha"][0], entries[0]
+        assert entries[0]["body"] == etags["alpha"][1]
+        assert entries[1]["etag"] == etags["beta"][0]
+
+        # kill a second replica mid-batch: the sub-batch requeues whole
+        # onto the survivor and every per-tuple 304 stays valid
+        beta_set = fleet.sets["smoke/beta"]
+        beta_victim = beta_set.rank(
+            StatsRequest("estimate", "improved").identity
+        )[0]
+        beta_victim.kill()
+        revalidate = [dict(t) for t in tuples[:3]]
+        for t, e in zip(revalidate, entries):
+            t["if_none_match"] = e["etag"]
+        status, _, env = fetch(base_url + "/batch", pool=pool,
+                               method="POST",
+                               payload={"tuples": revalidate})
+        statuses = [e["status"] for e in env["responses"]]
+        assert status == 200 and statuses == [304, 304, 304], statuses
+        assert beta_set.failovers >= 1, beta_set.health_view()
+        assert pool.stats.snapshot()["opened"] == 1, pool.stats.snapshot()
+
         status, _, health = fetch_json(base_url + "/health")
         assert status == 200 and health["status"] == "serving", health
         print(f"[serve_fleet --smoke] ok: 2 datasets x 2 replicas, "
               f"failover after kill ({rset.failovers} failovers), ETag "
               f"stable across replicas, 304 revalidation on survivor, "
-              f"fresh replica warm from spill (0 packs)")
+              f"fresh replica warm from spill (0 packs), binary /batch "
+              f"across both datasets with per-tuple 304s through a "
+              f"mid-batch kill on one keep-alive connection")
     # context exit shut everything down; a second connect must now fail
     try:
         fetch_json(base_url + "/health")

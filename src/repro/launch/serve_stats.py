@@ -4,7 +4,8 @@
         --port 8080 --refresh-interval 30
 
     # self-contained smoke (CI): temp dataset, ephemeral port, scripted
-    # client asserting estimate / 304 / plan / health, clean shutdown
+    # client asserting estimate / 304 / plan / health, binary-negotiated
+    # estimate parity, a per-tuple 200+304 /batch frame, clean shutdown
     PYTHONPATH=src python -m repro.launch.serve_stats --smoke
 
 Query planners then pull estimates without local footer access:
@@ -23,6 +24,7 @@ import urllib.error
 
 from repro.engine import EngineConfig, EstimationEngine
 from repro.service import StatsServer, StatsService, fetch_json
+from repro.wire import ConnectionPool, fetch
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -98,9 +100,24 @@ def run_smoke(args: argparse.Namespace) -> int:
         status4, _, health = fetch_json(base + "/health")
         assert status4 == 200 and health["status"] == "serving"
         assert health["service"]["responses_304"] == 1, health["service"]
+        # binary negotiation decodes bit-identically with the same ETag,
+        # and a batched frame answers per-tuple (200 + 304 in one trip)
+        pool = ConnectionPool()
+        statusb, etagb, bodyb = fetch(
+            base + "/estimate?mode=improved", pool=pool, binary=True
+        )
+        assert (statusb, etagb, bodyb) == (200, etag, body), statusb
+        statusb, _, env = fetch(
+            base + "/batch", pool=pool, method="POST",
+            payload={"tuples": [{"mode": "paper"},
+                                {"mode": "improved", "if_none_match": etag}]},
+        )
+        tuple_statuses = [e["status"] for e in env["responses"]]
+        assert statusb == 200 and tuple_statuses == [200, 304], env
         print(f"[serve_stats --smoke] ok: {len(body['estimates'])} columns, "
               f"etag {etag[:10]}..., 304 revalidation, "
-              f"{health['ingest']['footers_read']} footers read async")
+              f"{health['ingest']['footers_read']} footers read async, "
+              f"binary /estimate bit-identical, /batch per-tuple 200+304")
     # context exit shut the server down; a second connect must now fail
     try:
         fetch_json(base + "/health")

@@ -51,6 +51,17 @@ the same critical section that builds the body.
 dataset) rides along in every body for observability; the ETag, not the
 generation, is the cache key.
 
+Batched RPC: `POST /batch` carries many (columns, mode, bounds,
+if_none_match) tuples in one frame. Per-tuple semantics are identical to
+`/estimate` — same ETags (an unfiltered tuple shares its tag
+byte-for-byte with the plain endpoint), per-tuple 304s and 400s — while
+all cold tuples of a batch execute as one cross-(mode, bounds) super-pack
+engine call (`repro.catalog.superpack`), with single-flight extended to
+per-tuple granularity so concurrent batches and singles coalesce against
+each other. Responses negotiate a compact binary encoding
+(`Accept: application/x-ndv-wire`, `repro.wire`) that decodes to
+bit-identical bodies with the same ETags; JSON stays the default.
+
 Entry points: `repro.launch.serve_stats` (CLI), `serve()` (library),
 `examples/profile_dataset.py --serve` (demo). For many datasets behind
 one endpoint with N replicas each, see the fleet tier (`repro.fleet`):
@@ -61,13 +72,18 @@ replicas interchangeable there.
 from repro.service.http import (  # noqa: F401
     JSONResponseHandler,
     StatsServer,
+    batch_envelope,
     fetch_json,
+    format_bounds,
     make_handler,
+    parse_batch_queries,
     parse_bounds,
+    parse_query_tuple,
     serve,
 )
 from repro.service.ingest import AsyncIngestor, IngestStats  # noqa: F401
 from repro.service.service import (  # noqa: F401
+    EstimateQuery,
     Response,
     ServiceStats,
     SingleFlight,

@@ -6,18 +6,31 @@ One thread per connection is plenty here: request handling is a dict hit
 for warm traffic and an engine call for cold traffic, and the single-flight
 layer in `StatsService` collapses concurrent cold bursts anyway.
 
-Routes (all responses are JSON):
+Routes (responses are JSON by default):
 
   GET  /health                       liveness + counters (never cached)
   GET  /columns                      merged per-column summary      [ETag]
   GET  /estimate?mode=&bounds=       per-column NDV estimates       [ETag]
   GET  /plan?mode=                   per-column memory plans        [ETag]
+  POST /batch                        many estimate tuples, one frame
   POST /refresh                      force one ingestion refresh
 
 `bounds` is `name:value[,name:value...]` (schema-knowledge NDV upper
-bounds, Eq 14-15 family). Send `If-None-Match` with a previously returned
-ETag to get `304 Not Modified` with an empty body when the dataset state,
-engine config, and request identity all still match.
+bounds, Eq 14-15 family); names and values may be percent-escaped, so
+column names containing `:` or `,` survive the trip. Send `If-None-Match`
+with a previously returned ETag to get `304 Not Modified` with an empty
+body when the dataset state, engine config, and request identity all
+still match.
+
+Content negotiation: every endpoint answers with the compact binary wire
+encoding (`repro.wire`) instead of JSON when the request carries
+`Accept: application/x-ndv-wire`. The two encodings decode to
+bit-identical bodies and carry the same ETags — the encoding is never
+part of a response's identity. `POST /batch` accepts its request body in
+either encoding too (by Content-Type); the body is
+`{"tuples": [{"columns", "mode", "bounds", "if_none_match"}, ...]}` and
+the response `{"responses": [{"status", "etag", "body"}, ...]}` with
+per-tuple statuses (304 tuples carry a null body).
 """
 from __future__ import annotations
 
@@ -26,10 +39,17 @@ import threading
 import urllib.error
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Dict, Optional, Tuple
-from urllib.parse import parse_qs, urlsplit
+from typing import Dict, List, Optional, Tuple
+from urllib.parse import parse_qs, quote, unquote, urlsplit
 
-from repro.service.service import Response, StatsService
+from repro.service.service import EstimateQuery, Response, StatsService
+from repro.wire import (
+    JSON_CONTENT_TYPE,
+    WIRE_CONTENT_TYPE,
+    WireError,
+    decode_frame,
+    encode_frame,
+)
 
 
 def fetch_json(
@@ -60,7 +80,13 @@ def fetch_json(
 
 
 def parse_bounds(raw: str) -> Dict[str, float]:
-    """`"tok:10,val:2.5"` -> `{"tok": 10.0, "val": 2.5}` (ValueError on junk)."""
+    """`"tok:10,val:2.5"` -> `{"tok": 10.0, "val": 2.5}` (ValueError on junk).
+
+    Each side of a `name:value` pair is percent-unescaped after splitting,
+    so serializers (`format_bounds`) can carry column names containing the
+    `:` / `,` delimiters themselves. Unescaping is the identity for
+    ordinary names — pre-escape clients keep working unchanged.
+    """
     bounds: Dict[str, float] = {}
     for part in raw.split(","):
         part = part.strip()
@@ -69,33 +95,128 @@ def parse_bounds(raw: str) -> Dict[str, float]:
         name, sep, value = part.partition(":")
         if not sep or not name:
             raise ValueError(f"bad bounds entry {part!r}; want name:value")
-        bounds[name] = float(value)
+        bounds[unquote(name)] = float(unquote(value))
     return bounds
+
+
+def format_bounds(bounds) -> str:
+    """Inverse of `parse_bounds`: mapping (or pair iterable) -> query value.
+
+    Percent-escapes both sides of every pair, so `parse_bounds(
+    format_bounds(b)) == b` for EVERY column name — including hostile ones
+    containing the `:` / `,` delimiters that an unescaped join corrupts.
+    """
+    items = bounds.items() if hasattr(bounds, "items") else bounds
+    return ",".join(
+        f"{quote(str(n), safe='')}:{quote(str(v), safe='')}"
+        for n, v in items
+    )
+
+
+def parse_query_tuple(d: dict) -> EstimateQuery:
+    """One `/batch` tuple dict -> `EstimateQuery` (ValueError on junk).
+
+    `bounds` accepts either a `{name: value}` mapping (the native batch
+    shape) or the GET query-string format (`parse_bounds` syntax), so a
+    client can forward query strings verbatim.
+    """
+    if not isinstance(d, dict):
+        raise ValueError(f"batch tuple must be an object, got {type(d).__name__}")
+    unknown = set(d) - {"columns", "mode", "bounds", "if_none_match",
+                        "namespace", "dataset"}
+    if unknown:
+        raise ValueError(f"unknown batch tuple fields {sorted(unknown)}")
+    cols = d.get("columns")
+    if cols is not None:
+        if not isinstance(cols, (list, tuple)) or not all(
+            isinstance(c, str) for c in cols
+        ):
+            raise ValueError("'columns' must be a list of column names")
+        cols = tuple(cols)
+    bounds = d.get("bounds")
+    if bounds is not None:
+        if isinstance(bounds, str):
+            bounds = parse_bounds(bounds)
+        elif isinstance(bounds, dict):
+            bounds = {str(k): float(v) for k, v in bounds.items()}
+        else:
+            raise ValueError("'bounds' must be a mapping or name:value string")
+    mode = d.get("mode", "paper")
+    if not isinstance(mode, str):
+        raise ValueError("'mode' must be a string")
+    inm = d.get("if_none_match")
+    if inm is not None and not isinstance(inm, str):
+        raise ValueError("'if_none_match' must be a string")
+    return EstimateQuery(
+        columns=cols, mode=mode, schema_bounds=bounds, if_none_match=inm
+    )
+
+
+def parse_batch_queries(payload) -> List[EstimateQuery]:
+    """`/batch` request body -> query list (ValueError on junk)."""
+    if not isinstance(payload, dict) or not isinstance(
+        payload.get("tuples"), list
+    ):
+        raise ValueError("batch body must be an object with a 'tuples' list")
+    return [parse_query_tuple(t) for t in payload["tuples"]]
+
+
+def batch_envelope(results: List[Response]) -> Response:
+    """Per-tuple `Response`s -> the one `/batch` HTTP response.
+
+    The envelope itself is uncacheable (no ETag — tuples carry their own);
+    per-tuple 304s ride inside it with null bodies.
+    """
+    return Response(200, {
+        "responses": [
+            {"status": r.status, "etag": r.etag, "body": r.body}
+            for r in results
+        ],
+    }, None)
 
 
 class JSONResponseHandler(BaseHTTPRequestHandler):
     """Shared wire plumbing for the stats JSON servers.
 
     One place owns the `Response` -> HTTP translation (ETag header,
-    Content-Length, no Content-Type on 304, quiet logging), so the
-    per-dataset server here and the fleet router (`repro.fleet.router`)
-    cannot drift apart in revalidation behavior.
+    Content-Length, no Content-Type on 304, content negotiation, quiet
+    logging), so the per-dataset server here and the fleet router
+    (`repro.fleet.router`) cannot drift apart in revalidation behavior.
     """
 
     protocol_version = "HTTP/1.1"
+    # Keep-alive exchanges write headers and body as separate small
+    # segments; without TCP_NODELAY the second one stalls ~40ms behind the
+    # client's delayed ACK (Nagle). The pool client disables it too.
+    disable_nagle_algorithm = True
 
     def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
         pass
 
+    def _wants_wire(self) -> bool:
+        """Whether the request negotiated the binary encoding.
+
+        A substring check is enough for the one non-default media type we
+        serve — anything without the exact token (including `*/*`) gets
+        JSON, the compatible default.
+        """
+        return WIRE_CONTENT_TYPE in (self.headers.get("Accept") or "")
+
     def _send(self, resp: Response) -> None:
+        wire = self._wants_wire()
         payload = b""
         if resp.body is not None:
-            payload = json.dumps(resp.body).encode()
+            payload = (
+                encode_frame(resp.body) if wire
+                else json.dumps(resp.body).encode()
+            )
         self.send_response(resp.status)
         if resp.etag is not None:
             self.send_header("ETag", resp.etag)
         if resp.status != 304:
-            self.send_header("Content-Type", "application/json")
+            self.send_header(
+                "Content-Type", WIRE_CONTENT_TYPE if wire else JSON_CONTENT_TYPE
+            )
         self.send_header("Content-Length", str(len(payload)))
         self.end_headers()
         if payload:
@@ -103,6 +224,24 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
 
     def _error(self, status: int, message: str) -> None:
         self._send(Response(status, {"error": message}, None))
+
+    def _read_body(self):
+        """Decode the request body by its Content-Type (wire or JSON).
+
+        Raises ValueError (including `WireError`) on malformed payloads —
+        callers answer 400.
+        """
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(length) if length else b""
+        if not raw:
+            raise ValueError("empty request body")
+        ctype = (self.headers.get("Content-Type") or JSON_CONTENT_TYPE)
+        if ctype.split(";")[0].strip() == WIRE_CONTENT_TYPE:
+            return decode_frame(raw)
+        try:
+            return json.loads(raw.decode("utf-8"))
+        except (UnicodeDecodeError, json.JSONDecodeError) as e:
+            raise ValueError(f"bad JSON body: {e}") from None
 
 
 class _Handler(JSONResponseHandler):
@@ -151,6 +290,12 @@ class _Handler(JSONResponseHandler):
         try:
             if url.path == "/refresh":
                 self._send(self.service.refresh())
+            elif url.path == "/batch":
+                try:
+                    queries = parse_batch_queries(self._read_body())
+                except ValueError as e:
+                    return self._error(400, str(e))
+                self._send(batch_envelope(self.service.batch(queries)))
             else:
                 self._error(404, f"no such endpoint: {url.path}")
         except Exception as e:

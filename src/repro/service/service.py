@@ -31,13 +31,42 @@ import dataclasses
 import hashlib
 import threading
 import time
-from typing import Callable, Dict, NamedTuple, Optional, Tuple, Union
+from typing import (
+    Callable,
+    Dict,
+    List,
+    NamedTuple,
+    Optional,
+    Sequence,
+    Tuple,
+    Union,
+)
 
-from repro.catalog import StatsCatalog, estimate_to_json
+from repro.catalog import (
+    StatsCatalog,
+    SuperpackJob,
+    estimate_to_json,
+    superpack_estimate,
+)
 from repro.catalog.source import MetadataSource
 from repro.service.ingest import AsyncIngestor
 
 MODES = ("paper", "improved")
+
+
+class EstimateQuery(NamedTuple):
+    """One tuple of a batched estimate request (`StatsService.batch`).
+
+    `columns=None` means every column (identical identity — and therefore
+    ETag — to a plain `/estimate` call, so 304 caches are shared between
+    the batched and unbatched paths); a tuple of names restricts the body
+    to those columns and extends the ETag identity accordingly.
+    """
+
+    columns: Optional[Tuple[str, ...]] = None
+    mode: str = "paper"
+    schema_bounds: Optional[Dict[str, float]] = None
+    if_none_match: Optional[str] = None
 
 
 class Response(NamedTuple):
@@ -71,35 +100,73 @@ class _Call:
 
 
 class SingleFlight:
-    """Duplicate-call suppression: one in-flight computation per key."""
+    """Duplicate-call suppression: one in-flight computation per key.
+
+    Two APIs over one mechanism: `do()` is the classic run-once wrapper;
+    `claim()` / `finish()` / `wait()` expose the leadership handshake so a
+    BATCH of keys can be claimed up front, computed jointly (one super-pack
+    engine call), and published per key — the per-tuple granularity the
+    `/batch` endpoint needs. Keys are shared with the single-request path,
+    so a concurrent `/estimate` coalesces onto a batch's leader and vice
+    versa.
+    """
 
     def __init__(self):
         self._mu = threading.Lock()
         self._calls: Dict[tuple, _Call] = {}
 
-    def do(self, key: tuple, fn: Callable[[], object]) -> Tuple[object, bool]:
-        """Run `fn` once per concurrent burst of `key`; returns (result,
-        was_leader). Followers re-raise the leader's exception."""
+    def claim(self, key: tuple) -> Tuple[_Call, bool]:
+        """Claim leadership of `key`; returns (call, is_leader).
+
+        A leader MUST eventually `finish()` the call (success or error),
+        or every follower blocks forever. A follower `wait()`s on it.
+        """
         with self._mu:
             call = self._calls.get(key)
             leader = call is None
             if leader:
                 call = _Call()
                 self._calls[key] = call
-        if leader:
-            try:
-                call.result = fn()
-            except BaseException as e:
-                call.error = e
-            finally:
-                with self._mu:
-                    self._calls.pop(key, None)
-                call.event.set()
-        else:
-            call.event.wait()
+        return call, leader
+
+    def finish(
+        self,
+        key: tuple,
+        call: _Call,
+        *,
+        result: object = None,
+        error: Optional[BaseException] = None,
+    ) -> None:
+        """Publish a claimed call's outcome and release the key."""
+        call.result = result
+        call.error = error
+        with self._mu:
+            self._calls.pop(key, None)
+        call.event.set()
+
+    @staticmethod
+    def wait(call: _Call) -> object:
+        """Block on a follower's call; re-raises the leader's exception."""
+        call.event.wait()
         if call.error is not None:
             raise call.error
-        return call.result, leader
+        return call.result
+
+    def do(self, key: tuple, fn: Callable[[], object]) -> Tuple[object, bool]:
+        """Run `fn` once per concurrent burst of `key`; returns (result,
+        was_leader). Followers re-raise the leader's exception."""
+        call, leader = self.claim(key)
+        if leader:
+            result, error = None, None
+            try:
+                result = fn()
+            except BaseException as e:
+                error = e
+            self.finish(key, call, result=result, error=error)
+            if error is not None:
+                raise error
+            return result, True
+        return self.wait(call), False
 
 
 def etag_matches(if_none_match: str, etag: str) -> bool:
@@ -249,9 +316,19 @@ class StatsService:
                 token = self._state_token = self._compute_state_token()
         return token
 
-    def _etag(self, kind: str, mode: str = "", bounds_key: tuple = ()) -> str:
+    def _etag(
+        self,
+        kind: str,
+        mode: str = "",
+        bounds_key: tuple = (),
+        columns: Optional[Tuple[str, ...]] = None,
+    ) -> str:
         h = hashlib.sha1(self._current_state_token().encode())
         h.update(f"|{kind}|{mode}|{bounds_key!r}".encode())
+        if columns is not None:
+            # Appended ONLY when a filter is present, so unfiltered batch
+            # tuples share tags byte-for-byte with plain /estimate calls.
+            h.update(f"|cols={columns!r}".encode())
         return f'"{h.hexdigest()}"'
 
     # -- endpoints -----------------------------------------------------------
@@ -362,6 +439,165 @@ class StatsService:
                 },
             },
         )
+
+    def batch(self, queries: Sequence[EstimateQuery]) -> List[Response]:
+        """Many estimate tuples, one engine dispatch per cold mode group.
+
+        Per-tuple semantics are exactly `estimate()`'s: the same ETags
+        (unfiltered tuples share tags byte-for-byte with `/estimate`),
+        per-tuple 304s, per-tuple 400s for bad modes or unknown columns,
+        and bodies bit-identical to the sequential path (the super-pack
+        exactness contract, `repro.catalog.superpack`).
+
+        Cold tuples extend single-flight to per-tuple granularity: each
+        cold tuple's ("estimate", etag) key is claimed up front — keys
+        already in flight (a concurrent `/estimate`, another batch, or a
+        duplicate within this one) ride that leader — and all claimed
+        tuples execute as ONE `superpack_estimate` call under the lock,
+        publishing each tuple's body to its own followers.
+        """
+        n = len(queries)
+        self.stats.requests += n
+        responses: List[Optional[Response]] = [None] * n
+        if n == 0:
+            return []
+        self._ensure_ready()
+        known = set(self.catalog.column_names)
+
+        claimed: List[tuple] = []   # (index, query, key, call)
+        in_batch: List[Tuple[int, int]] = []   # (follower idx, leader idx)
+        waiting: List[tuple] = []   # (index, call) — led by another thread
+        leader_for: Dict[tuple, int] = {}
+        for i, q in enumerate(queries):
+            if q.mode not in MODES:
+                responses[i] = Response(
+                    400, {"error": f"mode {q.mode!r} not in {list(MODES)}"},
+                    None,
+                )
+                continue
+            if q.columns is not None:
+                unknown = [c for c in q.columns if c not in known]
+                if unknown:
+                    responses[i] = Response(
+                        400, {"error": f"unknown columns {unknown}"}, None
+                    )
+                    continue
+            bounds_key = (
+                tuple(sorted(q.schema_bounds.items()))
+                if q.schema_bounds else ()
+            )
+            etag = self._etag("estimate", q.mode, bounds_key, q.columns)
+            if q.if_none_match is not None and etag_matches(
+                q.if_none_match, etag
+            ):
+                self.stats.responses_304 += 1
+                responses[i] = Response(304, None, etag)
+                continue
+            key = ("estimate", etag)
+            if key in leader_for:
+                in_batch.append((i, leader_for[key]))
+                continue
+            call, is_leader = self._flight.claim(key)
+            if is_leader:
+                leader_for[key] = i
+                claimed.append((i, q, key, call))
+            else:
+                waiting.append((i, call))
+
+        if claimed:
+            self._batch_compute(claimed, responses)
+        for i, leader_idx in in_batch:
+            self.stats.coalesced_waits += 1
+            r = responses[leader_idx]
+            if r.status == 200:
+                self.stats.responses_200 += 1
+            responses[i] = r
+        for i, call in waiting:
+            self.stats.coalesced_waits += 1
+            try:
+                body = SingleFlight.wait(call)
+            except Exception as e:
+                responses[i] = Response(
+                    500, {"error": f"{type(e).__name__}: {e}"}, None
+                )
+                continue
+            self.stats.responses_200 += 1
+            responses[i] = Response(200, body, body["etag"])
+        return responses
+
+    def _batch_compute(self, claimed: List[tuple], responses: list) -> None:
+        """Execute all claimed tuples jointly and publish each call.
+
+        Every claimed call is finished no matter what — on failure with
+        the error (followers re-raise it), so nobody blocks forever.
+        """
+        try:
+            with self.lock:
+                if self.shared_spill:
+                    self.stats.spill_reloads += bool(
+                        self.catalog.maybe_load_cache()
+                    )
+                jobs: List[SuperpackJob] = []
+                job_index: Dict[tuple, int] = {}
+                slots: List[int] = []
+                for _, q, _, _ in claimed:
+                    jkey = (
+                        q.mode,
+                        tuple(sorted(q.schema_bounds.items()))
+                        if q.schema_bounds else None,
+                    )
+                    idx = job_index.get(jkey)
+                    if idx is None:
+                        idx = job_index[jkey] = len(jobs)
+                        jobs.append(SuperpackJob(
+                            self.catalog, q.mode, q.schema_bounds
+                        ))
+                    slots.append(idx)
+                result = superpack_estimate(jobs, engine=self.engine)
+                self.stats.engine_runs += result.engine_calls
+                if result.engine_calls and self.save_cache_on_commit:
+                    self.catalog.save_cache()
+                gen = self.ingestor.generation
+                bodies = []
+                for (i, q, key, call), idx in zip(claimed, slots):
+                    est_map = result.estimates[idx]
+                    names = q.columns if q.columns is not None else est_map
+                    bounds_key = (
+                        tuple(sorted(q.schema_bounds.items()))
+                        if q.schema_bounds else ()
+                    )
+                    # Recomputed inside the lock: the body must describe
+                    # the state its ETag names, even across a mid-flight
+                    # refresh commit (same rule as `_cached_endpoint`).
+                    body = {
+                        "etag": self._etag(
+                            "estimate", q.mode, bounds_key, q.columns
+                        ),
+                        "generation": gen,
+                        "mode": q.mode,
+                        "schema_bounds": q.schema_bounds,
+                        "estimates": {
+                            name: estimate_to_json(est_map[name])
+                            for name in names
+                        },
+                    }
+                    if q.columns is not None:
+                        body["columns"] = list(q.columns)
+                    bodies.append(body)
+        except BaseException as e:
+            for i, q, key, call in claimed:
+                self._flight.finish(key, call, error=e)
+                responses[i] = Response(
+                    500, {"error": f"{type(e).__name__}: {e}"}, None
+                )
+            if not isinstance(e, Exception):
+                raise  # KeyboardInterrupt and friends: release, then bubble
+            return
+        for (i, q, key, call), body in zip(claimed, bodies):
+            self._flight.finish(key, call, result=body)
+            self.stats.single_flight_leaders += 1
+            self.stats.responses_200 += 1
+            responses[i] = Response(200, body, body["etag"])
 
     def _cached_endpoint(
         self,

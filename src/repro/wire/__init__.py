@@ -1,0 +1,79 @@
+"""Binary wire format + persistent-connection client for the stats tier.
+
+The service and fleet tiers speak stdlib HTTP/JSON by default. A planner
+fleet polling thousands of datasets pays for that convenience three times
+per request: a fresh TCP connection, JSON text encoding, and one HTTP
+round trip per (dataset, mode, bounds) tuple. This package removes all
+three without adding a dependency:
+
+  `codec`    a compact length-prefixed binary encoding of the same
+             response dicts the JSON endpoints serve. Negotiated per
+             request (`Accept: application/x-ndv-wire`); JSON stays the
+             default and the two encodings decode to bit-identical
+             bodies carrying byte-identical ETags, so a client may switch
+             encodings mid-session without invalidating a single cached
+             tag.
+  `client`   a keep-alive `http.client.HTTPConnection` pool with safe
+             reconnect-on-stale, shared by the router->replica hop and
+             the benchmark client — one TCP connection serves thousands
+             of requests instead of one each.
+
+Batched RPC rides on both: `POST /batch` (service and router tiers)
+carries many estimate tuples in one frame, and the router forwards one
+binary sub-batch per rendezvous-chosen replica over a pooled connection.
+
+Frame byte layout (version 1)
+-----------------------------
+
+    frame    := magic "NDVW" | version u8 (=1) | nsections varint
+                | section*
+    section  := tag varint | length varint | payload[length]
+
+Unknown section tags are skipped (forward compatibility). Version 1
+frames carry exactly two sections:
+
+    tag 1  STRINGS  varint count, then per string: varint byte length +
+                    UTF-8 bytes. Every string in the value tree — dict
+                    keys, column names, ETags — is interned here once and
+                    referenced by index, so a 10,000-column response
+                    names each column exactly once.
+    tag 2  VALUE    one tagged value tree (the response body):
+
+        0x00 null        0x01 false            0x02 true
+        0x03 int         zigzag varint
+        0x04 float       8-byte IEEE-754 little-endian
+        0x05 string      varint string-table index
+        0x06 list        varint n, then n values
+        0x07 dict        varint n, then n x (varint key index, value)
+        0x08 f64 list    varint n, then n x 8-byte LE (all-float lists)
+        0x09 str list    varint n, then n string-table indices
+        0x0A table       dict-of-dicts with one shared key set (the
+                         /estimate `estimates` and /plan `plans` maps):
+                         varint rows, varint cols, col-key indices,
+                         row-name indices, then per column one packed
+                         array: 'F' f64 LE | 'I' zigzag varints |
+                         'B' bool bytes | 'S' string indices | 'V'
+                         tagged values (mixed-type fallback)
+
+All varints are unsigned LEB128; signed integers are zigzag-mapped
+first. Integers of any magnitude survive (no 64-bit clamp), floats are
+bit-exact (the same exactness JSON's shortest-round-trip reprs give),
+and decode order preserves encode order — `decode(encode(body))` equals
+`json.loads(json.dumps(body))` for every JSON-representable body, which
+is the negotiation contract the HTTP layer tests enforce.
+
+Truncated, foreign, or future-versioned frames raise `WireError` with a
+message naming the failure; nothing in here can raise a bare struct or
+index error on hostile input.
+"""
+from repro.wire.client import (  # noqa: F401
+    ConnectionPool,
+    fetch,
+)
+from repro.wire.codec import (  # noqa: F401
+    JSON_CONTENT_TYPE,
+    WIRE_CONTENT_TYPE,
+    WireError,
+    decode_frame,
+    encode_frame,
+)

@@ -1,0 +1,228 @@
+"""Keep-alive HTTP client: a connection pool + a binary-aware `fetch`.
+
+`urllib.request.urlopen` opens a fresh TCP connection per request, which
+dominates warm-request latency once bodies are 304-sized. The service
+tier already speaks HTTP/1.1 with Content-Length (keep-alive capable);
+this module supplies the client half:
+
+  `ConnectionPool`   thread-safe pool of `http.client.HTTPConnection`s
+                     keyed by (host, port). A connection is checked out
+                     for exactly one request and returned on success. A
+                     *reused* connection that fails mid-request (server
+                     idle-timeout, replica kill) is discarded and the
+                     request retried once on a fresh connection — a
+                     fresh connection's failure propagates, so real
+                     outages still look like `FAILOVER_ERRORS`.
+  `fetch`            pooled, content-negotiating replacement for
+                     `repro.service.http.fetch_json`: same
+                     (status, etag, body) contract, plus binary framing
+                     (`Accept: application/x-ndv-wire`) and POST bodies.
+
+Stdlib only; http:// URLs only (the stats tier is plaintext-intra-DC).
+"""
+from __future__ import annotations
+
+import http.client
+import socket
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+from urllib.parse import urlsplit
+
+from repro.wire.codec import (
+    JSON_CONTENT_TYPE,
+    WIRE_CONTENT_TYPE,
+    decode_frame,
+    encode_frame,
+)
+import json
+
+_HostKey = Tuple[str, int]
+
+# Errors that mean "this pooled connection went stale underneath us",
+# worth one retry on a fresh connection. http.client.RemoteDisconnected
+# is a ConnectionResetError; BadStatusLine covers half-closed sockets.
+_STALE_ERRORS = (ConnectionError, BrokenPipeError, http.client.HTTPException, TimeoutError, OSError)
+
+
+class _KeepAliveConnection(http.client.HTTPConnection):
+    """`HTTPConnection` with Nagle disabled.
+
+    A kept-alive socket carrying small request/response pairs hits the
+    Nagle + delayed-ACK interaction: the second small segment of every
+    exchange (headers, then body, written separately by both http.client
+    and http.server) stalls ~40ms waiting for the peer's delayed ACK.
+    TCP_NODELAY removes the stall; applied in `connect()` so it survives
+    http.client's auto-reconnect of a closed connection.
+    """
+
+    def connect(self) -> None:
+        super().connect()
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+
+
+class PoolStats:
+    """Counters for tests and the connection-reuse benchmark."""
+
+    __slots__ = ("opened", "reused", "retried_stale")
+
+    def __init__(self):
+        self.opened = 0
+        self.reused = 0
+        self.retried_stale = 0
+
+    def snapshot(self) -> Dict[str, int]:
+        return {f: getattr(self, f) for f in self.__slots__}
+
+
+class ConnectionPool:
+    """Thread-safe keep-alive pool of plain HTTP connections."""
+
+    def __init__(self, *, max_per_host: int = 8, timeout: float = 30.0):
+        self.max_per_host = max_per_host
+        self.timeout = timeout
+        self.stats = PoolStats()
+        self._lock = threading.Lock()
+        self._idle: Dict[_HostKey, List[http.client.HTTPConnection]] = {}
+        self._closed = False
+
+    # -- checkout / checkin --
+
+    def _checkout(self, key: _HostKey) -> Tuple[http.client.HTTPConnection, bool]:
+        """Return (connection, was_pooled)."""
+        with self._lock:
+            bucket = self._idle.get(key)
+            if bucket:
+                self.stats.reused += 1
+                return bucket.pop(), True
+            self.stats.opened += 1
+        conn = _KeepAliveConnection(key[0], key[1], timeout=self.timeout)
+        return conn, False
+
+    def _checkin(self, key: _HostKey, conn: http.client.HTTPConnection) -> None:
+        with self._lock:
+            if not self._closed:
+                bucket = self._idle.setdefault(key, [])
+                if len(bucket) < self.max_per_host:
+                    bucket.append(conn)
+                    return
+        conn.close()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            idle, self._idle = self._idle, {}
+        for bucket in idle.values():
+            for conn in bucket:
+                conn.close()
+
+    # -- one request --
+
+    def request(
+        self,
+        url: str,
+        *,
+        method: str = "GET",
+        headers: Optional[Dict[str, str]] = None,
+        body: Optional[bytes] = None,
+    ) -> Tuple[int, Dict[str, str], bytes]:
+        """One HTTP exchange; returns (status, lowercased headers, body).
+
+        Retries exactly once, and only when the failed connection came
+        from the pool (a stale keep-alive socket, not a dead server).
+        """
+        parts = urlsplit(url)
+        if parts.scheme != "http":
+            raise ValueError(f"ConnectionPool only speaks http://, got {url!r}")
+        key = (parts.hostname or "localhost", parts.port or 80)
+        path = parts.path or "/"
+        if parts.query:
+            path = f"{path}?{parts.query}"
+
+        last_stale: Optional[BaseException] = None
+        for _ in range(2):
+            conn, was_pooled = self._checkout(key)
+            try:
+                conn.request(method, path, body=body, headers=headers or {})
+                resp = conn.getresponse()
+                payload = resp.read()
+            except _STALE_ERRORS as e:
+                conn.close()
+                if was_pooled:
+                    # Stale keep-alive socket: retry once on a fresh one.
+                    self.stats.retried_stale += 1
+                    last_stale = e
+                    continue
+                raise
+            resp_headers = {k.lower(): v for k, v in resp.getheaders()}
+            if resp.will_close:
+                conn.close()
+            else:
+                self._checkin(key, conn)
+            return resp.status, resp_headers, payload
+        raise last_stale  # both attempts stale — surface the transport error
+
+
+_default_pool: Optional[ConnectionPool] = None
+_default_pool_lock = threading.Lock()
+
+
+def default_pool() -> ConnectionPool:
+    """Process-wide pool shared by callers that don't manage their own."""
+    global _default_pool
+    with _default_pool_lock:
+        if _default_pool is None or _default_pool._closed:
+            _default_pool = ConnectionPool()
+        return _default_pool
+
+
+def fetch(
+    url: str,
+    *,
+    pool: Optional[ConnectionPool] = None,
+    etag: Optional[str] = None,
+    method: str = "GET",
+    payload: Any = None,
+    binary: bool = True,
+    extra_headers: Optional[Dict[str, str]] = None,
+) -> Tuple[int, Optional[str], Any]:
+    """Pooled, encoding-negotiated request; returns (status, etag, body).
+
+    Mirrors `repro.service.http.fetch_json`: 304 yields body None, any
+    JSON/wire error body is decoded and returned with its status.
+    `binary=True` sends `Accept: application/x-ndv-wire`; the body is
+    decoded by the *response's* Content-Type, so a JSON-only server
+    degrades transparently. `payload` (when not None) is sent as the
+    request body in the same encoding that is being accepted.
+    """
+    pool = pool or default_pool()
+    headers: Dict[str, str] = {
+        "Accept": WIRE_CONTENT_TYPE if binary else JSON_CONTENT_TYPE,
+    }
+    if etag:
+        headers["If-None-Match"] = etag
+    if extra_headers:
+        headers.update(extra_headers)
+
+    body_bytes: Optional[bytes] = None
+    if payload is not None:
+        if binary:
+            body_bytes = encode_frame(payload)
+            headers["Content-Type"] = WIRE_CONTENT_TYPE
+        else:
+            body_bytes = json.dumps(payload).encode("utf-8")
+            headers["Content-Type"] = JSON_CONTENT_TYPE
+        if method == "GET":
+            method = "POST"
+
+    status, resp_headers, raw = pool.request(
+        url, method=method, headers=headers, body=body_bytes
+    )
+    resp_etag = resp_headers.get("etag")
+    if status == 304 or not raw:
+        return status, resp_etag, None
+    ctype = resp_headers.get("content-type", JSON_CONTENT_TYPE)
+    if ctype.split(";")[0].strip() == WIRE_CONTENT_TYPE:
+        body = decode_frame(raw)
+    else:
+        body = json.loads(raw.decode("utf-8"))
+    return status, resp_etag, body

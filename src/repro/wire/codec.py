@@ -1,0 +1,409 @@
+"""Length-prefixed binary codec for stats-tier response bodies.
+
+See the package docstring (`repro.wire`) for the full byte layout. The
+contract implemented here: for every JSON-representable value ``x``,
+
+    decode_frame(encode_frame(x)) == json.loads(json.dumps(x))
+
+— same float bits (both paths are exact), same int/float distinction,
+same key order, tuples normalized to lists, non-string dict keys coerced
+exactly as ``json.dumps`` coerces them. That equivalence is what lets the
+HTTP layer negotiate encodings per request while ETags keep naming one
+response, not one (response, encoding) pair.
+
+Stdlib only. Hostile input (truncation, bad magic, future versions,
+out-of-range string indices) raises `WireError`, never a bare struct or
+index error.
+"""
+from __future__ import annotations
+
+import struct
+from typing import Any, Dict, List, Tuple
+
+MAGIC = b"NDVW"
+VERSION = 1
+
+WIRE_CONTENT_TYPE = "application/x-ndv-wire"
+JSON_CONTENT_TYPE = "application/json"
+
+_SECTION_STRINGS = 1
+_SECTION_VALUE = 2
+
+_T_NULL = 0x00
+_T_FALSE = 0x01
+_T_TRUE = 0x02
+_T_INT = 0x03
+_T_FLOAT = 0x04
+_T_STR = 0x05
+_T_LIST = 0x06
+_T_DICT = 0x07
+_T_F64_LIST = 0x08
+_T_STR_LIST = 0x09
+_T_TABLE = 0x0A
+
+# Table column type codes (packed little-endian arrays per column).
+_COL_FLOAT = ord("F")
+_COL_INT = ord("I")
+_COL_BOOL = ord("B")
+_COL_STR = ord("S")
+_COL_ANY = ord("V")
+
+# Varint size ceiling: 128 continuation bytes = ints up to ~2^896. Far
+# beyond any real payload, small enough that a hostile all-0x80 stream
+# cannot grow an unbounded bignum.
+_MAX_VARINT_BYTES = 128
+
+_F64 = struct.Struct("<d")
+
+
+class WireError(ValueError):
+    """Malformed, truncated, or future-versioned wire frame."""
+
+
+# -- varints ------------------------------------------------------------------
+
+
+def _write_uvarint(out: bytearray, n: int) -> None:
+    while True:
+        b = n & 0x7F
+        n >>= 7
+        if n:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return
+
+
+def _zigzag(n: int) -> int:
+    return n * 2 if n >= 0 else -n * 2 - 1
+
+
+def _unzigzag(z: int) -> int:
+    return z // 2 if z % 2 == 0 else -(z + 1) // 2
+
+
+class _Reader:
+    """Bounds-checked byte reader: every underrun is a WireError."""
+
+    __slots__ = ("data", "pos", "end")
+
+    def __init__(self, data: bytes, start: int = 0, end: int = -1):
+        self.data = data
+        self.pos = start
+        self.end = len(data) if end < 0 else end
+
+    def take(self, n: int) -> bytes:
+        if self.pos + n > self.end:
+            raise WireError(
+                f"truncated frame: wanted {n} bytes at offset {self.pos}, "
+                f"have {self.end - self.pos}"
+            )
+        out = self.data[self.pos:self.pos + n]
+        self.pos += n
+        return out
+
+    def byte(self) -> int:
+        if self.pos >= self.end:
+            raise WireError(f"truncated frame at offset {self.pos}")
+        b = self.data[self.pos]
+        self.pos += 1
+        return b
+
+    def uvarint(self) -> int:
+        shift = 0
+        value = 0
+        for i in range(_MAX_VARINT_BYTES):
+            b = self.byte()
+            value |= (b & 0x7F) << shift
+            if not b & 0x80:
+                return value
+            shift += 7
+        raise WireError("varint exceeds the size ceiling")
+
+    @property
+    def exhausted(self) -> bool:
+        return self.pos >= self.end
+
+
+# -- encode -------------------------------------------------------------------
+
+
+def _json_key(key: Any) -> str:
+    """Dict-key coercion, exactly as ``json.dumps`` performs it."""
+    if type(key) is str:
+        return key
+    if key is True:
+        return "true"
+    if key is False:
+        return "false"
+    if key is None:
+        return "null"
+    if type(key) is int or type(key) is float:
+        return repr(key) if type(key) is float else str(key)
+    raise WireError(f"dict key of type {type(key).__name__} is not encodable")
+
+
+class _Encoder:
+    def __init__(self):
+        self.strings: List[str] = []
+        self._index: Dict[str, int] = {}
+        self.body = bytearray()
+
+    def intern(self, s: str) -> int:
+        idx = self._index.get(s)
+        if idx is None:
+            idx = self._index[s] = len(self.strings)
+            self.strings.append(s)
+        return idx
+
+    def value(self, v: Any) -> None:
+        out = self.body
+        t = type(v)
+        if v is None:
+            out.append(_T_NULL)
+        elif v is True:
+            out.append(_T_TRUE)
+        elif v is False:
+            out.append(_T_FALSE)
+        elif t is int:
+            out.append(_T_INT)
+            _write_uvarint(out, _zigzag(v))
+        elif t is float:
+            out.append(_T_FLOAT)
+            out += _F64.pack(v)
+        elif t is str:
+            out.append(_T_STR)
+            _write_uvarint(out, self.intern(v))
+        elif t is list or t is tuple:
+            self._list(list(v))
+        elif t is dict:
+            self._dict(v)
+        else:
+            raise WireError(
+                f"value of type {t.__name__} is not wire-encodable"
+            )
+
+    def _list(self, v: list) -> None:
+        out = self.body
+        if v and all(type(e) is float for e in v):
+            out.append(_T_F64_LIST)
+            _write_uvarint(out, len(v))
+            for e in v:
+                out += _F64.pack(e)
+            return
+        if v and all(type(e) is str for e in v):
+            out.append(_T_STR_LIST)
+            _write_uvarint(out, len(v))
+            for e in v:
+                _write_uvarint(out, self.intern(e))
+            return
+        out.append(_T_LIST)
+        _write_uvarint(out, len(v))
+        for e in v:
+            self.value(e)
+
+    def _dict(self, v: dict) -> None:
+        out = self.body
+        keys = [_json_key(k) for k in v]
+        if len(set(keys)) != len(keys):
+            # json.dumps would silently collapse coerced-key collisions;
+            # refuse instead — the stats tier never produces them.
+            raise WireError("dict keys collide after JSON key coercion")
+        values = list(v.values())
+        cols = self._table_columns(values)
+        if cols is not None:
+            out.append(_T_TABLE)
+            _write_uvarint(out, len(values))           # rows
+            _write_uvarint(out, len(cols))             # cols
+            for ck in cols:
+                _write_uvarint(out, self.intern(ck))
+            for rk in keys:
+                _write_uvarint(out, self.intern(rk))
+            for ci, ck in enumerate(cols):
+                self._table_column([row[ck] for row in values])
+            return
+        out.append(_T_DICT)
+        _write_uvarint(out, len(values))
+        for k, e in zip(keys, values):
+            _write_uvarint(out, self.intern(k))
+            self.value(e)
+
+    @staticmethod
+    def _table_columns(values: list):
+        """Shared column-key tuple if this is a packable table, else None.
+
+        A table is a dict of >= 2 rows whose values are all dicts sharing
+        one key sequence (same keys, same order) with plain-string keys —
+        the /estimate and /plan response maps.
+        """
+        if len(values) < 2 or not all(type(r) is dict for r in values):
+            return None
+        first = list(values[0])
+        if not first or not all(type(k) is str for k in first):
+            return None
+        for row in values[1:]:
+            if list(row) != first:
+                return None
+        return first
+
+    def _table_column(self, cells: list) -> None:
+        out = self.body
+        if all(type(c) is float for c in cells):
+            out.append(_COL_FLOAT)
+            for c in cells:
+                out += _F64.pack(c)
+        elif all(type(c) is bool for c in cells):
+            out.append(_COL_BOOL)
+            out += bytes(int(c) for c in cells)
+        elif all(type(c) is int for c in cells):
+            out.append(_COL_INT)
+            for c in cells:
+                _write_uvarint(out, _zigzag(c))
+        elif all(type(c) is str for c in cells):
+            out.append(_COL_STR)
+            for c in cells:
+                _write_uvarint(out, self.intern(c))
+        else:
+            out.append(_COL_ANY)
+            for c in cells:
+                self.value(c)
+
+
+def encode_frame(obj: Any) -> bytes:
+    """Encode one JSON-representable value as a v1 wire frame."""
+    enc = _Encoder()
+    enc.value(obj)
+
+    strings = bytearray()
+    _write_uvarint(strings, len(enc.strings))
+    for s in enc.strings:
+        raw = s.encode("utf-8")
+        _write_uvarint(strings, len(raw))
+        strings += raw
+
+    frame = bytearray(MAGIC)
+    frame.append(VERSION)
+    _write_uvarint(frame, 2)  # section count
+    for tag, payload in ((_SECTION_STRINGS, strings), (_SECTION_VALUE, enc.body)):
+        _write_uvarint(frame, tag)
+        _write_uvarint(frame, len(payload))
+        frame += payload
+    return bytes(frame)
+
+
+# -- decode -------------------------------------------------------------------
+
+
+class _Decoder:
+    def __init__(self, strings: List[str], reader: _Reader):
+        self.strings = strings
+        self.r = reader
+
+    def string(self) -> str:
+        idx = self.r.uvarint()
+        try:
+            return self.strings[idx]
+        except IndexError:
+            raise WireError(
+                f"string index {idx} out of range "
+                f"(table has {len(self.strings)})"
+            ) from None
+
+    def value(self) -> Any:
+        tag = self.r.byte()
+        if tag == _T_NULL:
+            return None
+        if tag == _T_FALSE:
+            return False
+        if tag == _T_TRUE:
+            return True
+        if tag == _T_INT:
+            return _unzigzag(self.r.uvarint())
+        if tag == _T_FLOAT:
+            return _F64.unpack(self.r.take(8))[0]
+        if tag == _T_STR:
+            return self.string()
+        if tag == _T_LIST:
+            return [self.value() for _ in range(self.r.uvarint())]
+        if tag == _T_DICT:
+            return {
+                self.string(): self.value()
+                for _ in range(self.r.uvarint())
+            }
+        if tag == _T_F64_LIST:
+            n = self.r.uvarint()
+            return [_F64.unpack(self.r.take(8))[0] for _ in range(n)]
+        if tag == _T_STR_LIST:
+            return [self.string() for _ in range(self.r.uvarint())]
+        if tag == _T_TABLE:
+            return self._table()
+        raise WireError(f"unknown value tag 0x{tag:02x}")
+
+    def _table(self) -> dict:
+        rows = self.r.uvarint()
+        cols = self.r.uvarint()
+        col_keys = [self.string() for _ in range(cols)]
+        row_keys = [self.string() for _ in range(rows)]
+        columns = [self._table_column(rows) for _ in range(cols)]
+        return {
+            rk: {ck: columns[ci][ri] for ci, ck in enumerate(col_keys)}
+            for ri, rk in enumerate(row_keys)
+        }
+
+    def _table_column(self, rows: int) -> list:
+        kind = self.r.byte()
+        if kind == _COL_FLOAT:
+            return [_F64.unpack(self.r.take(8))[0] for _ in range(rows)]
+        if kind == _COL_BOOL:
+            return [bool(b) for b in self.r.take(rows)]
+        if kind == _COL_INT:
+            return [_unzigzag(self.r.uvarint()) for _ in range(rows)]
+        if kind == _COL_STR:
+            return [self.string() for _ in range(rows)]
+        if kind == _COL_ANY:
+            return [self.value() for _ in range(rows)]
+        raise WireError(f"unknown table column type 0x{kind:02x}")
+
+
+def decode_frame(data: bytes) -> Any:
+    """Decode a v1 wire frame back to the value it encoded."""
+    if not isinstance(data, (bytes, bytearray, memoryview)):
+        raise WireError(f"frame must be bytes, got {type(data).__name__}")
+    data = bytes(data)
+    if len(data) < len(MAGIC) + 1:
+        raise WireError(f"frame too short ({len(data)} bytes)")
+    if data[:len(MAGIC)] != MAGIC:
+        raise WireError(f"bad magic {data[:len(MAGIC)]!r}; want {MAGIC!r}")
+    version = data[len(MAGIC)]
+    if version != VERSION:
+        raise WireError(f"unsupported wire version {version}; want {VERSION}")
+    r = _Reader(data, start=len(MAGIC) + 1)
+    sections: Dict[int, Tuple[int, int]] = {}
+    for _ in range(r.uvarint()):
+        tag = r.uvarint()
+        length = r.uvarint()
+        start = r.pos
+        r.take(length)  # bounds check + skip
+        sections.setdefault(tag, (start, start + length))
+    for required in (_SECTION_STRINGS, _SECTION_VALUE):
+        if required not in sections:
+            raise WireError(f"frame is missing section {required}")
+
+    s0, s1 = sections[_SECTION_STRINGS]
+    sr = _Reader(data, start=s0, end=s1)
+    strings = []
+    for _ in range(sr.uvarint()):
+        raw = sr.take(sr.uvarint())
+        try:
+            strings.append(raw.decode("utf-8"))
+        except UnicodeDecodeError as e:
+            raise WireError(f"invalid UTF-8 in string table: {e}") from None
+
+    v0, v1 = sections[_SECTION_VALUE]
+    vr = _Reader(data, start=v0, end=v1)
+    value = _Decoder(strings, vr).value()
+    if not vr.exhausted:
+        raise WireError(
+            f"{vr.end - vr.pos} trailing bytes after the value section"
+        )
+    return value

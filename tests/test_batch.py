@@ -1,0 +1,344 @@
+"""Batched estimate RPC: super-pack execution, per-tuple caching, routing.
+
+Pins the acceptance criteria of the batched tier:
+  * `superpack_estimate` answers bit-identically to the per-catalog
+    sequential path, with exactly one engine dispatch per cold
+    (engine, mode, width) group, and writes back through the same
+    per-catalog estimate caches
+  * `StatsService.batch` keeps per-tuple `/estimate` semantics — shared
+    ETags (byte-for-byte on unfiltered tuples), per-tuple 304s/400s,
+    bodies equal to the sequential endpoint — while all cold tuples of a
+    batch run as ONE engine call
+  * the fleet's `POST /batch` spans datasets, answers per-tuple errors in
+    place, and keeps 304s valid across a replica kill mid-stream
+  * `RemoteReplica` carries schema bounds for hostile column names
+    (containing the `:` / `,` delimiters) without corruption
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.catalog import StatsCatalog, SuperpackJob, superpack_estimate
+from repro.columnar.writer import WriterOptions, write_file
+from repro.fleet import (
+    DatasetRegistry,
+    Fleet,
+    LocalReplica,
+    RemoteReplica,
+    ReplicaSet,
+    StatsRequest,
+    StatsRouter,
+)
+from repro.service import (
+    EstimateQuery,
+    StatsServer,
+    StatsService,
+    format_bounds,
+    parse_bounds,
+)
+from repro.wire import ConnectionPool, fetch
+
+
+def _write(root, name, seed, vocab=64, columns=("tok", "val")):
+    rng = np.random.default_rng(seed)
+    data = {}
+    for col in columns:
+        if col.startswith("tok") or ":" in col or "," in col:
+            data[col] = rng.integers(0, vocab, 512).astype(np.int64)
+        else:
+            data[col] = np.round(rng.uniform(0, 100, 512), 1)
+    return write_file(
+        os.path.join(root, name), data,
+        options=WriterOptions(row_group_size=128),
+    )
+
+
+@pytest.fixture()
+def roots(tmp_path):
+    out = {}
+    for name, seed in (("a", 1), ("b", 2)):
+        root = str(tmp_path / name)
+        for i in range(2):
+            _write(root, f"shard_{i:03d}", seed=seed * 10 + i)
+        out[name] = root
+    return out
+
+
+# -- superpack seam -----------------------------------------------------------
+
+
+def test_superpack_matches_sequential_and_counts_dispatches(roots):
+    cat_a = StatsCatalog(roots["a"])
+    cat_b = StatsCatalog(roots["b"])
+    for c in (cat_a, cat_b):
+        c.update()
+    jobs = [
+        SuperpackJob(cat_a),
+        SuperpackJob(cat_b, mode="improved"),
+        SuperpackJob(cat_a, schema_bounds={"tok": 10.0}),
+        SuperpackJob(cat_b),
+    ]
+    result = superpack_estimate(jobs)
+    # two mode groups (paper, improved) over identical widths -> exactly
+    # two engine dispatches for four cold jobs
+    assert result.cold_jobs == 4
+    assert result.engine_calls == 2
+    # bit-identical to the sequential path (fresh catalogs, so the
+    # reference estimates below are their own cold computations)
+    ref_a = StatsCatalog(roots["a"])
+    ref_b = StatsCatalog(roots["b"])
+    for ref in (ref_a, ref_b):
+        ref.update()
+    assert result.estimates[0] == ref_a.estimate()
+    assert result.estimates[1] == ref_b.estimate(mode="improved")
+    assert result.estimates[2] == ref_a.estimate(schema_bounds={"tok": 10.0})
+    assert result.estimates[3] == ref_b.estimate()
+
+
+def test_superpack_warm_rerun_and_cache_writeback(roots):
+    cat = StatsCatalog(roots["a"])
+    cat.update()
+    jobs = [SuperpackJob(cat), SuperpackJob(cat, mode="improved")]
+    first = superpack_estimate(jobs)
+    # paper and improved are distinct dispatch groups
+    assert first.engine_calls == 2
+    assert first.cold_jobs == 2
+
+    second = superpack_estimate(jobs)
+    assert second.engine_calls == 0
+    assert second.cold_jobs == 0
+    assert second.estimates == first.estimates
+
+    # write-back: the catalog's own sequential path is now a cache hit
+    misses = cat.stats.estimate_cache_misses
+    assert cat.estimate(mode="improved") == first.estimates[1]
+    assert cat.stats.estimate_cache_misses == misses
+
+
+# -- service batch ------------------------------------------------------------
+
+
+def test_service_batch_per_tuple_semantics(roots):
+    with StatsService(roots["a"]) as svc:
+        queries = [
+            EstimateQuery(),
+            EstimateQuery(mode="improved"),
+            EstimateQuery(columns=("tok",)),
+            EstimateQuery(schema_bounds={"tok": 8.0}),
+            EstimateQuery(mode="nope"),
+            EstimateQuery(columns=("missing",)),
+        ]
+        out = svc.batch(queries)
+        assert [r.status for r in out] == [200, 200, 200, 200, 400, 400]
+
+        # unfiltered tuple == the sequential endpoint, byte-for-byte etag
+        seq = svc.estimate()
+        assert out[0].etag == seq.etag
+        assert out[0].body == seq.body
+
+        # filtered tuple: narrowed body, distinct etag, columns echoed
+        assert set(out[2].body["estimates"]) == {"tok"}
+        assert out[2].body["columns"] == ["tok"]
+        assert out[2].etag != out[0].etag
+
+        # per-tuple 304s on re-send
+        revalidate = [
+            q._replace(if_none_match=r.etag)
+            for q, r in zip(queries[:4], out[:4])
+        ]
+        again = svc.batch(revalidate)
+        assert [r.status for r in again] == [304] * 4
+        assert [r.etag for r in again] == [r.etag for r in out[:4]]
+        assert all(r.body is None for r in again)
+
+
+def test_service_batch_cold_tuples_share_one_engine_call(roots):
+    with StatsService(roots["a"]) as svc:
+        assert svc.stats.engine_runs == 0
+        out = svc.batch([
+            EstimateQuery(),
+            EstimateQuery(schema_bounds={"tok": 16.0}),
+            EstimateQuery(schema_bounds={"val": 50.0}),
+        ])
+        assert [r.status for r in out] == [200, 200, 200]
+        # three cold tuples, one mode, one width -> ONE engine dispatch
+        assert svc.stats.engine_runs == 1
+        assert svc.stats.single_flight_leaders == 3
+
+
+def test_service_batch_duplicates_coalesce_in_batch(roots):
+    with StatsService(roots["a"]) as svc:
+        out = svc.batch([EstimateQuery(), EstimateQuery()])
+        assert [r.status for r in out] == [200, 200]
+        assert out[0].body == out[1].body
+        assert svc.stats.coalesced_waits == 1
+        assert svc.stats.single_flight_leaders == 1
+        assert svc.stats.engine_runs == 1
+
+
+def test_http_batch_envelope_json_binary_identical(roots):
+    with StatsServer(StatsService(roots["a"])) as srv:
+        pool = ConnectionPool()
+        payload = {"tuples": [
+            {},
+            {"mode": "improved"},
+            {"columns": ["tok"], "bounds": {"tok": 8.0}},
+        ]}
+        sj, _, envj = fetch(srv.url + "/batch", pool=pool,
+                            method="POST", payload=payload, binary=False)
+        sw, _, envw = fetch(srv.url + "/batch", pool=pool,
+                            method="POST", payload=payload, binary=True)
+        assert (sj, sw) == (200, 200)
+        assert envj == envw
+        assert [e["status"] for e in envj["responses"]] == [200, 200, 200]
+        # bounds accepted in query-string syntax too
+        s2, _, env2 = fetch(
+            srv.url + "/batch", pool=pool, method="POST",
+            payload={"tuples": [{"columns": ["tok"], "bounds": "tok:8"}]},
+        )
+        assert env2["responses"][0] == envj["responses"][2]
+
+
+def test_http_batch_rejects_junk(roots):
+    with StatsServer(StatsService(roots["a"])) as srv:
+        pool = ConnectionPool()
+        for payload in (
+            {"tuples": "nope"},
+            {"tuples": [{"unknown_field": 1}]},
+            {"tuples": [{"bounds": 7}]},
+        ):
+            status, _, body = fetch(srv.url + "/batch", pool=pool,
+                                    method="POST", payload=payload)
+            assert status == 400 and "error" in body
+
+
+# -- fleet batch --------------------------------------------------------------
+
+
+def test_router_batch_spans_datasets_with_per_tuple_errors(roots):
+    reg = DatasetRegistry()
+    reg.add("wh", "a", roots["a"])
+    reg.add("wh", "b", roots["b"])
+    fleet = Fleet(reg, replicas_per_dataset=2)
+    with StatsRouter(fleet) as router:
+        pool = ConnectionPool()
+        tuples = [
+            {"namespace": "wh", "dataset": "a"},
+            {"namespace": "wh", "dataset": "b", "mode": "improved"},
+            {"namespace": "wh", "dataset": "a", "columns": ["tok"]},
+            {"namespace": "wh", "dataset": "ghost"},
+        ]
+        status, _, env = fetch(router.url + "/batch", pool=pool,
+                               method="POST", payload={"tuples": tuples})
+        assert status == 200
+        statuses = [e["status"] for e in env["responses"]]
+        assert statuses == [200, 200, 200, 404]
+
+        # unfiltered tuple validates against the routed singleton endpoint
+        s1, etag1, body1 = fetch(
+            router.url + "/wh/a/estimate", pool=pool, binary=False
+        )
+        assert (s1, etag1) == (200, env["responses"][0]["etag"])
+        assert body1 == env["responses"][0]["body"]
+
+        # per-tuple 304s, surviving a replica kill mid-stream
+        revalidate = [dict(t) for t in tuples[:3]]
+        for t, e in zip(revalidate, env["responses"]):
+            t["if_none_match"] = e["etag"]
+        fleet.sets["wh/a"].replicas[0].kill()
+        status, _, env2 = fetch(router.url + "/batch", pool=pool,
+                                method="POST",
+                                payload={"tuples": revalidate})
+        assert status == 200
+        assert [e["status"] for e in env2["responses"]] == [304, 304, 304]
+        assert [e["etag"] for e in env2["responses"]] == [
+            e["etag"] for e in env["responses"][:3]
+        ]
+        assert fleet.stats.batches == 2
+        assert fleet.stats.batch_tuples == 7
+
+
+def test_call_batch_all_replicas_down_answers_503_in_place(roots):
+    replicas = [
+        LocalReplica(f"r{i}", roots["a"]).start() for i in range(2)
+    ]
+    rset = ReplicaSet("wh/a", replicas)
+    try:
+        for r in replicas:
+            r.kill()
+        out, _ = rset.call_batch([
+            StatsRequest("estimate"),
+            StatsRequest("estimate", mode="improved"),
+        ])
+        assert [r.status for r in out] == [503, 503]
+        assert all("failed" in r.body["error"] for r in out)
+    finally:
+        for r in replicas:
+            r.stop()
+
+
+def test_request_identity_stable_without_columns():
+    # pre-existing rendezvous placements must not move: the identity tuple
+    # only grows when a columns filter is actually present
+    plain = StatsRequest("estimate", mode="improved")
+    assert plain.identity == ("estimate", "improved", ())
+    filtered = StatsRequest("estimate", columns=("tok",))
+    assert filtered.identity == ("estimate", "paper", (), ("tok",))
+
+
+# -- hostile-name bounds serialization (regression) ---------------------------
+
+HOSTILE = "w:eird,col"
+
+
+def test_format_parse_bounds_roundtrip_hostile_names():
+    bounds = {HOSTILE: 3.0, "a,b": 2.0, "c:d": 1.5, "plain": 9.0}
+    assert parse_bounds(format_bounds(bounds)) == bounds
+    # plain names keep the readable unescaped form
+    assert format_bounds({"plain": 9.0}) == "plain:9.0"
+
+
+def test_remote_replica_carries_hostile_bounds(tmp_path):
+    root = str(tmp_path / "hostile")
+    _write(root, "s0", seed=3, columns=("tok", HOSTILE))
+    with StatsServer(StatsService(root)) as srv:
+        replica = RemoteReplica("r0", srv.url)
+        try:
+            resp = replica.handle(StatsRequest(
+                "estimate", schema_bounds=((HOSTILE, 3.0),)
+            ))
+            assert resp.status == 200
+            # the bound arrived intact and applied to the right column
+            assert resp.body["schema_bounds"] == {HOSTILE: 3.0}
+            assert resp.body["estimates"][HOSTILE]["ndv"] <= 3.0
+            # and the unbounded estimate differs (the bound did something)
+            free = replica.handle(StatsRequest("estimate"))
+            assert free.body["estimates"][HOSTILE]["ndv"] > 3.0
+        finally:
+            replica.stop()
+
+
+def test_remote_replica_batch_roundtrip(roots):
+    with StatsServer(StatsService(roots["a"])) as srv:
+        replica = RemoteReplica("r0", srv.url)
+        try:
+            reqs = [
+                StatsRequest("estimate"),
+                StatsRequest("estimate", mode="improved",
+                             schema_bounds=(("tok", 8.0),)),
+                StatsRequest("estimate", columns=("val",)),
+            ]
+            out = replica.handle_batch(reqs)
+            assert [r.status for r in out] == [200, 200, 200]
+            assert set(out[2].body["estimates"]) == {"val"}
+            # one keep-alive socket carried the whole exchange
+            assert replica.pool.stats.snapshot()["opened"] == 1
+            again = replica.handle_batch([
+                dataclasses.replace(r, if_none_match=o.etag)
+                for r, o in zip(reqs, out)
+            ])
+            assert [r.status for r in again] == [304, 304, 304]
+        finally:
+            replica.stop()

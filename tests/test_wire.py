@@ -1,0 +1,248 @@
+"""Binary wire codec + connection pool: framing, JSON parity, negotiation.
+
+The codec's whole contract is `decode_frame(encode_frame(x)) ==
+json.loads(json.dumps(x))` — byte-level compactness is allowed to vary,
+decoded semantics are not. These tests pin that equivalence (including
+float bit-exactness and JSON's dict-key coercion), the malformed-input
+behavior (every truncation/corruption answers `WireError`, never a raw
+struct/index error), and the live-server guarantees: content negotiation
+yields bit-identical bodies with byte-identical ETags across encodings,
+and the keep-alive `ConnectionPool` reuses sockets and survives stale
+keep-alives via a one-shot retry.
+"""
+import json
+import math
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.columnar.writer import WriterOptions, write_file
+from repro.service import StatsServer, StatsService, fetch_json
+from repro.wire import (
+    JSON_CONTENT_TYPE,
+    WIRE_CONTENT_TYPE,
+    ConnectionPool,
+    WireError,
+    decode_frame,
+    encode_frame,
+    fetch,
+)
+
+
+def _json_roundtrip(x):
+    return json.loads(json.dumps(x))
+
+
+PAYLOADS = [
+    None,
+    True,
+    False,
+    0,
+    -1,
+    63,
+    64,
+    -64,
+    -65,
+    2**70,
+    -(2**70),
+    0.0,
+    -1.5,
+    1e308,
+    "",
+    "héllo\x00wörld",
+    [],
+    {},
+    [1, "two", None, [3.0, {"k": False}]],
+    {"a": 1, "b": [1.0, 2.0, 3.0], "c": {"nested": "yes"}},
+    {"strings": ["a", "b", "a", "b", "a"]},
+    # table-shaped: dict-of-dicts sharing one key sequence (the /estimate
+    # body shape the 0x0A section exists for)
+    {
+        f"col{i}": {"ndv": float(i), "lo": -i, "hi": i * 2, "ok": i % 2 == 0}
+        for i in range(8)
+    },
+    # ragged rows: must fall back to plain dict encoding, still roundtrip
+    {"a": {"x": 1, "y": 2}, "b": {"x": 1}, "c": {"y": 2, "x": 1}},
+]
+
+
+@pytest.mark.parametrize("payload", PAYLOADS, ids=range(len(PAYLOADS)))
+def test_roundtrip_matches_json_semantics(payload):
+    assert decode_frame(encode_frame(payload)) == _json_roundtrip(payload)
+
+
+def test_float_bits_exact():
+    for v in (0.0, -0.0, 1e-300, -1e308, math.inf, -math.inf, math.pi):
+        (out,) = decode_frame(encode_frame([v]))
+        assert struct.pack("<d", out) == struct.pack("<d", v)
+    (out,) = decode_frame(encode_frame([math.nan]))
+    assert math.isnan(out)
+
+
+def test_dict_key_coercion_matches_json():
+    # json.dumps coerces non-str keys; the codec must match it exactly so
+    # JSON and binary decode to the same dict.
+    payload = {1: "int", 2.5: "float", True: "bool", None: "none"}
+    assert decode_frame(encode_frame(payload)) == _json_roundtrip(payload)
+
+
+def test_dict_key_collision_is_wire_error():
+    # {"1": ..., 1: ...} silently collapses in json.dumps (last wins by
+    # insertion order); the codec refuses instead of guessing.
+    with pytest.raises(WireError):
+        encode_frame({"1": "str", 1: "int"})
+
+
+def test_table_shape_beats_json_size():
+    body = {
+        "estimates": {
+            f"column_{i:04d}": {
+                "ndv": float(i * 7), "low": 0.0, "high": float(i),
+                "mode": "paper", "bounded": i % 3 == 0,
+            }
+            for i in range(256)
+        }
+    }
+    frame = encode_frame(body)
+    assert decode_frame(frame) == _json_roundtrip(body)
+    assert len(frame) < len(json.dumps(body).encode())
+
+
+def test_every_truncation_is_a_clean_wire_error():
+    frame = encode_frame(PAYLOADS[-2])
+    for cut in range(len(frame)):
+        with pytest.raises(WireError):
+            decode_frame(frame[:cut])
+
+
+def test_bad_magic_and_version():
+    frame = encode_frame({"a": 1})
+    with pytest.raises(WireError):
+        decode_frame(b"XXXX" + frame[4:])
+    with pytest.raises(WireError):
+        decode_frame(frame[:4] + bytes([frame[4] + 1]) + frame[5:])
+    with pytest.raises(WireError):
+        decode_frame(b"")
+
+
+def test_corrupted_utf8_is_a_wire_error():
+    frame = bytearray(encode_frame(["abcd"]))
+    i = frame.index(b"abcd")
+    frame[i:i + 4] = b"\xff\xfe\xfd\xfc"
+    with pytest.raises(WireError):
+        decode_frame(bytes(frame))
+
+
+def test_hypothesis_roundtrip_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    scalars = st.one_of(
+        st.none(),
+        st.booleans(),
+        st.integers(min_value=-(2**80), max_value=2**80),
+        st.floats(allow_nan=False),  # NaN != NaN breaks == comparison only
+        st.text(max_size=20),
+    )
+    jsonish = st.recursive(
+        scalars,
+        lambda children: st.one_of(
+            st.lists(children, max_size=6),
+            st.dictionaries(st.text(max_size=8), children, max_size=6),
+        ),
+        max_leaves=25,
+    )
+
+    @given(jsonish)
+    @settings(max_examples=150, deadline=None)
+    def roundtrip(payload):
+        assert decode_frame(encode_frame(payload)) == _json_roundtrip(payload)
+
+    roundtrip()
+
+
+# -- live server: negotiation + pooling ---------------------------------------
+
+
+def _write(root, name, seed):
+    rng = np.random.default_rng(seed)
+    return write_file(
+        os.path.join(root, name),
+        {
+            "tok": rng.integers(0, 64, 512).astype(np.int64),
+            "val": np.round(rng.uniform(0, 100, 512), 1),
+        },
+        options=WriterOptions(row_group_size=128),
+    )
+
+
+@pytest.fixture()
+def server(tmp_path):
+    root = str(tmp_path / "ds")
+    for i in range(2):
+        _write(root, f"shard_{i:03d}", seed=i)
+    with StatsServer(StatsService(root)) as srv:
+        yield srv
+
+
+def test_binary_and_json_decode_bit_identical(server):
+    pool = ConnectionPool()
+    sj, ej, bj = fetch(server.url + "/estimate", pool=pool, binary=False)
+    sw, ew, bw = fetch(server.url + "/estimate", pool=pool, binary=True)
+    assert (sj, sw) == (200, 200)
+    assert ej == ew                      # byte-identical ETags
+    assert bj == bw                      # bit-identical decoded bodies
+    # and both agree with the plain urllib JSON client
+    s2, e2, b2 = fetch_json(server.url + "/estimate")
+    assert (s2, e2, b2) == (200, ej, bj)
+
+
+def test_binary_revalidation_304(server):
+    pool = ConnectionPool()
+    _, etag, _ = fetch(server.url + "/estimate", pool=pool, binary=True)
+    status, etag2, body = fetch(
+        server.url + "/estimate", pool=pool, etag=etag, binary=True
+    )
+    assert (status, etag2, body) == (304, etag, None)
+
+
+def test_pool_reuses_connections(server):
+    pool = ConnectionPool()
+    for _ in range(4):
+        status, _, _ = fetch(server.url + "/health", pool=pool)
+        assert status == 200
+    snap = pool.stats.snapshot()
+    assert snap["opened"] == 1
+    assert snap["reused"] == 3
+    pool.close()
+
+
+def test_pool_retries_stale_keepalive(server):
+    pool = ConnectionPool()
+    status, _, _ = fetch(server.url + "/health", pool=pool)
+    assert status == 200
+    # Sabotage the parked socket: the next request hits a dead keep-alive
+    # connection and must transparently retry on a fresh one.
+    key = (server.host, server.port)
+    with pool._lock:
+        for conn in pool._idle[key]:
+            conn.sock.close()
+    status, _, body = fetch(server.url + "/health", pool=pool)
+    assert status == 200 and body["status"] == "serving"
+    assert pool.stats.snapshot()["retried_stale"] >= 1
+
+
+def test_wire_content_type_header(server):
+    pool = ConnectionPool()
+    status, headers, raw = pool.request(
+        server.url + "/health",
+        headers={"Accept": WIRE_CONTENT_TYPE},
+    )
+    assert status == 200
+    assert headers["content-type"] == WIRE_CONTENT_TYPE
+    assert decode_frame(raw)["status"] == "serving"
+    status, headers, raw = pool.request(server.url + "/health", headers={})
+    assert headers["content-type"] == JSON_CONTENT_TYPE
+    assert json.loads(raw)["status"] == "serving"
