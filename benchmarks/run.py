@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   engine_scale.py — EstimationEngine local/sharded/chunked/composed throughput
   fleet_latency.py — routed vs direct overhead, failover, shared-spill warmth
   kernels.py      — Pallas kernel suite throughput
+  obs_overhead.py — telemetry tier on-vs-off warm latency + ETag parity
   service_latency.py — stats-service cold/warm/304 latency + throughput
   warehouse.py    — TPC-H-shaped lineitem accuracy via the catalog (§10.1)
 
@@ -86,6 +87,7 @@ def main(argv=None) -> None:
         engine_scale,
         fleet_latency,
         kernels,
+        obs_overhead,
         service_latency,
         warehouse,
     )
@@ -97,6 +99,7 @@ def main(argv=None) -> None:
         ("engine_scale", engine_scale),
         ("service_latency", service_latency),
         ("fleet_latency", fleet_latency),
+        ("obs_overhead", obs_overhead),
         ("baselines", baselines),
         ("batch_memory", batch_memory),
         ("complexity", complexity),

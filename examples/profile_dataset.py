@@ -62,6 +62,31 @@ super-packed engine call on the serving side:
     ]
     fetch("http://127.0.0.1:8090/batch", pool=pool, method="POST",
           payload={"tuples": tuples})    # responses[0]["status"] == 304
+
+Both tiers expose the unified telemetry tier (`repro.obs`). `/metrics`
+is Prometheus text exposition — request counters/latency histograms by
+tier/route/status next to the engine, catalog, ingest, and connection
+pool counters; the router re-emits every REMOTE replica's scrape under
+a `replica="<name>"` label, so one scrape covers the fleet:
+
+    print(urllib.request.urlopen("http://127.0.0.1:8090/metrics")
+          .read().decode())
+    # ndv_http_requests_total{route="batch",status="200",tier="router"} 2
+    # ndv_http_request_seconds_bucket{le="0.005",route="batch",...} 2
+    # ndv_engine_dispatches_total{...} 1 ...
+
+`/debug/traces` returns recent request traces as JSON span trees — a
+`/batch` shows the router span fanning out to per-replica sub-batches,
+the service's super-pack, and the engine's pack/dispatch/d2h children,
+all under one trace id (propagated via the `Traceparent` header and a
+tagged section of the binary frame):
+
+    t = json.load(urllib.request.urlopen(
+        "http://127.0.0.1:8090/debug/traces?limit=5"))["traces"][0]
+    def show(n, d=0):
+        print("  " * d, n["name"], n["duration_ms"], "ms")
+        [show(c, d + 1) for c in n["children"]]
+    show(t)   # router.batch > replica.sub_batch > service.superpack > ...
 """
 import argparse
 import os

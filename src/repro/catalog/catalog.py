@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.catalog.merge import merge_column_metadata
 from repro.catalog.packer import BatchPacker
+from repro.obs import span as _obs_span
 from repro.catalog.source import MetadataSource, PQLiteMetadataSource
 from repro.core.ndv.estimator import estimates_from_batch
 from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimate
@@ -414,7 +415,8 @@ class StatsCatalog:
         batch = self._batch_cache.get(key)
         if batch is None:
             cols = [self._merged[n] for n in self._column_names]
-            batch = self.packer.pack(cols)
+            with _obs_span("engine.pack", columns=len(cols)):
+                batch = self.packer.pack(cols)
             self.stats.packs += 1
             self._cache_put(self._batch_cache, key, batch)
         else:
@@ -422,8 +424,9 @@ class StatsCatalog:
         # No target device: placement stays uncommitted (default device), so
         # the sharded/composed strategies remain free to lay the batch out
         # across their mesh without fighting a pinned placement.
-        resident = jax.device_put(batch)
-        jax.block_until_ready(resident)
+        with _obs_span("engine.h2d", batch=int(batch.batch)):
+            resident = jax.device_put(batch)
+            jax.block_until_ready(resident)
         self.stats.device_puts += 1
         self._cache_put(self._resident_cache, key, resident)
         return resident
@@ -543,7 +546,8 @@ class StatsCatalog:
         arr = self.bounds_array(schema_bounds, batch.batch)
         sb = None if arr is None else jnp.asarray(arr)
         out = engine.estimate(batch, sb, mode=mode)
-        ests = estimates_from_batch(out, batch, self._column_names)
+        with _obs_span("engine.d2h", columns=len(self._column_names)):
+            ests = estimates_from_batch(out, batch, self._column_names)
         result = {e.column_name: e for e in ests}
         self._cache_put(self._estimate_cache, key, result)
         return dict(result)

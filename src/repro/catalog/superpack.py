@@ -34,6 +34,7 @@ import jax.numpy as jnp
 from repro.catalog.packer import concat_batches
 from repro.core.ndv.estimator import estimates_from_batch
 from repro.core.ndv.types import NDVEstimate
+from repro.obs import span as _obs_span
 
 import numpy as np
 
@@ -136,9 +137,10 @@ def _run_group(eng, members: List[_ColdJob], results: list) -> None:
         sb = jnp.asarray(arr)
 
     out = eng.estimate(batch, sb, mode=mode)
-    for m, off in zip(members, offsets):
-        names = m.job.catalog.column_names
-        ests = estimates_from_batch(out, batch, names, offset=off)
-        result = {e.column_name: e for e in ests}
-        m.job.catalog.estimate_cache_store(m.key, result)
-        results[m.index] = dict(result)
+    with _obs_span("engine.d2h", jobs=len(members), batch=int(batch.batch)):
+        for m, off in zip(members, offsets):
+            names = m.job.catalog.column_names
+            ests = estimates_from_batch(out, batch, names, offset=off)
+            result = {e.column_name: e for e in ests}
+            m.job.catalog.estimate_cache_store(m.key, result)
+            results[m.index] = dict(result)

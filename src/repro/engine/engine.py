@@ -18,6 +18,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.catalog.packer import BatchPacker
+from repro.obs import registry, span as _obs_span
 from repro.core.ndv.estimator import (
     BatchEstimates,
     estimate_batch,
@@ -40,6 +41,11 @@ AUTO_MIN_BATCH = 1024
 AUTO_MAX_BATCH = 1 << 20
 
 logger = logging.getLogger(__name__)
+
+_DISPATCHES = registry().counter(
+    "ndv_engine_dispatches_total",
+    "Engine estimate() dispatches, by resolved strategy and mode",
+)
 
 
 def detect_device_memory() -> Optional[int]:
@@ -301,16 +307,21 @@ class EstimationEngine:
         mixes information across the B axis, so re-tiling B is exact.
         """
         strategy = self.resolve_strategy(batch.batch)
-        if strategy == "sharded":
-            return self._estimate_sharded(batch, schema_bound, mode)
-        if strategy == "chunked":
-            return self._estimate_chunked(batch, schema_bound, mode)
-        if strategy == "composed":
-            return self._estimate_composed(batch, schema_bound, mode)
-        return estimate_batch(
-            batch, schema_bound, mode=mode,
-            backend=self.config.backend, fuse=self.config.fuse,
-        )
+        _DISPATCHES.inc(strategy=strategy, mode=mode)
+        with _obs_span(
+            "engine.dispatch",
+            strategy=strategy, mode=mode, batch=int(batch.batch),
+        ):
+            if strategy == "sharded":
+                return self._estimate_sharded(batch, schema_bound, mode)
+            if strategy == "chunked":
+                return self._estimate_chunked(batch, schema_bound, mode)
+            if strategy == "composed":
+                return self._estimate_composed(batch, schema_bound, mode)
+            return estimate_batch(
+                batch, schema_bound, mode=mode,
+                backend=self.config.backend, fuse=self.config.fuse,
+            )
 
     def _padded_to_multiple(self, batch, schema_bound, multiple):
         """(batch, schema_bound, original B) with B padded to `multiple`."""

@@ -40,6 +40,7 @@ from typing import Dict, List, Optional, Tuple
 from urllib.parse import urlencode
 
 from repro.engine import EngineConfig, EstimationEngine
+from repro.obs import span as _obs_span
 from repro.service import (
     EstimateQuery,
     Response,
@@ -153,6 +154,7 @@ class LocalReplica:
             poll_interval=poll_interval,
             max_workers=max_workers,
             shared_spill=True,
+            name=name,  # /metrics series labeled {service="<replica name>"}
         )
         self._killed = False
 
@@ -228,7 +230,7 @@ class RemoteReplica:
         self.timeout = timeout
         self.binary = binary
         self._own_pool = pool is None
-        self.pool = pool or ConnectionPool(timeout=timeout)
+        self.pool = pool or ConnectionPool(timeout=timeout, name=name)
 
     def start(self) -> "RemoteReplica":
         return self
@@ -288,6 +290,24 @@ class RemoteReplica:
         # LocalReplica propagating the exception (see FAILOVER_ERRORS).
         # Replica-local sickness is the probe loop's job to catch.
         return Response(status, body, etag)
+
+    def scrape_metrics(self) -> Optional[str]:
+        """This replica's `/metrics` exposition text, or None if unreachable.
+
+        Only REMOTE replicas are scraped by the router's aggregate —
+        local replicas already write the router process's own registry,
+        so re-scraping them would double-count every series.
+        """
+        try:
+            status, _, raw = self.pool.request(self.base_url + "/metrics")
+        except Exception:
+            return None
+        if status != 200:
+            return None
+        try:
+            return raw.decode("utf-8")
+        except UnicodeDecodeError:
+            return None
 
     def handle_batch(self, reqs: List[StatsRequest]) -> List[Response]:
         """Forward one sub-batch as a single binary `POST /batch` frame."""
@@ -406,7 +426,14 @@ class ReplicaSet:
         errors: List[str] = []
         for attempt, replica in enumerate(self._candidates(req.identity), 1):
             try:
-                resp = replica.handle(req)
+                # Each attempt gets its own span, parented to the CURRENT
+                # (router) span — so a failed attempt's retry shows up as
+                # a re-parented sibling, never an orphan of the dead span.
+                with _obs_span(
+                    "replica.call",
+                    replica=replica.name, kind=req.kind, attempt=attempt,
+                ):
+                    resp = replica.handle(req)
             except FAILOVER_ERRORS as e:
                 self._mark(replica.name, False, f"{type(e).__name__}: {e}")
                 errors.append(f"{replica.name}: {type(e).__name__}: {e}")
@@ -453,9 +480,18 @@ class ReplicaSet:
                 replica = chosen[name]
                 dispatches += 1
                 try:
-                    answers = replica.handle_batch(
-                        [reqs[i] for i in indices]
-                    )
+                    # One span per dispatch attempt, parented to the
+                    # current (router) span: a requeued sub-batch's retry
+                    # span is a SIBLING of the failed attempt's span (its
+                    # `error` attribute marks the failure), not a child of
+                    # it — failover re-parents instead of orphaning.
+                    with _obs_span(
+                        "replica.sub_batch",
+                        replica=name, tuples=len(indices),
+                    ):
+                        answers = replica.handle_batch(
+                            [reqs[i] for i in indices]
+                        )
                 except FAILOVER_ERRORS as e:
                     self._mark(name, False, f"{type(e).__name__}: {e}")
                     with self._mu:
@@ -514,8 +550,16 @@ class ReplicaSet:
         return results
 
     def health_view(self) -> dict:
+        # Connection-pool counters (opened/reused/retried_stale) per
+        # replica that carries its own pool (remote hops) — collected
+        # since PR 7 but previously never exposed over HTTP.
+        pools = {
+            r.name: r.pool.stats.snapshot()
+            for r in self.replicas
+            if getattr(r, "pool", None) is not None
+        }
         with self._mu:
-            return {
+            view = {
                 "replicas": {
                     name: {
                         "healthy": rec.healthy,
@@ -529,3 +573,6 @@ class ReplicaSet:
                 "total": len(self.replicas),
                 "failovers": self.failovers,
             }
+        if pools:
+            view["pools"] = pools
+        return view

@@ -9,6 +9,10 @@ over it, the same shape as `repro.service.StatsServer`:
 
   GET  /datasets                              registry + replica health
   GET  /health                                router + per-dataset health
+                                              (incl. connection-pool stats)
+  GET  /metrics                               Prometheus exposition, router +
+                                              remote replicas (`replica` label)
+  GET  /debug/traces?limit=N                  recent traces, JSON span trees
   POST /refresh                               broadcast refresh, all datasets
   POST /batch                                 many estimate tuples, one frame
   GET  /{ns}/{ds}/columns                     routed        [ETag passthrough]
@@ -48,6 +52,8 @@ from repro.fleet.replica import (
     ReplicaSet,
     StatsRequest,
 )
+from repro.obs import WIDTH_BUCKETS, registry as obs_registry
+from repro.obs.metrics import add_label_to_exposition
 from repro.service import (
     Response,
     batch_envelope,
@@ -57,6 +63,14 @@ from repro.service import (
 from repro.service.http import JSONResponseHandler
 
 ROUTED_KINDS = ("columns", "estimate", "plan", "health")
+
+# Same metric family the service tier observes — the `tier` label keeps
+# router envelopes and replica sub-batches distinguishable.
+_BATCH_WIDTH = obs_registry().histogram(
+    "ndv_batch_tuples",
+    "Estimate tuples carried per /batch request",
+    WIDTH_BUCKETS,
+)
 
 
 def default_replica_factory(
@@ -119,6 +133,7 @@ class Fleet:
         }
         self._stop = threading.Event()
         self._prober: Optional[threading.Thread] = None
+        obs_registry().register_stats_view("ndv_fleet", {}, self.stats)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -258,6 +273,31 @@ class Fleet:
         }
         return Response(200, body, None)
 
+    def metrics_text(self) -> str:
+        """Aggregate exposition: this process's registry plus every
+        REMOTE replica's `/metrics` scrape re-emitted under a
+        `replica="<name>"` label.
+
+        Local replicas are deliberately not scraped — they already write
+        this process's registry, so re-emitting them would double-count.
+        Remote sample lines are appended comment-free (the aggregate is a
+        concatenation; duplicate TYPE headers would be invalid), and an
+        unreachable replica contributes nothing rather than failing the
+        scrape.
+        """
+        parts = [obs_registry().exposition()]
+        for rset in self.sets.values():
+            for replica in rset.replicas:
+                scrape = getattr(replica, "scrape_metrics", None)
+                if scrape is None:
+                    continue
+                text = scrape()
+                if text:
+                    parts.append(
+                        add_label_to_exposition(text, {"replica": replica.name})
+                    )
+        return "".join(parts)
+
     def health(self) -> Response:
         self._bump(requests=1)
         views = {key: rset.health_view() for key, rset in self.sets.items()}
@@ -279,6 +319,22 @@ class _RouterHandler(JSONResponseHandler):
 
     fleet: Fleet  # injected by make_router_handler
     server_version = "ndv-stats-router"
+    tier = "router"
+
+    _TOP_ROUTES = frozenset({"datasets", "health", "refresh", "batch"})
+
+    def _route_label(self, path: str) -> str:
+        # `/{ns}/{ds}/{kind}` collapses to the kind — dataset names must
+        # not mint unbounded label values.
+        parts = [p for p in path.split("/") if p]
+        if len(parts) == 1 and parts[0] in self._TOP_ROUTES:
+            return parts[0]
+        if len(parts) == 3 and parts[2] in ROUTED_KINDS + ("refresh",):
+            return parts[2]
+        return "other"
+
+    def _metrics_text(self) -> str:
+        return self.fleet.metrics_text()
 
     def _split(self) -> Tuple[List[str], dict]:
         url = urlsplit(self.path)
@@ -306,7 +362,7 @@ class _RouterHandler(JSONResponseHandler):
             items.append((ns, ds, StatsRequest.from_query(query)))
         return items
 
-    def do_GET(self) -> None:  # noqa: N802 — http.server API
+    def handle_get(self, url) -> None:
         parts, query = self._split()
         try:
             if parts == ["datasets"]:
@@ -335,7 +391,7 @@ class _RouterHandler(JSONResponseHandler):
         except Exception as e:
             self._error(500, f"{type(e).__name__}: {e}")
 
-    def do_POST(self) -> None:  # noqa: N802 — http.server API
+    def handle_post(self, url) -> None:
         parts, _ = self._split()
         try:
             if parts == ["refresh"]:
@@ -345,6 +401,7 @@ class _RouterHandler(JSONResponseHandler):
                     items = self._parse_batch(self._read_body())
                 except ValueError as e:
                     return self._error(400, str(e))
+                _BATCH_WIDTH.observe(len(items), tier=self.tier)
                 return self._send(batch_envelope(self.fleet.batch(items)))
             if len(parts) == 3 and parts[2] == "refresh":
                 return self._send(self.fleet.refresh(parts[0], parts[1]))
@@ -354,8 +411,12 @@ class _RouterHandler(JSONResponseHandler):
             self._error(500, f"{type(e).__name__}: {e}")
 
 
-def make_router_handler(fleet: Fleet):
-    return type("BoundRouterHandler", (_RouterHandler,), {"fleet": fleet})
+def make_router_handler(fleet: Fleet, *, slow_request_ms: Optional[float] = None):
+    return type(
+        "BoundRouterHandler",
+        (_RouterHandler,),
+        {"fleet": fleet, "slow_request_ms": slow_request_ms},
+    )
 
 
 class StatsRouter:
@@ -367,10 +428,17 @@ class StatsRouter:
     the health prober). Usable as a context manager.
     """
 
-    def __init__(self, fleet: Fleet, host: str = "127.0.0.1", port: int = 0):
+    def __init__(
+        self,
+        fleet: Fleet,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        slow_request_ms: Optional[float] = None,
+    ):
         self.fleet = fleet
         self.httpd = ThreadingHTTPServer(
-            (host, port), make_router_handler(fleet)
+            (host, port),
+            make_router_handler(fleet, slow_request_ms=slow_request_ms),
         )
         self.host, self.port = self.httpd.server_address[:2]
         self._thread: Optional[threading.Thread] = None

@@ -61,6 +61,9 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--max-batch", default="auto",
                     help='chunk budget: a power of two, or "auto" to derive '
                          "it from device memory")
+    ap.add_argument("--slow-request-ms", type=float, default=None,
+                    help="log one structured line per request slower than "
+                         "this many milliseconds (default: off)")
     ap.add_argument("--smoke", action="store_true",
                     help="boot 2 replicas x 2 temp datasets on an ephemeral "
                          "port, run the scripted failover client, exit")
@@ -83,7 +86,12 @@ def _make_router(args: argparse.Namespace, registry: DatasetRegistry) -> StatsRo
         probe_interval=args.probe_interval or None,
         poll_interval=args.refresh_interval or None,
     )
-    return StatsRouter(fleet, host=args.host, port=args.port)
+    return StatsRouter(
+        fleet,
+        host=args.host,
+        port=args.port,
+        slow_request_ms=args.slow_request_ms,
+    )
 
 
 def _smoke_dataset(root: str, seed: int) -> str:
@@ -199,12 +207,37 @@ def run_smoke(args: argparse.Namespace) -> int:
 
         status, _, health = fetch_json(base_url + "/health")
         assert status == 200 and health["status"] == "serving", health
+
+        # -- telemetry: /metrics key series + the batch's own trace --
+        import json as _json
+        import urllib.request as _req
+
+        with _req.urlopen(base_url + "/metrics") as r:
+            metrics = r.read().decode()
+        for series in ("ndv_http_requests_total", "ndv_service_responses_304",
+                       "ndv_service_engine_runs", "ndv_pool_opened",
+                       "ndv_fleet_batches", "ndv_engine_dispatches_total"):
+            assert series in metrics, f"/metrics missing {series}"
+        with _req.urlopen(base_url + "/debug/traces?limit=10") as r:
+            traces = _json.load(r)["traces"]
+        batch_traces = [t for t in traces if t["name"] == "router.batch"]
+        assert batch_traces, [t["name"] for t in traces]
+
+        def _names(node, acc):
+            acc.add(node["name"])
+            for c in node["children"]:
+                _names(c, acc)
+            return acc
+
+        span_names = _names(batch_traces[-1], set())
+        assert "replica.sub_batch" in span_names, span_names
         print(f"[serve_fleet --smoke] ok: 2 datasets x 2 replicas, "
               f"failover after kill ({rset.failovers} failovers), ETag "
               f"stable across replicas, 304 revalidation on survivor, "
               f"fresh replica warm from spill (0 packs), binary /batch "
               f"across both datasets with per-tuple 304s through a "
-              f"mid-batch kill on one keep-alive connection")
+              f"mid-batch kill on one keep-alive connection, /metrics + "
+              f"/debug/traces scraped")
     # context exit shut everything down; a second connect must now fail
     try:
         fetch_json(base_url + "/health")

@@ -45,6 +45,9 @@ def build_parser() -> argparse.ArgumentParser:
                     help="restore the dataset's estimate-cache spill on boot")
     ap.add_argument("--save-cache-on-commit", action="store_true",
                     help="spill the compacted estimate cache on each commit")
+    ap.add_argument("--slow-request-ms", type=float, default=None,
+                    help="log one structured line per request slower than "
+                         "this many milliseconds (default: off)")
     ap.add_argument("--smoke", action="store_true",
                     help="boot on a temp dataset + ephemeral port, run a "
                          "scripted client, exit (asserts clean shutdown)")
@@ -63,7 +66,12 @@ def _make_server(args: argparse.Namespace, root: str) -> StatsServer:
         auto_load_cache=args.auto_load_cache,
         save_cache_on_commit=args.save_cache_on_commit,
     )
-    return StatsServer(service, host=args.host, port=args.port)
+    return StatsServer(
+        service,
+        host=args.host,
+        port=args.port,
+        slow_request_ms=args.slow_request_ms,
+    )
 
 
 def _smoke_dataset() -> str:
@@ -114,10 +122,26 @@ def run_smoke(args: argparse.Namespace) -> int:
         )
         tuple_statuses = [e["status"] for e in env["responses"]]
         assert statusb == 200 and tuple_statuses == [200, 304], env
+        # /metrics serves the key series and /debug/traces recorded the
+        # smoke's own batch (telemetry acceptance, ISSUE 8)
+        import json as _json
+        import urllib.request as _req
+
+        with _req.urlopen(base + "/metrics") as r:
+            metrics = r.read().decode()
+        for series in ("ndv_http_requests_total", "ndv_service_responses_304",
+                       "ndv_service_engine_runs", "ndv_batch_tuples",
+                       "ndv_engine_dispatches_total"):
+            assert series in metrics, f"/metrics missing {series}"
+        with _req.urlopen(base + "/debug/traces?limit=10") as r:
+            traces = _json.load(r)["traces"]
+        assert any(t["name"] == "service.batch" for t in traces), \
+            [t["name"] for t in traces]
         print(f"[serve_stats --smoke] ok: {len(body['estimates'])} columns, "
               f"etag {etag[:10]}..., 304 revalidation, "
               f"{health['ingest']['footers_read']} footers read async, "
-              f"binary /estimate bit-identical, /batch per-tuple 200+304")
+              f"binary /estimate bit-identical, /batch per-tuple 200+304, "
+              f"/metrics + /debug/traces scraped")
     # context exit shut the server down; a second connect must now fail
     try:
         fetch_json(base + "/health")

@@ -1,0 +1,88 @@
+"""repro.obs — unified telemetry: metrics registry + cross-tier tracing.
+
+Stdlib-only (no jax, no other repro imports), so every tier can depend
+on it without layering cycles. Two halves behind one kill-switch:
+
+    client ──POST /batch──────────────▶ StatsRouter        (root span)
+                                          │  traceparent: header + wire
+                                          │                 frame section
+                  ┌───────────────────────┴──────────────┐
+                  ▼                                      ▼
+            replica A  (replica.sub_batch)         replica B
+                  │                                      │
+            StatsService.batch (service.superpack)       │
+                  │                                      │
+            EstimationEngine  (engine.pack → engine.dispatch → engine.d2h)
+                  │
+          spans close bottom-up → each lands in the bounded finished-span
+          ring → grouped per trace at GET /debug/traces?limit=N (JSON trees)
+
+    Counters / gauges / histograms land in the process-global
+    `MetricsRegistry`; pre-existing stats objects (`ServiceStats`,
+    `IngestStats`, `CatalogStats`, `PoolStats`) are registered as
+    weakref VIEWS read at scrape time — single source of truth, no
+    double counting → GET /metrics (Prometheus text exposition).
+    The router re-emits each remote replica's scrape under a
+    `replica="<name>"` label next to its own series.
+
+Telemetry is NEUTRAL by contract: nothing here enters `cache_key`,
+`cache_token`, or ETag derivation — estimate bytes and ETags are
+byte-identical with telemetry on or off (`set_enabled(False)` turns
+every increment and span into a no-op; `benchmarks/obs_overhead.py`
+holds the warm-path overhead under 5%).
+"""
+from repro.obs import _state
+from repro.obs.metrics import (
+    Counter,
+    Gauge,
+    Histogram,
+    LATENCY_BUCKETS_S,
+    MetricsRegistry,
+    WIDTH_BUCKETS,
+    registry,
+)
+from repro.obs.trace import (
+    Span,
+    TRACEPARENT_HEADER,
+    TraceCollector,
+    collector,
+    current_span,
+    current_traceparent,
+    format_traceparent,
+    parse_traceparent,
+    root_span,
+    span,
+    trace_tree,
+)
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "Span",
+    "TRACEPARENT_HEADER",
+    "TraceCollector",
+    "WIDTH_BUCKETS",
+    "collector",
+    "current_span",
+    "current_traceparent",
+    "enabled",
+    "format_traceparent",
+    "parse_traceparent",
+    "registry",
+    "root_span",
+    "set_enabled",
+    "span",
+    "trace_tree",
+]
+
+
+def set_enabled(value: bool) -> None:
+    """Flip the process-global telemetry switch (metrics AND spans)."""
+    _state.enabled = bool(value)
+
+
+def enabled() -> bool:
+    return _state.enabled

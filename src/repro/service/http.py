@@ -12,6 +12,8 @@ Routes (responses are JSON by default):
   GET  /columns                      merged per-column summary      [ETag]
   GET  /estimate?mode=&bounds=       per-column NDV estimates       [ETag]
   GET  /plan?mode=                   per-column memory plans        [ETag]
+  GET  /metrics                      Prometheus text exposition (uncached)
+  GET  /debug/traces?limit=N         recent request traces, JSON span trees
   POST /batch                        many estimate tuples, one frame
   POST /refresh                      force one ingestion refresh
 
@@ -35,21 +37,67 @@ per-tuple statuses (304 tuples carry a null body).
 from __future__ import annotations
 
 import json
+import logging
 import threading
+import time
 import urllib.error
 import urllib.request
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, List, Optional, Tuple
 from urllib.parse import parse_qs, quote, unquote, urlsplit
 
+from repro.obs import (
+    LATENCY_BUCKETS_S,
+    TRACEPARENT_HEADER,
+    WIDTH_BUCKETS,
+    collector,
+    registry,
+    root_span,
+    trace_tree,
+)
 from repro.service.service import EstimateQuery, Response, StatsService
 from repro.wire import (
     JSON_CONTENT_TYPE,
     WIRE_CONTENT_TYPE,
     WireError,
     decode_frame,
+    decode_traceparent,
     encode_frame,
 )
+
+METRICS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
+# One structured line per over-budget request (see `slow_request_ms`).
+_slow_log = logging.getLogger("repro.obs.slow")
+
+_REQUESTS = registry().counter(
+    "ndv_http_requests_total", "HTTP requests served, by tier/route/status"
+)
+_LATENCY = registry().histogram(
+    "ndv_http_request_seconds",
+    "HTTP request wall time in seconds",
+    LATENCY_BUCKETS_S,
+)
+_BATCH_WIDTH = registry().histogram(
+    "ndv_batch_tuples",
+    "Estimate tuples carried per /batch request",
+    WIDTH_BUCKETS,
+)
+
+# (tier, route, int status) -> pre-bound (counter, latency histogram).
+# The per-request metrics line runs on every exchange; resolving label
+# identities (and stringifying the status) once per distinct combination
+# keeps it off the profile.
+_REQUEST_CELLS: Dict[tuple, tuple] = {}
+
+
+def _request_cells(tier: str, route: str, status: int) -> tuple:
+    # Races store equivalent handles over the same canonical cells.
+    pair = _REQUEST_CELLS[(tier, route, status)] = (
+        _REQUESTS.labels(tier=tier, route=route, status=str(status)),
+        _LATENCY.labels(tier=tier, route=route),
+    )
+    return pair
 
 
 def fetch_json(
@@ -182,6 +230,14 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
     Content-Length, no Content-Type on 304, content negotiation, quiet
     logging), so the per-dataset server here and the fleet router
     (`repro.fleet.router`) cannot drift apart in revalidation behavior.
+
+    It also owns the telemetry envelope around every request: `do_GET` /
+    `do_POST` live HERE — they serve `/metrics` and `/debug/traces`
+    directly, and wrap everything else in a root span (joining an
+    incoming `Traceparent` header or wire-frame trace section), a
+    request counter, and a latency histogram before dispatching to the
+    subclass's `handle_get` / `handle_post`. Scrape endpoints create no
+    spans, so pollers don't fill the trace ring.
     """
 
     protocol_version = "HTTP/1.1"
@@ -190,8 +246,111 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
     # client's delayed ACK (Nagle). The pool client disables it too.
     disable_nagle_algorithm = True
 
+    # Metric label distinguishing the per-dataset server from the fleet
+    # router when both live in one process (tests, embedded fleets).
+    tier = "service"
+    # Log one structured line for requests slower than this (ms); None = off.
+    slow_request_ms: Optional[float] = None
+
+    _KNOWN_ROUTES = frozenset(
+        {"health", "columns", "estimate", "plan", "refresh", "batch"}
+    )
+
     def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
         pass
+
+    def _route_label(self, path: str) -> str:
+        """Collapse the path to a bounded metric label (hostile paths
+        must not mint unbounded label values)."""
+        name = path.strip("/")
+        return name if name in self._KNOWN_ROUTES else "other"
+
+    def handle_get(self, url) -> None:
+        raise NotImplementedError
+
+    def handle_post(self, url) -> None:
+        raise NotImplementedError
+
+    def do_GET(self) -> None:  # noqa: N802 — http.server API
+        self._serve("GET")
+
+    def do_POST(self) -> None:  # noqa: N802 — http.server API
+        self._serve("POST")
+
+    def _serve(self, method: str) -> None:
+        url = urlsplit(self.path)
+        if method == "GET" and url.path == "/metrics":
+            return self._serve_metrics()
+        if method == "GET" and url.path == "/debug/traces":
+            return self._serve_traces(parse_qs(url.query))
+
+        self._raw_body = b""
+        if method == "POST":
+            # Pre-read the body so a frame-carried traceparent can seed
+            # the root span; `_read_body` re-parses these bytes.
+            length = int(self.headers.get("Content-Length") or 0)
+            if length:
+                self._raw_body = self.rfile.read(length)
+
+        traceparent = self.headers.get(TRACEPARENT_HEADER)
+        if not traceparent and self._raw_body[:4] == b"NDVW":
+            traceparent = decode_traceparent(self._raw_body)
+
+        route = self._route_label(url.path)
+        self._status: Optional[int] = None
+        start = time.monotonic()
+        with root_span(
+            f"{self.tier}.{route}", traceparent, method=method, path=url.path
+        ) as span:
+            if method == "GET":
+                self.handle_get(url)
+            else:
+                self.handle_post(url)
+            span.set_attribute("status", self._status)
+            if self._status is not None and self._status >= 400:
+                span.keep_trace()  # failed requests always reach the ring
+        duration_s = time.monotonic() - start
+        status = self._status if self._status is not None else 0
+        cells = _REQUEST_CELLS.get((self.tier, route, status)) \
+            or _request_cells(self.tier, route, status)
+        cells[0].inc()
+        cells[1].observe(duration_s)
+        if (
+            self.slow_request_ms is not None
+            and duration_s * 1000.0 >= self.slow_request_ms
+        ):
+            _slow_log.warning(
+                "slow_request tier=%s endpoint=%s status=%s cache=%s "
+                "duration_ms=%.1f trace_id=%s",
+                self.tier,
+                url.path,
+                status,
+                "revalidated" if self._status == 304 else "full",
+                duration_s * 1000.0,
+                span.trace_id,
+            )
+
+    # -- scrape endpoints (no spans: pollers must not fill the ring) ---------
+
+    def _metrics_text(self) -> str:
+        """Exposition body; the router overrides to add replica scrapes."""
+        return registry().exposition()
+
+    def _serve_metrics(self) -> None:
+        payload = self._metrics_text().encode("utf-8")
+        self.send_response(200)
+        self.send_header("Content-Type", METRICS_CONTENT_TYPE)
+        self.send_header("Content-Length", str(len(payload)))
+        self.end_headers()
+        self.wfile.write(payload)
+
+    def _serve_traces(self, query: Dict[str, List[str]]) -> None:
+        try:
+            limit = int(query.get("limit", ["20"])[0])
+        except ValueError:
+            return self._error(400, "limit must be an integer")
+        trees = [trace_tree(spans) for spans in collector().traces(limit)]
+        self._send(Response(200, {"traces": trees}, None))
 
     def _wants_wire(self) -> bool:
         """Whether the request negotiated the binary encoding.
@@ -203,6 +362,7 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
         return WIRE_CONTENT_TYPE in (self.headers.get("Accept") or "")
 
     def _send(self, resp: Response) -> None:
+        self._status = resp.status
         wire = self._wants_wire()
         payload = b""
         if resp.body is not None:
@@ -228,11 +388,11 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
     def _read_body(self):
         """Decode the request body by its Content-Type (wire or JSON).
 
-        Raises ValueError (including `WireError`) on malformed payloads —
-        callers answer 400.
+        The raw bytes were pre-read by `_serve` (the root span needs any
+        frame-carried traceparent before dispatch). Raises ValueError
+        (including `WireError`) on malformed payloads — callers answer 400.
         """
-        length = int(self.headers.get("Content-Length") or 0)
-        raw = self.rfile.read(length) if length else b""
+        raw = getattr(self, "_raw_body", b"")
         if not raw:
             raise ValueError("empty request body")
         ctype = (self.headers.get("Content-Type") or JSON_CONTENT_TYPE)
@@ -252,8 +412,7 @@ class _Handler(JSONResponseHandler):
 
     # -- routes --------------------------------------------------------------
 
-    def do_GET(self) -> None:  # noqa: N802 — http.server API
-        url = urlsplit(self.path)
+    def handle_get(self, url) -> None:
         query = parse_qs(url.query)
         inm = self.headers.get("If-None-Match")
         bounds = None
@@ -285,8 +444,7 @@ class _Handler(JSONResponseHandler):
             # schema-mismatched file) is a server-side failure: 500.
             self._error(500, f"{type(e).__name__}: {e}")
 
-    def do_POST(self) -> None:  # noqa: N802 — http.server API
-        url = urlsplit(self.path)
+    def handle_post(self, url) -> None:
         try:
             if url.path == "/refresh":
                 self._send(self.service.refresh())
@@ -295,6 +453,7 @@ class _Handler(JSONResponseHandler):
                     queries = parse_batch_queries(self._read_body())
                 except ValueError as e:
                     return self._error(400, str(e))
+                _BATCH_WIDTH.observe(len(queries), tier=self.tier)
                 self._send(batch_envelope(self.service.batch(queries)))
             else:
                 self._error(404, f"no such endpoint: {url.path}")
@@ -302,8 +461,12 @@ class _Handler(JSONResponseHandler):
             self._error(500, f"{type(e).__name__}: {e}")
 
 
-def make_handler(service: StatsService):
-    return type("BoundStatsHandler", (_Handler,), {"service": service})
+def make_handler(service: StatsService, *, slow_request_ms: Optional[float] = None):
+    return type(
+        "BoundStatsHandler",
+        (_Handler,),
+        {"service": service, "slow_request_ms": slow_request_ms},
+    )
 
 
 class StatsServer:
@@ -315,10 +478,17 @@ class StatsServer:
     """
 
     def __init__(
-        self, service: StatsService, host: str = "127.0.0.1", port: int = 0
+        self,
+        service: StatsService,
+        host: str = "127.0.0.1",
+        port: int = 0,
+        slow_request_ms: Optional[float] = None,
     ):
         self.service = service
-        self.httpd = ThreadingHTTPServer((host, port), make_handler(service))
+        self.httpd = ThreadingHTTPServer(
+            (host, port),
+            make_handler(service, slow_request_ms=slow_request_ms),
+        )
         self.host, self.port = self.httpd.server_address[:2]
         self._thread: Optional[threading.Thread] = None
 

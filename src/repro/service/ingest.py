@@ -33,6 +33,7 @@ import time
 from typing import Callable, List, Optional, Tuple
 
 from repro.catalog import FileEntry, StatsCatalog, UpdateSummary
+from repro.obs import span
 
 
 @dataclasses.dataclass
@@ -99,10 +100,11 @@ class AsyncIngestor:
         (e.g. a schema-mismatched file) — the previous state keeps serving
         and the error is recorded in `stats.last_error`.
         """
-        with self._refresh_mutex:
+        with self._refresh_mutex, span("ingest.refresh") as sp:
             t0 = time.perf_counter()
             try:
                 fresh, live_ids = self._scatter_gather()
+                sp.set_attribute("footers", len(fresh))
                 # ONE critical section for commit + generation + on_commit:
                 # a reader must never observe the new merged state paired
                 # with a pre-commit generation/ETag (the serving layer

@@ -49,6 +49,7 @@ from repro.catalog import (
     superpack_estimate,
 )
 from repro.catalog.source import MetadataSource
+from repro.obs import registry, span
 from repro.service.ingest import AsyncIngestor
 
 MODES = ("paper", "improved")
@@ -208,6 +209,8 @@ class StatsService:
       health_hook: optional callable polled by `probe()`; returning False
         marks this replica unhealthy to replica managers (the fleet tier's
         ejection signal) without affecting direct request serving.
+      name: telemetry label for this service's stats views in `/metrics`
+        (`{service="<name>"}`) — distinguishes replicas sharing a process.
     """
 
     def __init__(
@@ -221,6 +224,7 @@ class StatsService:
         save_cache_on_commit: bool = False,
         shared_spill: bool = False,
         health_hook: Optional[Callable[[], bool]] = None,
+        name: str = "stats",
     ):
         if shared_spill:
             auto_load_cache = True
@@ -248,6 +252,14 @@ class StatsService:
         self._flight = SingleFlight()
         self._state_token: Optional[str] = None
         self._started_at = time.monotonic()
+        # The pre-existing stats objects stay the single source of truth;
+        # /metrics reads them live through weakref views (repro.obs).
+        self.name = name
+        labels = {"service": name}
+        reg = registry()
+        reg.register_stats_view("ndv_service", labels, self.stats)
+        reg.register_stats_view("ndv_ingest", labels, self.ingestor.stats)
+        reg.register_stats_view("ndv_catalog", labels, self.catalog.stats)
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -553,7 +565,12 @@ class StatsService:
                             self.catalog, q.mode, q.schema_bounds
                         ))
                     slots.append(idx)
-                result = superpack_estimate(jobs, engine=self.engine)
+                with span(
+                    "service.superpack",
+                    tuples=len(claimed), groups=len(jobs), service=self.name,
+                ) as sp:
+                    result = superpack_estimate(jobs, engine=self.engine)
+                    sp.set_attribute("engine_calls", result.engine_calls)
                 self.stats.engine_runs += result.engine_calls
                 if result.engine_calls and self.save_cache_on_commit:
                     self.catalog.save_cache()
@@ -636,7 +653,11 @@ class StatsService:
                         self.catalog.maybe_load_cache()
                     )
                 misses = self.catalog.stats.estimate_cache_misses
-                body = build(etag_now, self.ingestor.generation)
+                with span(
+                    "service.compute",
+                    kind=kind, mode=mode, service=self.name,
+                ):
+                    body = build(etag_now, self.ingestor.generation)
                 new_runs = (
                     self.catalog.stats.estimate_cache_misses - misses
                 )

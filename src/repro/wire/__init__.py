@@ -30,7 +30,7 @@ Frame byte layout (version 1)
     section  := tag varint | length varint | payload[length]
 
 Unknown section tags are skipped (forward compatibility). Version 1
-frames carry exactly two sections:
+frames carry two required sections plus one optional one:
 
     tag 1  STRINGS  varint count, then per string: varint byte length +
                     UTF-8 bytes. Every string in the value tree — dict
@@ -54,6 +54,11 @@ frames carry exactly two sections:
                          array: 'F' f64 LE | 'I' zigzag varints |
                          'B' bool bytes | 'S' string indices | 'V'
                          tagged values (mixed-type fallback)
+    tag 3  TRACE    optional: a UTF-8 traceparent string
+                    (`00-<trace>-<span>-01`) carrying request-trace
+                    context out-of-band. Never part of the decoded
+                    value, so ETags over frame bodies stay trace-blind;
+                    pre-trace peers skip it via the unknown-section rule.
 
 All varints are unsigned LEB128; signed integers are zigzag-mapped
 first. Integers of any magnitude survive (no 64-bit clamp), floats are
@@ -75,5 +80,6 @@ from repro.wire.codec import (  # noqa: F401
     WIRE_CONTENT_TYPE,
     WireError,
     decode_frame,
+    decode_traceparent,
     encode_frame,
 )

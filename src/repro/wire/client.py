@@ -28,6 +28,7 @@ import threading
 from typing import Any, Dict, List, Optional, Tuple
 from urllib.parse import urlsplit
 
+from repro.obs import TRACEPARENT_HEADER, current_traceparent, registry
 from repro.wire.codec import (
     JSON_CONTENT_TYPE,
     WIRE_CONTENT_TYPE,
@@ -63,7 +64,9 @@ class _KeepAliveConnection(http.client.HTTPConnection):
 class PoolStats:
     """Counters for tests and the connection-reuse benchmark."""
 
-    __slots__ = ("opened", "reused", "retried_stale")
+    # __weakref__ lets the metrics registry hold this object as a scrape-
+    # time view (`repro.obs`) without keeping it alive.
+    __slots__ = ("opened", "reused", "retried_stale", "__weakref__")
 
     def __init__(self):
         self.opened = 0
@@ -71,19 +74,29 @@ class PoolStats:
         self.retried_stale = 0
 
     def snapshot(self) -> Dict[str, int]:
-        return {f: getattr(self, f) for f in self.__slots__}
+        return {
+            f: getattr(self, f) for f in self.__slots__ if f != "__weakref__"
+        }
 
 
 class ConnectionPool:
     """Thread-safe keep-alive pool of plain HTTP connections."""
 
-    def __init__(self, *, max_per_host: int = 8, timeout: float = 30.0):
+    def __init__(
+        self,
+        *,
+        max_per_host: int = 8,
+        timeout: float = 30.0,
+        name: str = "default",
+    ):
         self.max_per_host = max_per_host
         self.timeout = timeout
+        self.name = name
         self.stats = PoolStats()
         self._lock = threading.Lock()
         self._idle: Dict[_HostKey, List[http.client.HTTPConnection]] = {}
         self._closed = False
+        registry().register_stats_view("ndv_pool", {"pool": name}, self.stats)
 
     # -- checkout / checkin --
 
@@ -200,13 +213,19 @@ def fetch(
     }
     if etag:
         headers["If-None-Match"] = etag
+    # Propagate the active trace (if any) downstream: always as a header,
+    # and inside the wire frame for binary bodies so frame-only relays
+    # keep the context too.
+    traceparent = current_traceparent()
+    if traceparent:
+        headers[TRACEPARENT_HEADER] = traceparent
     if extra_headers:
         headers.update(extra_headers)
 
     body_bytes: Optional[bytes] = None
     if payload is not None:
         if binary:
-            body_bytes = encode_frame(payload)
+            body_bytes = encode_frame(payload, traceparent=traceparent)
             headers["Content-Type"] = WIRE_CONTENT_TYPE
         else:
             body_bytes = json.dumps(payload).encode("utf-8")

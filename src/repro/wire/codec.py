@@ -28,6 +28,9 @@ JSON_CONTENT_TYPE = "application/json"
 
 _SECTION_STRINGS = 1
 _SECTION_VALUE = 2
+# Optional out-of-band trace context (UTF-8 traceparent string). Peers
+# that predate it skip it via the unknown-section rule below.
+_SECTION_TRACE = 3
 
 _T_NULL = 0x00
 _T_FALSE = 0x01
@@ -269,8 +272,13 @@ class _Encoder:
                 self.value(c)
 
 
-def encode_frame(obj: Any) -> bytes:
-    """Encode one JSON-representable value as a v1 wire frame."""
+def encode_frame(obj: Any, *, traceparent: str = None) -> bytes:
+    """Encode one JSON-representable value as a v1 wire frame.
+
+    `traceparent` rides in its own section, outside the value — it never
+    changes what `decode_frame` returns, so ETags over frame bodies stay
+    trace-blind.
+    """
     enc = _Encoder()
     enc.value(obj)
 
@@ -281,10 +289,14 @@ def encode_frame(obj: Any) -> bytes:
         _write_uvarint(strings, len(raw))
         strings += raw
 
+    sections = [(_SECTION_STRINGS, strings), (_SECTION_VALUE, enc.body)]
+    if traceparent:
+        sections.append((_SECTION_TRACE, traceparent.encode("utf-8")))
+
     frame = bytearray(MAGIC)
     frame.append(VERSION)
-    _write_uvarint(frame, 2)  # section count
-    for tag, payload in ((_SECTION_STRINGS, strings), (_SECTION_VALUE, enc.body)):
+    _write_uvarint(frame, len(sections))
+    for tag, payload in sections:
         _write_uvarint(frame, tag)
         _write_uvarint(frame, len(payload))
         frame += payload
@@ -365,8 +377,8 @@ class _Decoder:
         raise WireError(f"unknown table column type 0x{kind:02x}")
 
 
-def decode_frame(data: bytes) -> Any:
-    """Decode a v1 wire frame back to the value it encoded."""
+def _scan_sections(data: bytes) -> Tuple[bytes, Dict[int, Tuple[int, int]]]:
+    """Validate the frame header and map section tag -> (start, end)."""
     if not isinstance(data, (bytes, bytearray, memoryview)):
         raise WireError(f"frame must be bytes, got {type(data).__name__}")
     data = bytes(data)
@@ -385,6 +397,31 @@ def decode_frame(data: bytes) -> Any:
         start = r.pos
         r.take(length)  # bounds check + skip
         sections.setdefault(tag, (start, start + length))
+    return data, sections
+
+
+def decode_traceparent(data: bytes) -> "str | None":
+    """The frame's trace section as a string, or None if absent/invalid.
+
+    Never raises on a well-framed payload without (or with a garbled)
+    trace section — tracing is best-effort and must not fail a request.
+    """
+    try:
+        data, sections = _scan_sections(data)
+    except WireError:
+        return None
+    bounds = sections.get(_SECTION_TRACE)
+    if bounds is None:
+        return None
+    try:
+        return data[bounds[0]:bounds[1]].decode("utf-8")
+    except UnicodeDecodeError:
+        return None
+
+
+def decode_frame(data: bytes) -> Any:
+    """Decode a v1 wire frame back to the value it encoded."""
+    data, sections = _scan_sections(data)
     for required in (_SECTION_STRINGS, _SECTION_VALUE):
         if required not in sections:
             raise WireError(f"frame is missing section {required}")
