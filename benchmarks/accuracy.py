@@ -6,8 +6,11 @@ Produces the regime x estimator error grid:
   cols:   ndv_dict (paper §4), ndv_minmax (paper §5), hybrid (paper §7),
           improved (beyond-paper layout-aware aggregation)
 
-plus the coverage sweep (error vs rows-per-group/ndv) and the
-row-group-count sweep (information content of the min/max signal).
+plus the coverage sweep (error vs rows-per-group/ndv), the
+row-group-count sweep (information content of the min/max signal), and
+the q-error-by-route grid: ground-truth q-error grouped by the route the
+estimator actually chose (dict vs minmax, from per-estimate provenance) —
+the offline twin of the live `ndv_audit_qerror{route=}` series.
 """
 from __future__ import annotations
 
@@ -123,12 +126,57 @@ def heavy_tail_length_bias(seed: int = 0) -> List[dict]:
     return out
 
 
+def qerror_by_route(seed: int = 0) -> List[dict]:
+    """Ground-truth q-error grouped by the provenance-reported route.
+
+    Re-runs the regime-grid datasets through the engine's explained call
+    (one run yields estimates + provenance, bit-identical to the plain
+    call) and buckets per-column q-error by which estimator won. Answers
+    the routing question the live audit loop samples in production: when
+    the router picks `dict` (or `minmax`), how wrong is it?
+    """
+    from repro.engine import default_engine
+
+    dom_i = int_domain(5000, seed=seed + 1)
+    dom_s = string_domain(2000, seed=seed + 2, dist="uniform")
+    regimes = {
+        "uniform_int": uniform_column(dom_i, ROWS, seed=seed + 3),
+        "zipf_str": zipf_column(dom_s, ROWS, seed=seed + 4),
+        "sorted_int": sorted_column(dom_i, ROWS, seed=seed + 5),
+        "partitioned_int": partitioned_column(dom_i, ROWS, seed=seed + 6),
+        "clustered_int": clustered_column(dom_i, ROWS, mean_run=64, seed=seed + 7),
+        "low_ndv_int": uniform_column(int_domain(16, seed=seed + 8), ROWS, seed=seed + 9),
+    }
+    engine = default_engine()
+    by_route: Dict[tuple, List[float]] = {}
+    for regime, (vals, truth) in regimes.items():
+        tmp = tempfile.mkdtemp()
+        write_file(os.path.join(tmp, "f"), {"c": vals},
+                   options=WriterOptions(row_group_size=RG))
+        footer = read_footer(os.path.join(tmp, "f"))
+        meta = column_metadata_from_footer(footer, "c")
+        for mode in ("paper", "improved"):
+            ests, provs = engine.estimate_columns_explained([meta], mode=mode)
+            est = float(ests[0].ndv)
+            q = max(est / truth, truth / est) if est > 0 else float("inf")
+            by_route.setdefault((mode, provs[0].route), []).append(q)
+    return [
+        {
+            "mode": mode, "route": route, "columns": len(qs),
+            "mean_qerror": round(sum(qs) / len(qs), 4),
+            "max_qerror": round(max(qs), 4),
+        }
+        for (mode, route), qs in sorted(by_route.items())
+    ]
+
+
 def run() -> List[tuple]:
     t0 = time.time()
     grid = regime_grid()
     cov = coverage_sweep()
     rgs = rowgroup_sweep()
     tails = heavy_tail_length_bias()
+    routes = qerror_by_route()
     dt = (time.time() - t0) * 1e6
     rows = []
     for r in grid:
@@ -152,5 +200,11 @@ def run() -> List[tuple]:
             f"len_bias/{r['length_dist']}", 0.0,
             f"paper_err={r['paper_err']};improved_err={r['improved_err']};"
             f"len_sample={r['paper_len_sample']}",
+        ))
+    for r in routes:
+        rows.append((
+            f"qerror_by_route/{r['mode']}_{r['route']}", 0.0,
+            f"columns={r['columns']};mean_qerror={r['mean_qerror']};"
+            f"max_qerror={r['max_qerror']}",
         ))
     return rows

@@ -11,8 +11,10 @@ the script can gate CI directly:
     python benchmarks/run.py --quick --json BENCH_new.json
     python benchmarks/compare.py BENCH_6.json BENCH_new.json
 
-Rows present in only one file are reported but never fail the run (the
-benchmark surface legitimately grows across PRs), and rows measuring
+Rows present in only one file are listed in a dedicated "unmatched"
+section — with their timings, so a renamed or dropped benchmark is
+visible rather than silently excluded — but never fail the run (the
+benchmark surface legitimately grows across PRs). Rows measuring
 effectively nothing (< 1 us on either side) are skipped — at that scale
 the timer jitter dwarfs any signal. Quick-mode artifacts compare fine
 against each other but a quick-vs-full comparison is refused: the shapes
@@ -92,14 +94,21 @@ def main(argv=None) -> int:
         print(f"REGRESSION {name}: {b:.1f}us -> {n:.1f}us ({ratio:.2f}x)")
     for name, b, n, ratio in improvements:
         print(f"improvement {name}: {b:.1f}us -> {n:.1f}us ({ratio:.2f}x)")
-    if only_base:
-        print(f"rows only in {base_path}: {', '.join(only_base)}")
-    if only_new:
-        print(f"rows only in {new_path}: {', '.join(only_new)}")
+    if only_base or only_new:
+        # A vanished row is as loud as a regressed one: it usually means a
+        # benchmark was renamed or silently dropped, and the gate above
+        # would otherwise skip it without a trace.
+        print(f"unmatched rows ({len(only_base) + len(only_new)} — "
+              f"compared in neither direction):")
+        for name in only_base:
+            print(f"  only in {base_path}: {name} ({base[name]:.1f}us)")
+        for name in only_new:
+            print(f"  only in {new_path}: {name} ({new[name]:.1f}us)")
     compared = len(set(base) & set(new))
     print(
         f"{compared} rows compared at threshold +{threshold:.0%}: "
-        f"{len(regressions)} regressed, {len(improvements)} improved"
+        f"{len(regressions)} regressed, {len(improvements)} improved, "
+        f"{len(only_base) + len(only_new)} unmatched"
     )
     return 1 if regressions else 0
 

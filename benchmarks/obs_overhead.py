@@ -15,6 +15,12 @@ estimate bodies byte-identical whether telemetry is enabled or not
   obs/scrape       GET /metrics exposition render, full registry
   obs/etag_parity  fresh service booted with telemetry OFF serves the
                    byte-identical ETag + wire body (asserted)
+  explain/warm_on  warm /estimate?explain=1 — provenance attached from
+                   the catalog's provenance cache on every response
+  explain/warm_off same loop without explain; derived carries
+                   overhead_pct (ISSUE 9 bar: < 5% in full mode), and
+                   the explained response's ETag is asserted identical
+                   to the plain one (explain never enters identity)
 
 Loopback round-trip noise (scheduler, CPU frequency drift) is tens of
 microseconds — the same order as the effect being measured — so the
@@ -77,6 +83,29 @@ def _warm_medians(url: str, pool: ConnectionPool) -> tuple:
             statistics.median(samples[False]))
 
 
+def _explain_medians(url: str, pool: ConnectionPool) -> tuple:
+    """Alternate ?explain=1 per request; return (on_us, off_us) medians.
+
+    Same request-level interleaving as `_warm_medians` and for the same
+    reason: both modes must sample the host's slow drift identically.
+    """
+    explained_url = url + "&explain=1"
+    samples = {True: [], False: []}
+    etags = {}
+    for i in range(WARM_REQS):
+        explain = i % 2 == 0
+        t0 = time.perf_counter()
+        status, etag, body = fetch(explained_url if explain else url,
+                                   pool=pool)
+        samples[explain].append((time.perf_counter() - t0) * 1e6)
+        assert status == 200 and body["estimates"]
+        assert ("provenance" in body) == explain
+        etags[explain] = etag
+    assert etags[True] == etags[False], "explain rotated the ETag"
+    return (statistics.median(samples[True]),
+            statistics.median(samples[False]))
+
+
 def run() -> List[tuple]:
     rows: List[tuple] = []
     root = os.path.join(tempfile.mkdtemp(), "obs_bench")
@@ -107,6 +136,24 @@ def run() -> List[tuple]:
                 "obs/warm_off", off_us,
                 f"reqs={WARM_REQS};overhead_us={diff_us:.1f};"
                 f"overhead_pct={overhead * 100:.2f}",
+            ))
+
+            exp_on_us, exp_off_us = _explain_medians(url, pool)
+            exp_diff_us = exp_on_us - exp_off_us
+            exp_overhead = exp_diff_us / exp_off_us
+            if not quick():
+                assert exp_overhead < 0.05, (
+                    f"explain overhead {exp_overhead:.1%} >= 5% "
+                    f"(on={exp_on_us:.1f}us off={exp_off_us:.1f}us)"
+                )
+            rows.append((
+                "explain/warm_on", exp_on_us,
+                f"reqs={WARM_REQS};alternating=True",
+            ))
+            rows.append((
+                "explain/warm_off", exp_off_us,
+                f"reqs={WARM_REQS};overhead_us={exp_diff_us:.1f};"
+                f"overhead_pct={exp_overhead * 100:.2f}",
             ))
 
             t0 = time.perf_counter()

@@ -24,6 +24,23 @@ script printed without any footer access of their own:
     )
     urllib.request.urlopen(req)   # -> HTTPError 304: estimates unchanged
 
+With ``--explain`` the profile table gains per-column provenance — the
+route the estimator chose (dict vs minmax), its decision margins, Newton
+iteration counts, clamps — plus the audited q-error where the sketch
+auditor has sampled the column. The same diagnostics are served live:
+``?explain=1`` attaches them to any `/estimate` response (same ETag —
+explain never enters cache identity), and `/debug/explain` dumps the
+server's provenance cache:
+
+    r = urllib.request.urlopen(
+        "http://127.0.0.1:8080/estimate?mode=improved&explain=1"
+    )
+    prov = json.load(r)["provenance"]
+    print(prov["key"]["route"], prov["key"]["route_margin"],
+          prov["key"].get("audit", {}).get("qerror"))
+    json.load(urllib.request.urlopen(
+        "http://127.0.0.1:8080/debug/explain"))   # cache + audit samples
+
 For a whole warehouse namespace, front many datasets with the replicated
 fleet router instead (`python -m repro.launch.serve_fleet`, see
 `repro.fleet`) — same responses, same ETags, one endpoint:
@@ -140,6 +157,9 @@ def main():
     ap.add_argument("--serve", action="store_true",
                     help="after profiling, serve the dataset's stats over "
                          "HTTP (see module docstring for a client snippet)")
+    ap.add_argument("--explain", action="store_true",
+                    help="add a per-column provenance table (route, margins, "
+                         "Newton iterations, clamps) and audited q-error")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080)
     args = ap.parse_args()
@@ -151,6 +171,18 @@ def main():
 
     scanned = scan_dataset(root)
     print(f"profiling {len(scanned)} files under {root}\n")
+
+    audits = {}
+    if args.explain:
+        # One sketch-audit pass over the dataset: a reference NDV from one
+        # row group per file (repro.kernels.hll), q-error vs the metadata
+        # estimate — the same loop the service runs in the background.
+        from repro.service import StatsService
+
+        svc = StatsService(root, audit=True)
+        svc.refresh()
+        audits = {a.column: a for a in svc.run_audit()}
+
     planner = NDVPlanner()
     meta_bytes = 0
     data_bytes = 0
@@ -158,15 +190,33 @@ def main():
         meta_bytes += os.path.getsize(fmt.footer_path(f))
         data_bytes += os.path.getsize(fmt.data_path(f))
         metas = [column_metadata_from_footer(footer, n) for n in footer.column_names]
-        ests = estimate_columns(metas, mode="improved")
+        if args.explain:
+            from repro.engine import default_engine
+
+            ests, provs = default_engine().estimate_columns_explained(
+                metas, mode="improved"
+            )
+        else:
+            ests = estimate_columns(metas, mode="improved")
+            provs = [None] * len(ests)
         print(f"{os.path.basename(f)}  rows={footer.num_rows}  "
               f"row_groups={footer.num_row_groups}")
-        for e, m in zip(ests, metas):
+        for e, m, p in zip(ests, metas, provs):
             plan = planner.memory_plan(e, m.non_null)
             print(f"   {e.column_name:12s} ndv~{e.ndv:9.0f} "
                   f"layout={e.layout.name:13s} conf={e.confidence:.2f} "
                   f"batch_mem={plan.d_batch_bytes/1e3:.0f}KB"
                   + (" [lower-bound]" if e.is_lower_bound else ""))
+            if p is not None:
+                a = audits.get(e.column_name)
+                qerr = f"{a.qerror:.3f}" if a is not None else "-"
+                clamps = ",".join(p.clamps) if p.clamps else "-"
+                print(f"      route={p.route:6s} "
+                      f"margin={p.route_margin:8.1f} "
+                      f"detector_margin={p.detector_margin:6.3f} "
+                      f"newton(dict={p.dict_iterations},"
+                      f"coupon={p.coupon_iterations}) "
+                      f"clamps={clamps} audit_qerror={qerr}")
     print(f"\nmetadata read: {meta_bytes/1e3:.1f} KB; "
           f"data pages NOT read: {data_bytes/1e6:.1f} MB "
           f"({data_bytes/max(meta_bytes,1):.0f}x saved)")

@@ -52,7 +52,12 @@ from repro.catalog.merge import merge_column_metadata
 from repro.catalog.packer import BatchPacker
 from repro.obs import span as _obs_span
 from repro.catalog.source import MetadataSource, PQLiteMetadataSource
-from repro.core.ndv.estimator import estimates_from_batch
+from repro.core.ndv.estimator import (
+    Provenance,
+    estimates_from_batch,
+    provenance_from_batch,
+    record_provenance_metrics,
+)
 from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimate
 
 CACHE_FILE_NAME = ".ndv_estimate_cache.json"
@@ -183,6 +188,13 @@ class StatsCatalog:
             OrderedDict()
         )
         self._estimate_cache: "OrderedDict[tuple, Dict[str, NDVEstimate]]" = (
+            OrderedDict()
+        )
+        # Per-estimate provenance, keyed like `_estimate_cache`. NEVER
+        # spilled: the on-disk format (and with it every body/ETag the
+        # service derives) stays byte-identical to the pre-provenance
+        # layout; a spill-warmed entry recomputes provenance on demand.
+        self._provenance_cache: "OrderedDict[tuple, Dict[str, Provenance]]" = (
             OrderedDict()
         )
         self._max_cache_entries = max_cache_entries
@@ -548,12 +560,87 @@ class StatsCatalog:
         out = engine.estimate(batch, sb, mode=mode)
         with _obs_span("engine.d2h", columns=len(self._column_names)):
             ests = estimates_from_batch(out, batch, self._column_names)
+            provs = provenance_from_batch(out, batch, self._column_names)
         result = {e.column_name: e for e in ests}
         self._cache_put(self._estimate_cache, key, result)
+        self.provenance_cache_store(key, {p.column_name: p for p in provs})
         return dict(result)
 
     def estimate_column(self, name: str, *, mode: str = "paper") -> NDVEstimate:
         return self.estimate(mode=mode)[name]
+
+    # -- provenance ----------------------------------------------------------
+
+    def provenance_cache_peek(
+        self, key: tuple
+    ) -> Optional[Dict[str, Provenance]]:
+        """Provenance probe by `estimate_key()`; copy on hit, None on miss.
+
+        Unlike `estimate_cache_peek` this counts nothing — provenance is a
+        diagnostic sidecar, and its hit rate must not perturb the estimate
+        counters tests and dashboards assert on.
+        """
+        cached = self._provenance_cache.get(key)
+        if cached is None:
+            return None
+        self._provenance_cache.move_to_end(key)
+        return dict(cached)
+
+    def provenance_cache_store(
+        self, key: tuple, provs: Dict[str, Provenance]
+    ) -> None:
+        """Insert freshly-materialized provenance and observe its metrics.
+
+        The single funnel for both the direct `estimate()` path and the
+        superpack write-back: `ndv_route_total`/`ndv_newton_iters`/
+        `ndv_detector_margin` are recorded exactly once per engine run here,
+        never on cache hits.
+        """
+        record_provenance_metrics(list(provs.values()))
+        self._cache_put(self._provenance_cache, key, dict(provs))
+
+    def provenance(
+        self,
+        *,
+        mode: str = "paper",
+        schema_bounds: Optional[Dict[str, float]] = None,
+        engine=None,
+    ) -> Dict[str, Provenance]:
+        """Per-column provenance for the same state `estimate()` serves.
+
+        Usually a cache hit (filled alongside every engine run). A miss —
+        the estimate was warmed from the on-disk spill, which deliberately
+        carries no diagnostics — recomputes through the engine; the
+        estimates produced on the way are bit-identical by contract and
+        refresh the estimate cache too.
+        """
+        self._ensure_scanned()
+        engine = engine or self.engine
+        key = self.estimate_key(
+            mode=mode, schema_bounds=schema_bounds, engine=engine
+        )
+        cached = self.provenance_cache_peek(key)
+        if cached is not None:
+            return cached
+        if not self._column_names:
+            return {}
+        batch = self._packed(self.fingerprint_key())
+        arr = self.bounds_array(schema_bounds, batch.batch)
+        sb = None if arr is None else jnp.asarray(arr)
+        out = engine.estimate(batch, sb, mode=mode)
+        with _obs_span("engine.d2h", columns=len(self._column_names)):
+            ests = estimates_from_batch(out, batch, self._column_names)
+            provs = provenance_from_batch(out, batch, self._column_names)
+        self._cache_put(
+            self._estimate_cache, key, {e.column_name: e for e in ests}
+        )
+        result = {p.column_name: p for p in provs}
+        self.provenance_cache_store(key, result)
+        return dict(result)
+
+    def provenance_entries(self) -> List[Tuple[tuple, Dict[str, Provenance]]]:
+        """Snapshot of the provenance cache (the `/debug/explain` source)."""
+        return [(k, dict(v)) for k, v in self._provenance_cache.items()]
 
     # -- estimate-cache persistence ------------------------------------------
 
@@ -756,6 +843,9 @@ class StatsCatalog:
             dropped += 1
         for key in [k for k in self._estimate_cache if k[0] != live]:
             del self._estimate_cache[key]
+            dropped += 1
+        for key in [k for k in self._provenance_cache if k[0] != live]:
+            del self._provenance_cache[key]
             dropped += 1
         return dropped
 

@@ -32,7 +32,7 @@ from typing import Dict, List, NamedTuple, Optional
 import jax.numpy as jnp
 
 from repro.catalog.packer import concat_batches
-from repro.core.ndv.estimator import estimates_from_batch
+from repro.core.ndv.estimator import estimates_from_batch, provenance_from_batch
 from repro.core.ndv.types import NDVEstimate
 from repro.obs import span as _obs_span
 
@@ -143,4 +143,10 @@ def _run_group(eng, members: List[_ColdJob], results: list) -> None:
             ests = estimates_from_batch(out, batch, names, offset=off)
             result = {e.column_name: e for e in ests}
             m.job.catalog.estimate_cache_store(m.key, result)
+            # Same lane span, same output — the super-packed path fills the
+            # provenance cache exactly as a standalone estimate() would.
+            provs = provenance_from_batch(out, batch, names, offset=off)
+            m.job.catalog.provenance_cache_store(
+                m.key, {p.column_name: p for p in provs}
+            )
             results[m.index] = dict(result)

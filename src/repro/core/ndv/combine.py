@@ -26,6 +26,21 @@ class CombineResult(NamedTuple):
     ndv: jnp.ndarray            # (B,) final estimate
     is_lower_bound: jnp.ndarray  # (B,) bool
     confidence: jnp.ndarray     # (B,) in [0, 1]
+    route: jnp.ndarray          # (B,) int32 — ROUTE_MINMAX / ROUTE_DICT
+    route_margin: jnp.ndarray   # (B,) in [0, 1) — decisiveness of Eq 13's max
+    clamp_flags: jnp.ndarray    # (B,) int32 CLAMP_* bitmask — bounds that bit
+
+
+# Which of the paper's two signals won Eq 13's max for a lane.
+ROUTE_MINMAX = 0   # §5 coupon-collector inversion
+ROUTE_DICT = 1     # §4 dictionary-size inversion
+
+# Bits of ``clamp_flags``: set when the corresponding deterministic bound
+# actually reduced the estimate (strict decrease, not mere applicability).
+CLAMP_NON_NULL = 1      # Eq 13 cap: ndv <= N - nulls
+CLAMP_INT_RANGE = 2     # Eq 14: ndv <= max - min + 1
+CLAMP_SINGLE_BYTE = 4   # Eq 15: single-byte string bound
+CLAMP_SCHEMA = 8        # §7.3 schema constraint
 
 
 def combine_estimates(
@@ -83,26 +98,34 @@ def combine_estimates(
     # still wants the larger component — keep the dict value as a floor but
     # mark the result as a lower bound.
     ndv = jnp.maximum(ndv_dict, ndv_minmax)                    # Eq 13 (max)
+    pre = ndv
     ndv = jnp.minimum(ndv, jnp.maximum(non_null, 1.0))         # Eq 13 (cap)
+    clamp_flags = jnp.where(ndv < pre, CLAMP_NON_NULL, 0).astype(jnp.int32)
 
     # Eq 14: integer-like range bound.
     range_bound = jnp.maximum(
         jnp.asarray(gmax, jnp.float32) - jnp.asarray(gmin, jnp.float32) + 1.0,
         1.0,
     )
+    pre = ndv
     ndv = jnp.where(int_like, jnp.minimum(ndv, range_bound), ndv)
+    clamp_flags = clamp_flags | jnp.where(ndv < pre, CLAMP_INT_RANGE, 0)
 
     # Eq 15: single-byte strings.
+    pre = ndv
     ndv = jnp.where(
         single_byte,
         jnp.minimum(ndv, jnp.minimum(SINGLE_BYTE_BOUND, jnp.maximum(non_null, 1.0))),
         ndv,
     )
+    clamp_flags = clamp_flags | jnp.where(ndv < pre, CLAMP_SINGLE_BYTE, 0)
 
     # §7.3: schema constraint.
     if schema_bound is not None:
         sb = jnp.asarray(schema_bound, jnp.float32)
+        pre = ndv
         ndv = jnp.where(sb > 0, jnp.minimum(ndv, sb), ndv)
+        clamp_flags = clamp_flags | jnp.where(ndv < pre, CLAMP_SCHEMA, 0)
 
     ndv = jnp.maximum(ndv, 1.0)
 
@@ -138,4 +161,15 @@ def combine_estimates(
         0.25 + 0.45 * agree + 0.3 * len_rel * layout_conf, 0.0, 1.0
     )
     confidence = jnp.where(is_lower_bound, confidence * 0.5, confidence)
-    return CombineResult(ndv=ndv, is_lower_bound=is_lower_bound, confidence=confidence)
+    # Route margin: how decisively Eq 13's max picked its winner. 0 means
+    # the two signals tied (a coin-flip route); -> 1 means the loser was
+    # negligible. Complements `agree` — provenance consumers read both.
+    route_margin = 1.0 - ratio
+    return CombineResult(
+        ndv=ndv,
+        is_lower_bound=is_lower_bound,
+        confidence=confidence,
+        route=jnp.where(dict_wins, ROUTE_DICT, ROUTE_MINMAX).astype(jnp.int32),
+        route_margin=route_margin.astype(jnp.float32),
+        clamp_flags=clamp_flags.astype(jnp.int32),
+    )

@@ -22,6 +22,7 @@ underestimates — exactly the complementarity of paper Table 1.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import List, NamedTuple, Optional, Sequence
 
@@ -35,7 +36,14 @@ from repro.core.ndv.types import ColumnBatch, ColumnMetadata, Layout, NDVEstimat
 
 
 class BatchEstimates(NamedTuple):
-    """Struct-of-arrays estimation output for B columns."""
+    """Struct-of-arrays estimation output for B columns.
+
+    The trailing provenance fields (route onward) are per-lane diagnostics
+    of HOW each estimate was produced. They are emitted by the same
+    single-definition pipeline body as the estimates themselves — fused and
+    unfused paths, every engine strategy — so they obey the identical
+    bit-parity contract, and they never enter cache keys or ETags.
+    """
 
     ndv: jnp.ndarray
     ndv_dict: jnp.ndarray
@@ -47,19 +55,29 @@ class BatchEstimates(NamedTuple):
     monotonicity: jnp.ndarray
     mean_len: jnp.ndarray
     dict_iterations: jnp.ndarray
+    route: jnp.ndarray             # int32 — combine.ROUTE_DICT / ROUTE_MINMAX
+    route_margin: jnp.ndarray      # float32 in [0, 1) — Eq 13 decisiveness
+    detector_margin: jnp.ndarray   # float32 — distance to nearest §6 threshold
+    dict_residual: jnp.ndarray     # float32 — worst normalized Eq 2 residual
+    coupon_iterations: jnp.ndarray  # int32 — §5 Newton iters, winning side
+    clamp_flags: jnp.ndarray       # int32 — combine.CLAMP_* bounds that bit
 
 
 def dict_estimate_column(
     batch: ColumnBatch,
     *,
     backend: str = "auto",
-) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """§4 per-chunk inversion -> per-column (ndv_dict, likely_fallback, iters).
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """§4 per-chunk inversion -> (ndv_dict, likely_fallback, iters, residual).
 
     Chunks whose writer-recorded encoding is plain are excluded from the max
     (their S does not obey Eq 1); if ALL chunks of a column are plain, the
     column-level fallback flag is raised and ndv_dict falls back to the
     plain-size implied bound S/len ~ rows (a lower-bound signal).
+
+    ``residual`` is the worst |Eq 2 residual| / S across the column's valid
+    chunks at the converged roots — the solver's own error signal, surfaced
+    for provenance (a large value means Eq 1 never fit that chunk's size).
     """
     inv = dict_inversion.invert_dict_size(
         batch.chunk_S,
@@ -79,7 +97,14 @@ def dict_estimate_column(
     ndv_col = jnp.maximum(ndv_col, 1.0)
     fallback_col = no_usable
     iters = jnp.max(jnp.where(batch.valid, inv.iterations, 0), axis=-1)
-    return ndv_col, fallback_col, iters
+    chunk_non_null = jnp.maximum(batch.chunk_rows - batch.chunk_nulls, 0.0)
+    resid = jnp.abs(
+        dict_inversion.residual(
+            inv.ndv, batch.chunk_S, batch.mean_len[:, None], chunk_non_null
+        )
+    ) / jnp.maximum(batch.chunk_S, 1.0)
+    resid = jnp.max(jnp.where(batch.valid, resid, 0.0), axis=-1)
+    return ndv_col, fallback_col, iters, resid.astype(jnp.float32)
 
 
 def estimate_batch_core(
@@ -108,10 +133,12 @@ def estimate_batch_core(
             batch, metrics.overlap_ratio, backend=backend
         )
         ndv_dict, likely_fallback = imp.ndv, imp.likely_fallback
-        _, _, dict_iters = dict_estimate_column(batch, backend=backend)
-    else:
-        ndv_dict, likely_fallback, dict_iters = dict_estimate_column(
+        _, _, dict_iters, dict_resid = dict_estimate_column(
             batch, backend=backend
+        )
+    else:
+        ndv_dict, likely_fallback, dict_iters, dict_resid = (
+            dict_estimate_column(batch, backend=backend)
         )
 
     # --- §5: min/max diversity --------------------------------------------
@@ -150,6 +177,23 @@ def estimate_batch_core(
         schema_bound=schema_bound,
         suspect_clustered=suspect_clustered,
     )
+    # Detector margin: distance of the (overlap, monotonicity) metrics to
+    # the NEAREST §6 classification threshold. A small margin means the
+    # layout class — and with it the aggregation route — was a near-tie.
+    ov, mono = metrics.overlap_ratio, metrics.monotonicity
+    detector_margin = jnp.minimum(
+        jnp.minimum(
+            jnp.minimum(
+                jnp.abs(ov - distribution.SORTED_OVERLAP),
+                jnp.abs(mono - distribution.SORTED_MONO),
+            ),
+            jnp.minimum(
+                jnp.abs(ov - distribution.PSEUDO_OVERLAP),
+                jnp.abs(mono - distribution.PSEUDO_MONO),
+            ),
+        ),
+        jnp.abs(ov - distribution.WELL_SPREAD_OVERLAP),
+    ).astype(jnp.float32)
     return BatchEstimates(
         ndv=comb.ndv,
         ndv_dict=ndv_dict,
@@ -161,6 +205,12 @@ def estimate_batch_core(
         monotonicity=metrics.monotonicity,
         mean_len=batch.mean_len,
         dict_iterations=dict_iters,
+        route=comb.route,
+        route_margin=comb.route_margin,
+        detector_margin=detector_margin,
+        dict_residual=dict_resid,
+        coupon_iterations=mm.iterations,
+        clamp_flags=comb.clamp_flags,
     )
 
 
@@ -241,6 +291,141 @@ def estimates_from_batch(
             )
         )
     return res
+
+
+ROUTE_NAMES = {
+    int(combine_mod.ROUTE_MINMAX): "minmax",
+    int(combine_mod.ROUTE_DICT): "dict",
+}
+
+_CLAMP_NAMES = (
+    (combine_mod.CLAMP_NON_NULL, "non_null"),
+    (combine_mod.CLAMP_INT_RANGE, "int_range"),
+    (combine_mod.CLAMP_SINGLE_BYTE, "single_byte"),
+    (combine_mod.CLAMP_SCHEMA, "schema_bound"),
+)
+
+
+def clamp_names(flags: int) -> List[str]:
+    """Human-readable names of the CLAMP_* bits set in ``flags``."""
+    return [name for bit, name in _CLAMP_NAMES if flags & bit]
+
+
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """How one column's estimate was produced (per-lane diagnostics).
+
+    Deliberately a SEPARATE record from `NDVEstimate`: estimate identity
+    (bodies, ETags, caches, spills) is derived by iterating NDVEstimate's
+    fields, so diagnostics must live outside it to stay bit-neutral.
+    Attached to responses only on explicit `?explain=1` request.
+    """
+
+    column_name: str
+    route: str              # "dict" (§4 won Eq 13's max) or "minmax" (§5)
+    route_margin: float     # [0, 1): 0 = the two signals tied
+    detector_margin: float  # distance to the nearest §6 threshold
+    overlap_ratio: float
+    monotonicity: float
+    layout: str
+    dict_iterations: int    # §4 Newton iterations (max over chunks)
+    dict_residual: float    # worst |Eq 2 residual| / S at the roots
+    coupon_iterations: int  # §5 Newton iterations, winning side
+    clamp_flags: int        # raw combine.CLAMP_* bitmask
+    clamps: tuple           # decoded clamp names, e.g. ("schema_bound",)
+    schema_bound_hit: bool
+    is_lower_bound: bool
+    confidence: float
+
+
+def provenance_from_batch(
+    out: BatchEstimates, batch: ColumnBatch, names: Sequence[str],
+    *, offset: int = 0
+) -> List[Provenance]:
+    """Materialize per-column Provenance from batched output.
+
+    Mirrors `estimates_from_batch` (one device-to-host copy per field,
+    `offset` selects the lane span of a super-packed batch). Reads ONLY
+    `out` — callers that cached the BatchEstimates can materialize
+    provenance later without re-running the engine.
+    """
+    host = {
+        f: np.asarray(getattr(out, f))
+        for f in (
+            "route", "route_margin", "detector_margin", "dict_iterations",
+            "dict_residual", "coupon_iterations", "clamp_flags", "layout",
+            "overlap_ratio", "monotonicity", "is_lower_bound", "confidence",
+        )
+    }
+    res: List[Provenance] = []
+    for j, name in enumerate(names):
+        i = offset + j
+        flags = int(host["clamp_flags"][i])
+        res.append(
+            Provenance(
+                column_name=name,
+                route=ROUTE_NAMES[int(host["route"][i])],
+                route_margin=float(host["route_margin"][i]),
+                detector_margin=float(host["detector_margin"][i]),
+                overlap_ratio=float(host["overlap_ratio"][i]),
+                monotonicity=float(host["monotonicity"][i]),
+                layout=Layout(int(host["layout"][i])).name,
+                dict_iterations=int(host["dict_iterations"][i]),
+                dict_residual=float(host["dict_residual"][i]),
+                coupon_iterations=int(host["coupon_iterations"][i]),
+                clamp_flags=flags,
+                clamps=tuple(clamp_names(flags)),
+                schema_bound_hit=bool(flags & combine_mod.CLAMP_SCHEMA),
+                is_lower_bound=bool(host["is_lower_bound"][i]),
+                confidence=float(host["confidence"][i]),
+            )
+        )
+    return res
+
+
+_PROVENANCE_FIELDS = tuple(f.name for f in dataclasses.fields(Provenance))
+
+
+def provenance_to_json(p: Provenance) -> dict:
+    """JSON-representable dict form (lists instead of tuples).
+
+    Built by direct attribute access, not `dataclasses.asdict` — asdict
+    runs the recursive deep-copy machinery, which dominated the warm
+    explain path (every `?explain=1` response serializes every column).
+    """
+    d = {name: getattr(p, name) for name in _PROVENANCE_FIELDS}
+    d["clamps"] = list(p.clamps)
+    return d
+
+
+def record_provenance_metrics(provs: Sequence[Provenance]) -> None:
+    """Observe freshly-computed provenance into the metrics registry.
+
+    Called once per engine run at materialization time (never on cache
+    hits), so the `ndv_route_total` / `ndv_newton_iters` /
+    `ndv_detector_margin` series count estimator work, not request traffic.
+    """
+    from repro.obs import metrics as obs_metrics
+
+    reg = obs_metrics.registry()
+    route_total = reg.counter(
+        "ndv_route_total", "estimates produced per winning estimator route"
+    )
+    newton = reg.histogram(
+        "ndv_newton_iters",
+        "Newton iterations per estimate, by solver",
+        buckets=obs_metrics.ITER_BUCKETS,
+    )
+    margin = reg.histogram(
+        "ndv_detector_margin",
+        "distance of detector metrics to the nearest layout threshold",
+        buckets=obs_metrics.MARGIN_BUCKETS,
+    )
+    for p in provs:
+        route_total.inc(route=p.route)
+        newton.observe(p.dict_iterations, solver="dict")
+        newton.observe(p.coupon_iterations, solver="coupon")
+        margin.observe(p.detector_margin)
 
 
 def estimate_columns(

@@ -143,6 +143,7 @@ class MinMaxDiversityResult(NamedTuple):
     ndv_from_min: jnp.ndarray
     ndv_from_max: jnp.ndarray
     saturated: jnp.ndarray    # (B,) bool — the winning side saturated
+    iterations: jnp.ndarray   # (B,) int32 — Newton iterations, winning side
 
 
 def estimate_minmax_diversity(
@@ -163,4 +164,5 @@ def estimate_minmax_diversity(
         ndv_from_min=lo.ndv,
         ndv_from_max=hi.ndv,
         saturated=saturated,
+        iterations=jnp.where(take_hi, hi.iterations, lo.iterations),
     )

@@ -62,12 +62,17 @@ class StatsRequest:
     # the body and extends the identity/ETag (a filtered response is a
     # different cacheable thing than the full one).
     columns: Optional[Tuple[str, ...]] = None
+    # Diagnostics request: attach per-column provenance to the body. Like
+    # `if_none_match`, NOT part of `identity` — an explained request must
+    # land on the same replica (same warm caches) as its plain twin.
+    explain: bool = False
 
     @property
     def identity(self) -> tuple:
         """The placement key: everything that names the cached response —
         and nothing that does not (`if_none_match` must not move a request
-        between replicas, or revalidations would land cold)."""
+        between replicas, or revalidations would land cold; `explain`
+        must not either, or diagnostics would probe a cold sibling)."""
         base = (self.kind, self.mode, self.schema_bounds or ())
         # Appended only when present, so pre-existing identities (and the
         # rendezvous placement derived from them) are unchanged.
@@ -86,6 +91,7 @@ class StatsRequest:
             mode=self.mode,
             schema_bounds=self.bounds_dict,
             if_none_match=self.if_none_match,
+            explain=self.explain,
         )
 
     @classmethod
@@ -101,6 +107,7 @@ class StatsRequest:
             schema_bounds=sb,
             if_none_match=q.if_none_match,
             columns=q.columns,
+            explain=q.explain,
         )
 
     def to_wire(self) -> dict:
@@ -114,6 +121,11 @@ class StatsRequest:
             d["bounds"] = self.bounds_dict
         if self.if_none_match is not None:
             d["if_none_match"] = self.if_none_match
+        if self.explain:
+            # Elided when false: explain-off frames are byte-identical to
+            # pre-provenance peers' frames (and those peers never see the
+            # field at all).
+            d["explain"] = True
         return d
 
 
@@ -146,6 +158,8 @@ class LocalReplica:
         engine_config: Optional[EngineConfig] = None,
         poll_interval: Optional[float] = None,
         max_workers: int = 8,
+        audit: bool = False,
+        audit_columns: int = 4,
     ):
         self.name = name
         self.service = StatsService(
@@ -155,6 +169,8 @@ class LocalReplica:
             max_workers=max_workers,
             shared_spill=True,
             name=name,  # /metrics series labeled {service="<replica name>"}
+            audit=audit,
+            audit_columns=audit_columns,
         )
         self._killed = False
 
@@ -188,6 +204,7 @@ class LocalReplica:
                 mode=req.mode,
                 schema_bounds=req.bounds_dict,
                 if_none_match=req.if_none_match,
+                explain=req.explain,
             )
         if req.kind == "plan":
             return self.service.plan(
@@ -277,6 +294,8 @@ class RemoteReplica:
             # Percent-escaped per side: a column name containing ':' or ','
             # survives the trip (parse_bounds unescapes after splitting).
             params["bounds"] = format_bounds(req.schema_bounds)
+        if req.kind == "estimate" and req.explain:
+            params["explain"] = "1"
         url = self.base_url + path + (
             "?" + urlencode(params) if params else ""
         )
@@ -308,6 +327,19 @@ class RemoteReplica:
             return raw.decode("utf-8")
         except UnicodeDecodeError:
             return None
+
+    def scrape_explain(self) -> Optional[dict]:
+        """This replica's `/debug/explain` body, or None if unreachable.
+
+        Mirrors `scrape_metrics`: best-effort, remote replicas only (a
+        local replica's service is queried directly by the router)."""
+        try:
+            status, _, body = self._fetch(self.base_url + "/debug/explain")
+        except Exception:
+            return None
+        if status != 200 or not isinstance(body, dict):
+            return None
+        return body
 
     def handle_batch(self, reqs: List[StatsRequest]) -> List[Response]:
         """Forward one sub-batch as a single binary `POST /batch` frame."""

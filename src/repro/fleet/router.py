@@ -13,6 +13,10 @@ over it, the same shape as `repro.service.StatsServer`:
   GET  /metrics                               Prometheus exposition, router +
                                               remote replicas (`replica` label)
   GET  /debug/traces?limit=N                  recent traces, JSON span trees
+  GET  /debug/explain?dataset=&namespace=     provenance caches + audit
+                                              samples, aggregated per replica
+                                              (local queried in-process,
+                                              remote scraped best-effort)
   POST /refresh                               broadcast refresh, all datasets
   POST /batch                                 many estimate tuples, one frame
   GET  /{ns}/{ds}/columns                     routed        [ETag passthrough]
@@ -58,6 +62,7 @@ from repro.service import (
     Response,
     batch_envelope,
     parse_bounds,
+    parse_explain,
     parse_query_tuple,
 )
 from repro.service.http import JSONResponseHandler
@@ -298,6 +303,40 @@ class Fleet:
                     )
         return "".join(parts)
 
+    def explain_view(self, dataset_key: Optional[str] = None) -> Response:
+        """Router-aggregated `/debug/explain`, patterned on `metrics_text`.
+
+        Local replicas are queried in-process (their service owns the
+        provenance cache); remote replicas are scraped best-effort — an
+        unreachable replica contributes nothing rather than failing the
+        view. `dataset_key` narrows to one registered dataset (404 when
+        unknown); None aggregates all of them.
+        """
+        self._bump(requests=1)
+        if dataset_key is not None:
+            if dataset_key not in self.sets:
+                self._bump(not_found=1)
+                return Response(
+                    404, {"error": f"unknown dataset {dataset_key!r}"}, None
+                )
+            keys = [dataset_key]
+        else:
+            keys = list(self.sets)
+        datasets: Dict[str, dict] = {}
+        for key in keys:
+            per_replica: Dict[str, dict] = {}
+            for replica in self.sets[key].replicas:
+                service = getattr(replica, "service", None)
+                if service is not None:
+                    per_replica[replica.name] = service.debug_explain().body
+                    continue
+                scrape = getattr(replica, "scrape_explain", None)
+                payload = scrape() if scrape is not None else None
+                if payload is not None:
+                    per_replica[replica.name] = payload
+            datasets[key] = per_replica
+        return Response(200, {"datasets": datasets}, None)
+
     def health(self) -> Response:
         self._bump(requests=1)
         views = {key: rset.health_view() for key, rset in self.sets.items()}
@@ -335,6 +374,25 @@ class _RouterHandler(JSONResponseHandler):
 
     def _metrics_text(self) -> str:
         return self.fleet.metrics_text()
+
+    def _explain_body(self, query) -> Response:
+        # /debug/* params are validated here, not trusted: junk answers a
+        # 400 JSON error (raised ValueError), never an unhandled 500.
+        ds = query.get("dataset", [None])[0]
+        ns = query.get("namespace", [None])[0]
+        if ds is not None and not ds.strip():
+            raise ValueError("dataset must be a non-empty dataset key")
+        if ns is not None:
+            if not ns.strip():
+                raise ValueError("namespace must be a non-empty string")
+            if ds is None:
+                raise ValueError("namespace requires a dataset")
+            try:
+                ds = self.fleet.registry.get(ns, ds).key
+            except KeyError as e:
+                self.fleet._bump(not_found=1)
+                return Response(404, {"error": str(e)}, None)
+        return self.fleet.explain_view(ds)
 
     def _split(self) -> Tuple[List[str], dict]:
         url = urlsplit(self.path)
@@ -379,11 +437,16 @@ class _RouterHandler(JSONResponseHandler):
                         ))
                     except ValueError as e:
                         return self._error(400, str(e))
+                try:
+                    explain = parse_explain(query)
+                except ValueError as e:
+                    return self._error(400, str(e))
                 req = StatsRequest(
                     kind=kind,
                     mode=query.get("mode", ["paper"])[0],
                     schema_bounds=bounds,
                     if_none_match=self.headers.get("If-None-Match"),
+                    explain=explain,
                 )
                 return self._send(self.fleet.route(ns, ds, req))
             self.fleet._bump(not_found=1)

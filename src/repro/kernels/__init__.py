@@ -34,5 +34,17 @@ Pallas — a correctness tool, never a serving path — so production
 dispatch off-TPU is always the reference program, fused or not. The
 ``fuse`` knob therefore changes launch structure only, never numerics,
 and stays out of engine cache identity (see engine/config.py).
+
+Provenance lanes: both the megakernel and the unfused pipeline emit
+per-column diagnostics as extra output lanes of the SAME program —
+route chosen + decision margin, detector margin, Newton iteration
+counts and final dict residual, clamp flags (see fused_estimate.py
+``_OUT_ROUTE..._OUT_CLAMP_FLAGS``). Because they are outputs of the
+shared numerics rather than a side channel, fused and ref twins agree
+on them bit-for-bit off-TPU, the strategy x device parity matrix pins
+them across serving topologies, and they can never perturb estimates
+or cache identity. The service tier surfaces them as `Provenance`
+records (?explain=1, /debug/explain) and the sketch auditor scores
+them against an hll.py reference — see repro.obs for the metrics side.
 """
 from repro.kernels import ops  # noqa: F401

@@ -66,7 +66,9 @@ _IN_INT_LIKE = 8
 _IN_SINGLE_BYTE = 9
 _IN_SCHEMA_BOUND = 10
 
-# Output lanes.
+# Output lanes. Lanes 9-14 carry the per-lane provenance diagnostics —
+# same exact-through-lanes properties (small ints, flags, float32) as the
+# estimate lanes, so fused provenance is bit-identical to the twin's.
 _OUT_NDV = 0
 _OUT_NDV_DICT = 1
 _OUT_NDV_MINMAX = 2
@@ -76,6 +78,12 @@ _OUT_CONFIDENCE = 5
 _OUT_OVERLAP = 6
 _OUT_MONOTONICITY = 7
 _OUT_DICT_ITERS = 8
+_OUT_ROUTE = 9
+_OUT_ROUTE_MARGIN = 10
+_OUT_DETECTOR_MARGIN = 11
+_OUT_DICT_RESIDUAL = 12
+_OUT_COUPON_ITERS = 13
+_OUT_CLAMP_FLAGS = 14
 
 
 def _fused_body(
@@ -133,6 +141,16 @@ def _fused_body(
     out = out.at[:, _OUT_MONOTONICITY].set(est.monotonicity)
     out = out.at[:, _OUT_DICT_ITERS].set(
         est.dict_iterations.astype(jnp.float32)
+    )
+    out = out.at[:, _OUT_ROUTE].set(est.route.astype(jnp.float32))
+    out = out.at[:, _OUT_ROUTE_MARGIN].set(est.route_margin)
+    out = out.at[:, _OUT_DETECTOR_MARGIN].set(est.detector_margin)
+    out = out.at[:, _OUT_DICT_RESIDUAL].set(est.dict_residual)
+    out = out.at[:, _OUT_COUPON_ITERS].set(
+        est.coupon_iterations.astype(jnp.float32)
+    )
+    out = out.at[:, _OUT_CLAMP_FLAGS].set(
+        est.clamp_flags.astype(jnp.float32)
     )
     out_ref[...] = out
 
@@ -205,4 +223,10 @@ def fused_estimate(batch, schema_bound=None, *, mode: str = "paper",
         monotonicity=out[:, _OUT_MONOTONICITY],
         mean_len=batch.mean_len.astype(jnp.float32),
         dict_iterations=out[:, _OUT_DICT_ITERS].astype(jnp.int32),
+        route=out[:, _OUT_ROUTE].astype(jnp.int32),
+        route_margin=out[:, _OUT_ROUTE_MARGIN],
+        detector_margin=out[:, _OUT_DETECTOR_MARGIN],
+        dict_residual=out[:, _OUT_DICT_RESIDUAL],
+        coupon_iterations=out[:, _OUT_COUPON_ITERS].astype(jnp.int32),
+        clamp_flags=out[:, _OUT_CLAMP_FLAGS].astype(jnp.int32),
     )

@@ -64,6 +64,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slow-request-ms", type=float, default=None,
                     help="log one structured line per request slower than "
                          "this many milliseconds (default: off)")
+    ap.add_argument("--audit", action="store_true",
+                    help="per-replica accuracy auditor: sample columns each "
+                         "refresh, sketch a reference NDV, record q-error "
+                         "into /metrics (ndv_audit_qerror)")
+    ap.add_argument("--audit-columns", type=int, default=4,
+                    help="columns sampled per audit generation")
     ap.add_argument("--smoke", action="store_true",
                     help="boot 2 replicas x 2 temp datasets on an ephemeral "
                          "port, run the scripted failover client, exit")
@@ -85,6 +91,8 @@ def _make_router(args: argparse.Namespace, registry: DatasetRegistry) -> StatsRo
         replicas_per_dataset=args.replicas,
         probe_interval=args.probe_interval or None,
         poll_interval=args.refresh_interval or None,
+        audit=args.audit,
+        audit_columns=args.audit_columns,
     )
     return StatsRouter(
         fleet,
@@ -117,6 +125,7 @@ def run_smoke(args: argparse.Namespace) -> int:
         **vars(args),
         "port": 0, "replicas": 2,
         "refresh_interval": 0.0, "probe_interval": 0.0,
+        "audit": True, "audit_columns": 2,
     })
     base = tempfile.mkdtemp()
     registry = DatasetRegistry()
@@ -208,6 +217,22 @@ def run_smoke(args: argparse.Namespace) -> int:
         status, _, health = fetch_json(base_url + "/health")
         assert status == 200 and health["status"] == "serving", health
 
+        # -- quality observability: explain round-trip + audited q-error --
+        url = router.url_for("smoke", "beta", "estimate") \
+            + "?mode=improved&explain=1"
+        status, etag, explained = fetch_json(url)
+        assert status == 200 and etag == etags["beta"][0], (status, etag)
+        assert explained["provenance"].keys() \
+            == etags["beta"][1]["estimates"].keys()
+        assert {k: v for k, v in explained.items() if k != "provenance"} \
+            == etags["beta"][1], "explain must not perturb the body"
+        # one deterministic audit pass per live replica (the background
+        # auditor is commit-driven; the smoke drives it synchronously)
+        for rset_ in fleet.sets.values():
+            for rep in rset_.replicas:
+                if rep.probe():
+                    rep.service.run_audit()
+
         # -- telemetry: /metrics key series + the batch's own trace --
         import json as _json
         import urllib.request as _req
@@ -216,7 +241,8 @@ def run_smoke(args: argparse.Namespace) -> int:
             metrics = r.read().decode()
         for series in ("ndv_http_requests_total", "ndv_service_responses_304",
                        "ndv_service_engine_runs", "ndv_pool_opened",
-                       "ndv_fleet_batches", "ndv_engine_dispatches_total"):
+                       "ndv_fleet_batches", "ndv_engine_dispatches_total",
+                       "ndv_route_total", "ndv_audit_qerror"):
             assert series in metrics, f"/metrics missing {series}"
         with _req.urlopen(base_url + "/debug/traces?limit=10") as r:
             traces = _json.load(r)["traces"]
@@ -236,7 +262,8 @@ def run_smoke(args: argparse.Namespace) -> int:
               f"stable across replicas, 304 revalidation on survivor, "
               f"fresh replica warm from spill (0 packs), binary /batch "
               f"across both datasets with per-tuple 304s through a "
-              f"mid-batch kill on one keep-alive connection, /metrics + "
+              f"mid-batch kill on one keep-alive connection, ?explain=1 "
+              f"provenance with stable ETag, audited q-error in /metrics, "
               f"/debug/traces scraped")
     # context exit shut everything down; a second connect must now fail
     try:

@@ -48,6 +48,12 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--slow-request-ms", type=float, default=None,
                     help="log one structured line per request slower than "
                          "this many milliseconds (default: off)")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the background accuracy auditor: sample columns "
+                         "each refresh, sketch a reference NDV, record "
+                         "q-error into /metrics (ndv_audit_qerror)")
+    ap.add_argument("--audit-columns", type=int, default=4,
+                    help="columns sampled per audit generation")
     ap.add_argument("--smoke", action="store_true",
                     help="boot on a temp dataset + ephemeral port, run a "
                          "scripted client, exit (asserts clean shutdown)")
@@ -65,6 +71,8 @@ def _make_server(args: argparse.Namespace, root: str) -> StatsServer:
         poll_interval=args.refresh_interval or None,
         auto_load_cache=args.auto_load_cache,
         save_cache_on_commit=args.save_cache_on_commit,
+        audit=args.audit,
+        audit_columns=args.audit_columns,
     )
     return StatsServer(
         service,
@@ -95,7 +103,7 @@ def _smoke_dataset() -> str:
 
 def run_smoke(args: argparse.Namespace) -> int:
     args = argparse.Namespace(**{**vars(args), "port": 0,
-                                 "refresh_interval": 0.0})
+                                 "refresh_interval": 0.0, "audit": True})
     root = args.root or _smoke_dataset()
     with _make_server(args, root) as server:
         base = server.url
@@ -122,6 +130,19 @@ def run_smoke(args: argparse.Namespace) -> int:
         )
         tuple_statuses = [e["status"] for e in env["responses"]]
         assert statusb == 200 and tuple_statuses == [200, 304], env
+        # explain round-trip: provenance attaches without rotating the ETag
+        # and the stripped body is byte-identical to the plain response
+        # (quality-observability acceptance, ISSUE 9)
+        statuse, etage, explained = fetch_json(
+            base + "/estimate?mode=improved&explain=1"
+        )
+        assert statuse == 200 and etage == etag, (statuse, etage)
+        assert explained["provenance"].keys() == body["estimates"].keys()
+        assert {k: v for k, v in explained.items() if k != "provenance"} \
+            == body, "explain must not perturb the response body"
+        # one synchronous audit pass (the background thread is event-driven;
+        # the smoke drives it deterministically) feeds the q-error series
+        server.service.run_audit()
         # /metrics serves the key series and /debug/traces recorded the
         # smoke's own batch (telemetry acceptance, ISSUE 8)
         import json as _json
@@ -131,7 +152,8 @@ def run_smoke(args: argparse.Namespace) -> int:
             metrics = r.read().decode()
         for series in ("ndv_http_requests_total", "ndv_service_responses_304",
                        "ndv_service_engine_runs", "ndv_batch_tuples",
-                       "ndv_engine_dispatches_total"):
+                       "ndv_engine_dispatches_total", "ndv_route_total",
+                       "ndv_audit_qerror"):
             assert series in metrics, f"/metrics missing {series}"
         with _req.urlopen(base + "/debug/traces?limit=10") as r:
             traces = _json.load(r)["traces"]
@@ -141,7 +163,8 @@ def run_smoke(args: argparse.Namespace) -> int:
               f"etag {etag[:10]}..., 304 revalidation, "
               f"{health['ingest']['footers_read']} footers read async, "
               f"binary /estimate bit-identical, /batch per-tuple 200+304, "
-              f"/metrics + /debug/traces scraped")
+              f"?explain=1 provenance with stable ETag, audited q-error in "
+              f"/metrics, /debug/traces scraped")
     # context exit shut the server down; a second connect must now fail
     try:
         fetch_json(base + "/health")

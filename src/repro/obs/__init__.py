@@ -30,6 +30,37 @@ Telemetry is NEUTRAL by contract: nothing here enters `cache_key`,
 byte-identical with telemetry on or off (`set_enabled(False)` turns
 every increment and span into a no-op; `benchmarks/obs_overhead.py`
 holds the warm-path overhead under 5%).
+
+Estimation-quality observability rides the same registry. Every batch
+the estimator runs also emits per-lane PROVENANCE (core/ndv: route
+chosen + margin, detector margin, Newton iteration counts/residual,
+clamps hit) — extra output lanes of the one shared program, so fused
+and unfused twins produce identical diagnostics and nothing enters
+cache identity:
+
+    estimate_batch ──▶ BatchEstimates(+route, margins, iters, clamps)
+         │ provenance_from_batch (estimator.py)
+         ▼
+    catalog.provenance_cache_store   ← the ONE funnel that records
+         │                             ndv_route_total{route=},
+         │                             ndv_newton_iters{solver=},
+         │                             ndv_detector_margin
+         ├─▶ ?explain=1 on /estimate and per-tuple in /batch
+         │     (same ETag — explain never enters identity; wire frames
+         │      carry it in a tagged section old peers skip)
+         ├─▶ GET /debug/explain      (per-dataset cache dump; the
+         │                            router aggregates per replica)
+         └─▶ audit loop (service.py, opt-in): samples K columns per
+               refresh generation, reference NDV from an HLL sketch
+               over one row group (kernels/hll.py), q-error lands in
+               ndv_audit_qerror{route=} and rides explain payloads
+
+Metric naming conventions: every series is `ndv_<subsystem>_<noun>`
+with unit suffixes per Prometheus style (`_total` counters, `_seconds`/
+`_bytes` in the name, `_bucket`/`_sum`/`_count` for histograms). Labels
+are low-cardinality enums only (route, solver, tier, status — never
+column or dataset names on estimator series; the router adds
+`replica="<name>"` when re-emitting remote scrapes).
 """
 from repro.obs import _state
 from repro.obs.metrics import (

@@ -48,6 +48,17 @@ LATENCY_BUCKETS_S = (
 # packer's own bucketing instincts.
 WIDTH_BUCKETS = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 1024.0)
 
+# Estimation-quality buckets (`ndv_*` provenance/audit families; naming
+# convention: estimator-quality series are `ndv_<signal>` with `route=` /
+# `solver=` labels, never per-column labels — cardinality stays O(1)).
+# Newton iteration counts: solvers cap at 32 (§4) / 40 (§5).
+ITER_BUCKETS = (1.0, 2.0, 4.0, 6.0, 8.0, 12.0, 16.0, 24.0, 32.0, 40.0)
+# Detector/route margins live in [0, 1); resolution concentrated near 0
+# where routing decisions are fragile.
+MARGIN_BUCKETS = (0.005, 0.01, 0.02, 0.05, 0.1, 0.2, 0.3, 0.5, 0.75)
+# Audit q-error = max(est/ref, ref/est) >= 1; log-ish spacing.
+QERROR_BUCKETS = (1.05, 1.1, 1.25, 1.5, 2.0, 3.0, 5.0, 10.0, 30.0, 100.0)
+
 _N_STRIPES = 16
 
 

@@ -62,6 +62,20 @@ each other. Responses negotiate a compact binary encoding
 (`Accept: application/x-ndv-wire`, `repro.wire`) that decodes to
 bit-identical bodies with the same ETags; JSON stays the default.
 
+Estimation-quality observability: `?explain=1` on `/estimate` (and a
+per-tuple `explain` flag in `/batch`) attaches per-column `Provenance`
+— route chosen + margin, detector margin, Newton iterations/residual,
+clamps, plus the audited q-error when available — WITHOUT touching the
+ETag: explain is excluded from request identity, so explained and plain
+responses validate each other and differ only by the sidecar (a tagged
+wire-frame section old peers skip; explained payloads are memoized per
+(etag, wire, audit_version)). `GET /debug/explain` dumps the catalog's
+provenance cache + audit samples. The opt-in auditor
+(`StatsService(audit=True, audit_columns=K)`) samples K columns per
+refresh generation, computes a reference NDV from an HLL sketch over
+one row group (`repro.kernels.hll`), and records q-error into
+`ndv_audit_qerror{route=}` — see `repro.obs` for the metrics map.
+
 Entry points: `repro.launch.serve_stats` (CLI), `serve()` (library),
 `examples/profile_dataset.py --serve` (demo). For many datasets behind
 one endpoint with N replicas each, see the fleet tier (`repro.fleet`):
@@ -78,11 +92,13 @@ from repro.service.http import (  # noqa: F401
     make_handler,
     parse_batch_queries,
     parse_bounds,
+    parse_explain,
     parse_query_tuple,
     serve,
 )
 from repro.service.ingest import AsyncIngestor, IngestStats  # noqa: F401
 from repro.service.service import (  # noqa: F401
+    AuditResult,
     EstimateQuery,
     Response,
     ServiceStats,

@@ -10,12 +10,20 @@ Routes (responses are JSON by default):
 
   GET  /health                       liveness + counters (never cached)
   GET  /columns                      merged per-column summary      [ETag]
-  GET  /estimate?mode=&bounds=       per-column NDV estimates       [ETag]
+  GET  /estimate?mode=&bounds=&explain=  per-column NDV estimates   [ETag]
   GET  /plan?mode=                   per-column memory plans        [ETag]
   GET  /metrics                      Prometheus text exposition (uncached)
   GET  /debug/traces?limit=N         recent request traces, JSON span trees
+  GET  /debug/explain                provenance cache + audit samples
   POST /batch                        many estimate tuples, one frame
   POST /refresh                      force one ingestion refresh
+
+`explain=1` attaches per-column estimation provenance (chosen route and
+its margin, detector margin, Newton iteration counts and residual,
+clamps hit, plus the latest audit sample) under a "provenance" key. The
+flag is identity-neutral: ETags, 304 behavior, and explain-off bodies
+are byte-identical to an explain-free server; on the wire encoding the
+provenance rides in its own frame section (tag 4) that old peers skip.
 
 `bounds` is `name:value[,name:value...]` (schema-knowledge NDV upper
 bounds, Eq 14-15 family); names and values may be percent-escaped, so
@@ -161,17 +169,33 @@ def format_bounds(bounds) -> str:
     )
 
 
+def parse_explain(query: Dict[str, List[str]]) -> bool:
+    """`?explain=` query value -> bool (ValueError on junk).
+
+    Accepts the usual boolean spellings; anything else is a request error
+    (400), never a silent false — a typo'd diagnostics request that
+    quietly returns an unexplained body is worse than rejection.
+    """
+    raw = query.get("explain", ["0"])[0].strip().lower()
+    if raw in ("", "0", "false", "no"):
+        return False
+    if raw in ("1", "true", "yes"):
+        return True
+    raise ValueError(f"explain must be a boolean flag, got {raw!r}")
+
+
 def parse_query_tuple(d: dict) -> EstimateQuery:
     """One `/batch` tuple dict -> `EstimateQuery` (ValueError on junk).
 
     `bounds` accepts either a `{name: value}` mapping (the native batch
     shape) or the GET query-string format (`parse_bounds` syntax), so a
-    client can forward query strings verbatim.
+    client can forward query strings verbatim. `explain` accepts a bool
+    or 0/1.
     """
     if not isinstance(d, dict):
         raise ValueError(f"batch tuple must be an object, got {type(d).__name__}")
     unknown = set(d) - {"columns", "mode", "bounds", "if_none_match",
-                        "namespace", "dataset"}
+                        "namespace", "dataset", "explain"}
     if unknown:
         raise ValueError(f"unknown batch tuple fields {sorted(unknown)}")
     cols = d.get("columns")
@@ -195,8 +219,12 @@ def parse_query_tuple(d: dict) -> EstimateQuery:
     inm = d.get("if_none_match")
     if inm is not None and not isinstance(inm, str):
         raise ValueError("'if_none_match' must be a string")
+    explain = d.get("explain", False)
+    if explain not in (True, False, 0, 1):
+        raise ValueError("'explain' must be a boolean or 0/1")
     return EstimateQuery(
-        columns=cols, mode=mode, schema_bounds=bounds, if_none_match=inm
+        columns=cols, mode=mode, schema_bounds=bounds, if_none_match=inm,
+        explain=bool(explain),
     )
 
 
@@ -282,7 +310,11 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
         if method == "GET" and url.path == "/metrics":
             return self._serve_metrics()
         if method == "GET" and url.path == "/debug/traces":
-            return self._serve_traces(parse_qs(url.query))
+            # keep_blank_values so `?limit=` reaches validation and earns a
+            # 400 instead of silently vanishing from the parse.
+            return self._serve_traces(parse_qs(url.query, keep_blank_values=True))
+        if method == "GET" and url.path == "/debug/explain":
+            return self._serve_explain(parse_qs(url.query, keep_blank_values=True))
 
         self._raw_body = b""
         if method == "POST":
@@ -349,8 +381,29 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
             limit = int(query.get("limit", ["20"])[0])
         except ValueError:
             return self._error(400, "limit must be an integer")
+        if limit < 0:
+            # A negative limit reaches the ring as a hostile slice index;
+            # reject it as the request error it is, not a 500.
+            return self._error(400, "limit must be >= 0")
         trees = [trace_tree(spans) for spans in collector().traces(limit)]
         self._send(Response(200, {"traces": trees}, None))
+
+    def _explain_body(self, query: Dict[str, List[str]]) -> Response:
+        """`/debug/explain` payload; servers with a provenance source
+        override (per-dataset: the service's cache; router: aggregation).
+        May raise ValueError for malformed query params -> 400."""
+        return Response(
+            404, {"error": "this server has no provenance source"}, None
+        )
+
+    def _serve_explain(self, query: Dict[str, List[str]]) -> None:
+        try:
+            resp = self._explain_body(query)
+        except ValueError as e:
+            return self._error(400, str(e))
+        except Exception as e:
+            return self._error(500, f"{type(e).__name__}: {e}")
+        self._send(resp)
 
     def _wants_wire(self) -> bool:
         """Whether the request negotiated the binary encoding.
@@ -361,15 +414,33 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
         """
         return WIRE_CONTENT_TYPE in (self.headers.get("Accept") or "")
 
+    def _encode_payload(self, resp: Response, wire: bool) -> bytes:
+        """Serialize a response body (wire frame or JSON bytes).
+
+        Overridable: the service handler memoizes explained payloads here
+        (provenance is immutable for a given ETag + audit pass, so its
+        serialization need not repeat per request).
+        """
+        if wire:
+            # Top-level provenance (an explained /estimate) rides in
+            # the frame's EXPLAIN section, keeping the value section —
+            # and so the body an old peer decodes — explain-blind;
+            # `repro.wire.client.fetch` re-attaches it.
+            body, explain = resp.body, None
+            if isinstance(body, dict) and "provenance" in body:
+                explain = body["provenance"]
+                body = {
+                    k: v for k, v in body.items() if k != "provenance"
+                }
+            return encode_frame(body, explain=explain)
+        return json.dumps(resp.body).encode()
+
     def _send(self, resp: Response) -> None:
         self._status = resp.status
         wire = self._wants_wire()
         payload = b""
         if resp.body is not None:
-            payload = (
-                encode_frame(resp.body) if wire
-                else json.dumps(resp.body).encode()
-            )
+            payload = self._encode_payload(resp, wire)
         self.send_response(resp.status)
         if resp.etag is not None:
             self.send_header("ETag", resp.etag)
@@ -410,6 +481,27 @@ class _Handler(JSONResponseHandler):
     service: StatsService  # injected by make_handler
     server_version = "ndv-stats"
 
+    def _explain_body(self, query) -> Response:
+        return self.service.debug_explain()
+
+    def _encode_payload(self, resp: Response, wire: bool) -> bytes:
+        # Explained responses re-serialize the same provenance on every
+        # request; memoize the bytes on the service. The ETag names the
+        # estimate state and the audit version names the q-error sidecar —
+        # together they pin everything an explained payload contains.
+        if (
+            resp.etag is not None
+            and isinstance(resp.body, dict)
+            and "provenance" in resp.body
+        ):
+            key = (resp.etag, wire, self.service.audit_version)
+            cached = self.service.explain_payload_peek(key)
+            if cached is None:
+                cached = super()._encode_payload(resp, wire)
+                self.service.explain_payload_store(key, cached)
+            return cached
+        return super()._encode_payload(resp, wire)
+
     # -- routes --------------------------------------------------------------
 
     def handle_get(self, url) -> None:
@@ -427,10 +519,15 @@ class _Handler(JSONResponseHandler):
             elif url.path == "/columns":
                 self._send(self.service.columns(if_none_match=inm))
             elif url.path == "/estimate":
+                try:
+                    explain = parse_explain(query)
+                except ValueError as e:
+                    return self._error(400, str(e))
                 self._send(self.service.estimate(
                     mode=query.get("mode", ["paper"])[0],
                     schema_bounds=bounds,
                     if_none_match=inm,
+                    explain=explain,
                 ))
             elif url.path == "/plan":
                 self._send(self.service.plan(

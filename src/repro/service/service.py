@@ -31,6 +31,7 @@ import dataclasses
 import hashlib
 import threading
 import time
+from collections import OrderedDict
 from typing import (
     Callable,
     Dict,
@@ -49,7 +50,9 @@ from repro.catalog import (
     superpack_estimate,
 )
 from repro.catalog.source import MetadataSource
+from repro.core.ndv.estimator import provenance_to_json
 from repro.obs import registry, span
+from repro.obs.metrics import QERROR_BUCKETS
 from repro.service.ingest import AsyncIngestor
 
 MODES = ("paper", "improved")
@@ -68,6 +71,29 @@ class EstimateQuery(NamedTuple):
     mode: str = "paper"
     schema_bounds: Optional[Dict[str, float]] = None
     if_none_match: Optional[str] = None
+    # Diagnostics-only: excluded from the ETag identity and the
+    # single-flight key, so explain-on and explain-off tuples coalesce and
+    # revalidate against each other; provenance attaches to a COPY of the
+    # published body, never to the shared single-flight result.
+    explain: bool = False
+
+
+class AuditResult(NamedTuple):
+    """One sketch-audited column: dataset estimate vs a sampled reference.
+
+    The reference is a HyperLogLog count (`repro.kernels.hll`) over ONE
+    row group per file — a zero-ish-cost sample, not a full scan — so the
+    q-error is a drift signal (route misfires, systematic bias), not a
+    full-accuracy statement. `row_group` is the sampled index.
+    """
+
+    column: str
+    route: str
+    estimate: float
+    reference: float
+    qerror: float
+    generation: int
+    row_group: int
 
 
 class Response(NamedTuple):
@@ -211,6 +237,16 @@ class StatsService:
         ejection signal) without affecting direct request serving.
       name: telemetry label for this service's stats views in `/metrics`
         (`{service="<name>"}`) — distinguishes replicas sharing a process.
+      audit: opt-in background accuracy auditor. After every committed
+        refresh (and once at start) a daemon thread samples
+        `audit_columns` columns — a rotating, generation-keyed window over
+        the sorted column list — computes a reference NDV with the HLL
+        sketch kernel over one row group per file, and records
+        `max(est/ref, ref/est)` into the `ndv_audit_qerror{route=}`
+        histogram. Results surface per column in `?explain=1` bodies and
+        `/debug/explain`. Requires a filesystem-backed source (the sketch
+        reads raw values); columns whose data cannot be read are skipped.
+      audit_columns: sample width K per audit pass.
     """
 
     def __init__(
@@ -225,6 +261,8 @@ class StatsService:
         shared_spill: bool = False,
         health_hook: Optional[Callable[[], bool]] = None,
         name: str = "stats",
+        audit: bool = False,
+        audit_columns: int = 4,
     ):
         if shared_spill:
             auto_load_cache = True
@@ -252,6 +290,17 @@ class StatsService:
         self._flight = SingleFlight()
         self._state_token: Optional[str] = None
         self._started_at = time.monotonic()
+        self.audit_enabled = audit
+        self.audit_columns = audit_columns
+        self._audit_results: Dict[str, AuditResult] = {}
+        self._audit_wake = threading.Event()
+        self._audit_thread: Optional[threading.Thread] = None
+        # Serialized explained payloads (wire frames / JSON bytes), keyed
+        # by (etag, wire, audit_version) — see `_Handler._encode_payload`.
+        # `audit_version` bumps whenever the audit sidecar changes, so a
+        # new audit pass orphans stale entries instead of serving them.
+        self.audit_version = 0
+        self._explain_payloads: "OrderedDict[tuple, bytes]" = OrderedDict()
         # The pre-existing stats objects stay the single source of truth;
         # /metrics reads them live through weakref views (repro.obs).
         self.name = name
@@ -269,10 +318,20 @@ class StatsService:
         self.refresh()
         if self.ingestor.poll_interval:
             self.ingestor.start()
+        if self.audit_enabled and self._audit_thread is None:
+            self._audit_wake.set()  # audit the initial state too
+            self._audit_thread = threading.Thread(
+                target=self._audit_loop, name="ndv-audit", daemon=True
+            )
+            self._audit_thread.start()
 
     def stop(self) -> None:
         self.ingestor.stop()
         self.closed = True
+        if self._audit_thread is not None:
+            self._audit_wake.set()  # wake the loop so it observes `closed`
+            self._audit_thread.join(timeout=10.0)
+            self._audit_thread = None
 
     def probe(self) -> bool:
         """Replica-manager liveness probe (the fleet tier's health signal).
@@ -303,6 +362,8 @@ class StatsService:
         self._state_token = self._compute_state_token()
         if self.save_cache_on_commit:
             self.catalog.save_cache()
+        if self.audit_enabled:
+            self._audit_wake.set()  # new generation: schedule an audit pass
 
     def _ensure_ready(self) -> None:
         if not self.catalog.scanned:
@@ -407,10 +468,18 @@ class StatsService:
         mode: str = "paper",
         schema_bounds: Optional[Dict[str, float]] = None,
         if_none_match: Optional[str] = None,
+        explain: bool = False,
     ) -> Response:
         """Dataset-level NDV estimates, bit-identical to
-        `StatsCatalog.estimate()` under the same engine config."""
-        return self._cached_endpoint(
+        `StatsCatalog.estimate()` under the same engine config.
+
+        `explain=True` attaches per-column provenance (route, margins,
+        Newton diagnostics, clamps — plus the latest audit sample when the
+        auditor has one) under a "provenance" key, on a COPY of the body:
+        the ETag, the single-flight result, and every explain-off response
+        stay byte-identical to the explain-free server.
+        """
+        resp = self._cached_endpoint(
             "estimate", mode, schema_bounds, if_none_match,
             lambda etag, gen: {
                 "etag": etag,
@@ -425,6 +494,9 @@ class StatsService:
                 },
             },
         )
+        if explain:
+            resp = self._attach_provenance(resp, mode, schema_bounds)
+        return resp
 
     def plan(
         self,
@@ -535,6 +607,14 @@ class StatsService:
                 continue
             self.stats.responses_200 += 1
             responses[i] = Response(200, body, body["etag"])
+        for i, q in enumerate(queries):
+            # After publication: provenance attaches to per-tuple COPIES,
+            # so coalesced tuples sharing a leader's body are unaffected.
+            if q.explain and responses[i] is not None \
+                    and responses[i].status == 200:
+                responses[i] = self._attach_provenance(
+                    responses[i], q.mode, q.schema_bounds, q.columns
+                )
         return responses
 
     def _batch_compute(self, claimed: List[tuple], responses: list) -> None:
@@ -615,6 +695,223 @@ class StatsService:
             self.stats.single_flight_leaders += 1
             self.stats.responses_200 += 1
             responses[i] = Response(200, body, body["etag"])
+
+    # -- provenance + audit --------------------------------------------------
+
+    _EXPLAIN_PAYLOADS_MAX = 32
+
+    def explain_payload_peek(self, key: tuple) -> Optional[bytes]:
+        """Memoized serialized explained payload, or None.
+
+        Keys carry (etag, wire-format flag, audit_version): the ETag pins
+        the estimate state and request identity, the audit version the
+        q-error sidecar — nothing else can change an explained payload's
+        bytes. Filled by the HTTP handler (`_Handler._encode_payload`).
+        """
+        with self.lock:
+            payload = self._explain_payloads.get(key)
+            if payload is not None:
+                self._explain_payloads.move_to_end(key)
+            return payload
+
+    def explain_payload_store(self, key: tuple, payload: bytes) -> None:
+        with self.lock:
+            self._explain_payloads[key] = payload
+            self._explain_payloads.move_to_end(key)
+            while len(self._explain_payloads) > self._EXPLAIN_PAYLOADS_MAX:
+                self._explain_payloads.popitem(last=False)
+
+    def _attach_provenance(
+        self,
+        resp: Response,
+        mode: str,
+        schema_bounds: Optional[Dict[str, float]],
+        columns: Optional[Tuple[str, ...]] = None,
+    ) -> Response:
+        """Explained twin of a 200 response: same ETag, body copy + provenance.
+
+        Usually a provenance-cache hit (filled alongside every engine run);
+        a spill-warmed estimate recomputes once through the catalog. Audit
+        samples ride along per column when the auditor has visited it.
+        """
+        if resp.status != 200 or resp.body is None:
+            return resp
+        with self.lock:
+            provs = self.catalog.provenance(
+                mode=mode, schema_bounds=schema_bounds, engine=self.engine
+            )
+            audits = dict(self._audit_results)
+        names = (
+            columns if columns is not None
+            else list(resp.body.get("estimates", {}))
+        )
+        prov_json: Dict[str, dict] = {}
+        for name in names:
+            p = provs.get(name)
+            if p is None:
+                continue
+            d = provenance_to_json(p)
+            a = audits.get(name)
+            if a is not None:
+                d["audit"] = {
+                    "qerror": a.qerror,
+                    "reference_ndv": a.reference,
+                    "estimate_ndv": a.estimate,
+                    "generation": a.generation,
+                    "row_group": a.row_group,
+                }
+            prov_json[name] = d
+        body = dict(resp.body)
+        body["provenance"] = prov_json
+        return Response(resp.status, body, resp.etag)
+
+    def debug_explain(self) -> Response:
+        """The catalog's provenance cache + audit samples, JSON-shaped.
+
+        Never cached (no ETag): it describes the server's *cache contents*,
+        not a deterministic function of dataset state.
+        """
+        with self.lock:
+            entries = self.catalog.provenance_entries()
+            audits = dict(self._audit_results)
+            gen = self.ingestor.generation
+        return Response(200, {
+            "service": self.name,
+            "generation": gen,
+            "entries": [
+                {
+                    "mode": key[1],
+                    "schema_bounds": (
+                        {n: v for n, v in key[2]} if key[2] else None
+                    ),
+                    "files": len(key[0]),
+                    "columns": {
+                        name: provenance_to_json(p)
+                        for name, p in sorted(provs.items())
+                    },
+                }
+                for key, provs in entries
+            ],
+            "audits": {
+                name: a._asdict() for name, a in sorted(audits.items())
+            },
+        }, None)
+
+    def _audit_loop(self) -> None:
+        while True:
+            self._audit_wake.wait()
+            self._audit_wake.clear()
+            if self.closed:
+                return
+            try:
+                self.run_audit()
+            except Exception:
+                # The auditor is a diagnostic sidecar: it must never take
+                # the serving loop down. Failures show as missing samples.
+                pass
+
+    def run_audit(self) -> List[AuditResult]:
+        """One audit pass: sample K columns, sketch a reference, record q-error.
+
+        Public and synchronous so tests and smoke flows can drive it
+        deterministically; the background thread calls exactly this.
+        """
+        with self.lock:
+            if not self.catalog.scanned:
+                return []
+            gen = self.ingestor.generation
+            names = sorted(self.catalog.column_names)
+            files = list(self.catalog.files)
+            ests = self.catalog.estimate(mode="paper")
+            provs = self.catalog.provenance(mode="paper")
+        if not names or not files:
+            return []
+        k = min(self.audit_columns, len(names))
+        start = (gen * k) % len(names)
+        sample = [names[(start + i) % len(names)] for i in range(k)]
+        hist = registry().histogram(
+            "ndv_audit_qerror",
+            "Audit q-error max(est/ref, ref/est): metadata estimate vs a "
+            "one-row-group-per-file HLL reference, by chosen route",
+            QERROR_BUCKETS,
+        )
+        results: List[AuditResult] = []
+        for col in sample:
+            if col not in ests or col not in provs:
+                continue
+            ref = self._audit_reference(col, files, gen)
+            if ref is None or ref <= 0.0:
+                continue
+            est = float(ests[col].ndv)
+            q = max(est / ref, ref / est) if est > 0 else float("inf")
+            route = provs[col].route
+            hist.observe(q, route=route)
+            results.append(AuditResult(
+                column=col, route=route, estimate=est, reference=ref,
+                qerror=q, generation=gen, row_group=gen,
+            ))
+        with self.lock:
+            if results:
+                for r in results:
+                    self._audit_results[r.column] = r
+                # New q-error sidecar: orphan memoized explained payloads
+                # (they embed the audit results current at build time).
+                self.audit_version += 1
+                self._explain_payloads.clear()
+        return results
+
+    def _audit_reference(
+        self, col: str, files: List[str], gen: int
+    ) -> Optional[float]:
+        """HLL reference NDV for one column: one row group per file.
+
+        Registers merge by element-max across files, so the count covers
+        the union of the sampled row groups. Values hash through their
+        string form — distinctness, not representation, is what the sketch
+        needs. Unreadable files (metadata-only sources) yield None.
+        """
+        import zlib
+
+        import numpy as np
+
+        from repro.columnar.reader import DataReader
+        from repro.kernels import ops as kernel_ops
+
+        regs = None
+        for fid in files:
+            try:
+                reader = DataReader(fid)
+                if col not in reader.npz.files:
+                    continue
+                n_rg = reader.footer.num_row_groups
+                if not n_rg:
+                    continue
+                idx = gen % n_rg  # rotate the sampled row group per pass
+                lo = sum(
+                    rg.num_rows for rg in reader.footer.row_groups[:idx]
+                )
+                hi = lo + reader.footer.row_groups[idx].num_rows
+                vals = reader.npz[col][lo:hi]
+                mask = reader.null_mask(col)
+                valid = (
+                    ~mask[lo:hi] if mask is not None
+                    else np.ones(len(vals), bool)
+                )
+            except Exception:
+                continue
+            if not len(vals):
+                continue
+            keys = np.fromiter(
+                (zlib.crc32(str(v).encode()) for v in vals),
+                np.uint32, len(vals),
+            )
+            bank = np.asarray(kernel_ops.hll_fold(
+                keys[None, :], valid[None, :].astype(np.float32)
+            ))
+            regs = bank if regs is None else np.maximum(regs, bank)
+        if regs is None:
+            return None
+        return float(np.asarray(kernel_ops.hll_count(regs))[0])
 
     def _cached_endpoint(
         self,

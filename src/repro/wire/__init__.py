@@ -59,6 +59,16 @@ frames carry two required sections plus one optional one:
                     context out-of-band. Never part of the decoded
                     value, so ETags over frame bodies stay trace-blind;
                     pre-trace peers skip it via the unknown-section rule.
+    tag 4  EXPLAIN  optional: a second tagged value tree (per-column
+                    estimation provenance, attached when the request
+                    asked `explain=1`) sharing the frame's string table.
+                    Like TRACE it lives outside the value section, so the
+                    body bytes and their ETag are explain-blind;
+                    `decode_explain` reads it best-effort and
+                    `client.fetch` re-attaches it as the body's
+                    "provenance" key so wire and JSON clients observe
+                    identical explained bodies. Pre-provenance peers skip
+                    the tag.
 
 All varints are unsigned LEB128; signed integers are zigzag-mapped
 first. Integers of any magnitude survive (no 64-bit clamp), floats are
@@ -79,7 +89,9 @@ from repro.wire.codec import (  # noqa: F401
     JSON_CONTENT_TYPE,
     WIRE_CONTENT_TYPE,
     WireError,
+    decode_explain,
     decode_frame,
+    decode_frame_and_explain,
     decode_traceparent,
     encode_frame,
 )

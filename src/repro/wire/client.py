@@ -32,7 +32,7 @@ from repro.obs import TRACEPARENT_HEADER, current_traceparent, registry
 from repro.wire.codec import (
     JSON_CONTENT_TYPE,
     WIRE_CONTENT_TYPE,
-    decode_frame,
+    decode_frame_and_explain,
     encode_frame,
 )
 import json
@@ -241,7 +241,14 @@ def fetch(
         return status, resp_etag, None
     ctype = resp_headers.get("content-type", JSON_CONTENT_TYPE)
     if ctype.split(";")[0].strip() == WIRE_CONTENT_TYPE:
-        body = decode_frame(raw)
+        # Wire responses carry provenance out-of-band (section 4) so the
+        # value section — and its ETag — stays explain-blind. Re-attach it
+        # here so wire and JSON clients observe identical bodies (one
+        # combined pass: the string table decodes once for both sections).
+        body, explain = decode_frame_and_explain(raw)
+        if explain is not None and isinstance(body, dict):
+            body = dict(body)
+            body["provenance"] = explain
     else:
         body = json.loads(raw.decode("utf-8"))
     return status, resp_etag, body

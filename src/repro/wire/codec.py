@@ -31,6 +31,11 @@ _SECTION_VALUE = 2
 # Optional out-of-band trace context (UTF-8 traceparent string). Peers
 # that predate it skip it via the unknown-section rule below.
 _SECTION_TRACE = 3
+# Optional per-estimate provenance (a second encoded value tree sharing
+# the frame's string table). Carried outside the value section so the
+# response body — and therefore its ETag — is byte-identical whether or
+# not a peer asked to explain; pre-provenance peers skip the tag.
+_SECTION_EXPLAIN = 4
 
 _T_NULL = 0x00
 _T_FALSE = 0x01
@@ -272,15 +277,27 @@ class _Encoder:
                 self.value(c)
 
 
-def encode_frame(obj: Any, *, traceparent: str = None) -> bytes:
+def encode_frame(
+    obj: Any, *, traceparent: str = None, explain: Any = None
+) -> bytes:
     """Encode one JSON-representable value as a v1 wire frame.
 
     `traceparent` rides in its own section, outside the value — it never
     changes what `decode_frame` returns, so ETags over frame bodies stay
-    trace-blind.
+    trace-blind. `explain` (when not None) is a second value tree encoded
+    into its own section with the same guarantee: the value section's
+    bytes do not change, and peers that predate the tag skip it.
     """
     enc = _Encoder()
     enc.value(obj)
+    value_body = bytes(enc.body)
+    explain_body = None
+    if explain is not None:
+        # Same encoder: explain strings are appended to the shared table
+        # AFTER the value's, so the value body stays byte-stable.
+        enc.body = bytearray()
+        enc.value(explain)
+        explain_body = bytes(enc.body)
 
     strings = bytearray()
     _write_uvarint(strings, len(enc.strings))
@@ -289,7 +306,9 @@ def encode_frame(obj: Any, *, traceparent: str = None) -> bytes:
         _write_uvarint(strings, len(raw))
         strings += raw
 
-    sections = [(_SECTION_STRINGS, strings), (_SECTION_VALUE, enc.body)]
+    sections = [(_SECTION_STRINGS, strings), (_SECTION_VALUE, value_body)]
+    if explain_body is not None:
+        sections.append((_SECTION_EXPLAIN, explain_body))
     if traceparent:
         sections.append((_SECTION_TRACE, traceparent.encode("utf-8")))
 
@@ -419,13 +438,9 @@ def decode_traceparent(data: bytes) -> "str | None":
         return None
 
 
-def decode_frame(data: bytes) -> Any:
-    """Decode a v1 wire frame back to the value it encoded."""
-    data, sections = _scan_sections(data)
-    for required in (_SECTION_STRINGS, _SECTION_VALUE):
-        if required not in sections:
-            raise WireError(f"frame is missing section {required}")
-
+def _decode_strings(data: bytes, sections: Dict[int, Tuple[int, int]]) -> List[str]:
+    if _SECTION_STRINGS not in sections:
+        raise WireError(f"frame is missing section {_SECTION_STRINGS}")
     s0, s1 = sections[_SECTION_STRINGS]
     sr = _Reader(data, start=s0, end=s1)
     strings = []
@@ -435,12 +450,71 @@ def decode_frame(data: bytes) -> Any:
             strings.append(raw.decode("utf-8"))
         except UnicodeDecodeError as e:
             raise WireError(f"invalid UTF-8 in string table: {e}") from None
+    return strings
 
-    v0, v1 = sections[_SECTION_VALUE]
-    vr = _Reader(data, start=v0, end=v1)
+
+def _decode_section_value(
+    data: bytes, strings: List[str], bounds: Tuple[int, int], what: str
+) -> Any:
+    vr = _Reader(data, start=bounds[0], end=bounds[1])
     value = _Decoder(strings, vr).value()
     if not vr.exhausted:
         raise WireError(
-            f"{vr.end - vr.pos} trailing bytes after the value section"
+            f"{vr.end - vr.pos} trailing bytes after the {what} section"
         )
     return value
+
+
+def decode_frame(data: bytes) -> Any:
+    """Decode a v1 wire frame back to the value it encoded."""
+    data, sections = _scan_sections(data)
+    strings = _decode_strings(data, sections)
+    if _SECTION_VALUE not in sections:
+        raise WireError(f"frame is missing section {_SECTION_VALUE}")
+    return _decode_section_value(
+        data, strings, sections[_SECTION_VALUE], "value"
+    )
+
+
+def decode_explain(data: bytes) -> Any:
+    """The frame's provenance section as a value, or None if absent.
+
+    Best-effort, like `decode_traceparent`: a well-framed payload without
+    (or with a garbled) explain section yields None rather than an error —
+    diagnostics must never fail the request that carried them.
+    """
+    try:
+        data, sections = _scan_sections(data)
+        bounds = sections.get(_SECTION_EXPLAIN)
+        if bounds is None:
+            return None
+        strings = _decode_strings(data, sections)
+        return _decode_section_value(data, strings, bounds, "explain")
+    except WireError:
+        return None
+
+
+def decode_frame_and_explain(data: bytes) -> Tuple[Any, Any]:
+    """`(decode_frame(data), decode_explain(data))` in one pass.
+
+    The string table dominates decode time, and a caller interested in
+    both sections (`repro.wire.client.fetch`) would otherwise decode it
+    twice. Error semantics are preserved per section: the value decode
+    raises `WireError` exactly as `decode_frame` does, the explain decode
+    stays best-effort (None on a garbled or absent section).
+    """
+    data, sections = _scan_sections(data)
+    strings = _decode_strings(data, sections)
+    if _SECTION_VALUE not in sections:
+        raise WireError(f"frame is missing section {_SECTION_VALUE}")
+    value = _decode_section_value(
+        data, strings, sections[_SECTION_VALUE], "value"
+    )
+    explain = None
+    bounds = sections.get(_SECTION_EXPLAIN)
+    if bounds is not None:
+        try:
+            explain = _decode_section_value(data, strings, bounds, "explain")
+        except WireError:
+            explain = None
+    return value, explain

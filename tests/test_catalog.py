@@ -245,9 +245,11 @@ def test_save_cache_compacts_stale_fingerprint_sets(dataset, tmp_path):
     with open(path) as f:
         assert len(json.load(f)["entries"]) == 3
 
-    # in-memory hook drops the same stale entries (plus the stale batch)
-    assert catalog.compact_caches() == 2           # 1 estimate + 1 batch
+    # in-memory hook drops the same stale entries (plus the stale batch
+    # and the stale provenance sidecar, which is keyed like the estimates)
+    assert catalog.compact_caches() == 3     # 1 estimate + 1 batch + 1 prov
     assert len(catalog._estimate_cache) == 2
+    assert len(catalog._provenance_cache) == 2
 
 
 def test_auto_load_cache_serves_warm_and_is_mtime_guarded(dataset):

@@ -71,9 +71,17 @@ def test_strategy_parity_matrix(strategy):
         bounds = [np.inf] * width
         bounds[width // 2] = 5.0
         for mode in ("paper", "improved"):
-            ref = ref_engine.estimate_columns(cols, bounds, mode=mode)
-            got = eng.estimate_columns(cols, bounds, mode=mode)
+            ref, ref_prov = ref_engine.estimate_columns_explained(
+                cols, bounds, mode=mode
+            )
+            got, got_prov = eng.estimate_columns_explained(
+                cols, bounds, mode=mode
+            )
             assert got == ref, (strategy, width, mode)
+            # Provenance rides the same lanes through the same execution
+            # plans: diagnostics must hold the parity contract too, or an
+            # explained response would change with the serving topology.
+            assert got_prov == ref_prov, (strategy, width, mode)
 
 
 @pytest.mark.parametrize(
@@ -97,9 +105,14 @@ def test_fused_parity_matrix(strategy):
         bounds = [np.inf] * width
         bounds[width // 2] = 5.0
         for mode in ("paper", "improved"):
-            ref = off.estimate_columns(cols, bounds, mode=mode)
-            got = on.estimate_columns(cols, bounds, mode=mode)
+            ref, ref_prov = off.estimate_columns_explained(
+                cols, bounds, mode=mode
+            )
+            got, got_prov = on.estimate_columns_explained(
+                cols, bounds, mode=mode
+            )
             assert got == ref, (strategy, width, mode)
+            assert got_prov == ref_prov, (strategy, width, mode)
 
 
 # -- chunked parity (any device count) ---------------------------------------

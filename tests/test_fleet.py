@@ -465,3 +465,125 @@ def test_remote_replica_passes_5xx_through_without_ejection():
     finally:
         httpd.shutdown()
         httpd.server_close()
+
+
+# -- estimation-quality observability across the fleet (ISSUE 9) --------------
+
+
+@pytest.fixture()
+def audited_router(registry):
+    router = StatsRouter(
+        Fleet(registry, replicas_per_dataset=2, audit=True, audit_columns=4)
+    ).start()
+    yield router
+    router.stop()
+
+
+def _run_audits(fleet):
+    for rset in fleet.sets.values():
+        for rep in rset.replicas:
+            rep.service.run_audit()
+
+
+def test_routed_explain_same_etag_and_stripped_body(routed):
+    url = routed.url_for("wh", "alpha", "estimate") + "?mode=improved"
+    status, etag, plain = fetch_json(url)
+    assert status == 200
+    status, etag_e, explained = fetch_json(url + "&explain=1")
+    assert status == 200 and etag_e == etag
+    assert explained["provenance"].keys() == plain["estimates"].keys()
+    assert {k: v for k, v in explained.items() if k != "provenance"} == plain
+    status, _, body = fetch_json(url + "&explain=junk")
+    assert status == 400 and "error" in body
+
+
+def test_batch_per_tuple_explain(routed):
+    from repro.wire import ConnectionPool, fetch
+
+    pool = ConnectionPool()
+    try:
+        status, _, env = fetch(
+            routed.url + "/batch", pool=pool, method="POST",
+            payload={"tuples": [
+                {"namespace": "wh", "dataset": "alpha", "mode": "paper",
+                 "explain": True},
+                {"namespace": "wh", "dataset": "alpha", "mode": "paper"},
+                {"namespace": "wh", "dataset": "beta", "mode": "paper",
+                 "columns": ["tok"], "explain": True},
+            ]},
+        )
+        assert status == 200
+        bodies = [e["body"] for e in env["responses"]]
+        assert "provenance" in bodies[0]
+        assert "provenance" not in bodies[1]
+        assert set(bodies[2]["provenance"]) == {"tok"}
+        # the unexplained tuple's body+etag match the explained one stripped
+        stripped = {k: v for k, v in bodies[0].items() if k != "provenance"}
+        assert stripped == bodies[1]
+        assert env["responses"][0]["etag"] == env["responses"][1]["etag"]
+    finally:
+        pool.close()
+
+
+def test_router_debug_explain_aggregates_replicas(audited_router):
+    fleet = audited_router.fleet
+    for key in ("wh/alpha", "wh/beta"):
+        ns, name = key.split("/")
+        fetch_json(audited_router.url_for(ns, name, "estimate"))
+    _run_audits(fleet)
+    status, _, body = fetch_json(audited_router.url + "/debug/explain")
+    assert status == 200
+    assert set(body["datasets"]) == {"wh/alpha", "wh/beta"}
+    for key, per_replica in body["datasets"].items():
+        assert len(per_replica) == 2, (key, list(per_replica))
+        for payload in per_replica.values():
+            assert "entries" in payload and "audits" in payload
+            assert payload["audits"], "audit samples missing from aggregation"
+
+    # namespace+dataset narrowing
+    status, _, body = fetch_json(
+        audited_router.url + "/debug/explain?namespace=wh&dataset=beta"
+    )
+    assert status == 200 and set(body["datasets"]) == {"wh/beta"}
+
+
+def test_router_debug_endpoints_hardened(routed):
+    for q in ("limit=-1", "limit=abc", "limit="):
+        status, _, body = fetch_json(routed.url + f"/debug/traces?{q}")
+        assert status == 400 and "error" in body, q
+    status, _, body = fetch_json(routed.url + "/debug/explain?dataset=nope")
+    assert status == 404
+    for q in ("dataset=", "namespace=", "namespace=wh"):
+        status, _, body = fetch_json(routed.url + f"/debug/explain?{q}")
+        assert status == 400 and "error" in body, q
+
+
+def test_fleet_batch_explain_feeds_router_metrics(audited_router):
+    """E2E: /batch with explain + audits show up in the router's /metrics."""
+    import urllib.request
+
+    from repro.wire import ConnectionPool, fetch
+
+    _run_audits(audited_router.fleet)
+    pool = ConnectionPool()
+    try:
+        status, _, env = fetch(
+            audited_router.url + "/batch", pool=pool, method="POST",
+            payload={"tuples": [
+                {"namespace": "wh", "dataset": "alpha", "mode": "paper",
+                 "explain": True},
+                {"namespace": "wh", "dataset": "beta", "mode": "improved",
+                 "explain": True},
+            ]},
+        )
+        assert status == 200
+        assert all(e["status"] == 200 for e in env["responses"])
+        assert all("provenance" in e["body"] for e in env["responses"])
+    finally:
+        pool.close()
+    with urllib.request.urlopen(audited_router.url + "/metrics") as r:
+        text = r.read().decode()
+    assert "ndv_route_total" in text and 'route="' in text
+    assert "ndv_newton_iters" in text
+    assert "ndv_detector_margin" in text
+    assert "ndv_audit_qerror" in text

@@ -97,10 +97,16 @@ def test_fuse_absent_from_engine_identity():
 # -- megakernel vs twin (kernel-vs-oracle contract) ---------------------------
 
 
-_EXACT_FIELDS = ("layout", "is_lower_bound", "dict_iterations")
+_EXACT_FIELDS = (
+    "layout", "is_lower_bound", "dict_iterations",
+    # provenance lanes (ISSUE 9): discrete diagnostics must agree exactly
+    "route", "coupon_iterations", "clamp_flags",
+)
 _FLOAT_FIELDS = (
     "ndv", "ndv_dict", "ndv_minmax", "confidence",
     "overlap_ratio", "monotonicity", "mean_len",
+    # provenance lanes (ISSUE 9): margins/residuals to kernel tightness
+    "route_margin", "detector_margin", "dict_residual",
 )
 
 

@@ -382,3 +382,128 @@ def test_polling_loop_picks_up_changes_and_stops():
     finally:
         svc.stop()
     assert not svc.ingestor.running
+
+
+# -- estimation-quality observability: explain + audit (ISSUE 9) --------------
+
+
+def test_explain_attaches_provenance_without_perturbing_identity(served):
+    """?explain=1: same ETag, body copy + provenance — never a new identity."""
+    status, etag, plain = fetch_json(served.url + "/estimate?mode=improved")
+    assert status == 200
+    status, etag_e, explained = fetch_json(
+        served.url + "/estimate?mode=improved&explain=1"
+    )
+    assert status == 200
+    assert etag_e == etag, "explain must not rotate the ETag"
+    assert explained["provenance"].keys() == plain["estimates"].keys()
+    stripped = {k: v for k, v in explained.items() if k != "provenance"}
+    assert stripped == plain, "explained body minus provenance != plain body"
+    for prov in explained["provenance"].values():
+        assert prov["route"] in ("dict", "minmax")
+        assert isinstance(prov["dict_iterations"], int)
+        assert isinstance(prov["clamps"], list)
+    # the old ETag still revalidates the explained URL (same identity)
+    status, _, _ = fetch_json(
+        served.url + "/estimate?mode=improved&explain=1", etag=etag
+    )
+    assert status == 304
+
+
+def test_explain_does_not_mutate_cached_plain_body(served):
+    status, _, _ = fetch_json(served.url + "/estimate?mode=paper&explain=1")
+    assert status == 200
+    status, _, plain = fetch_json(served.url + "/estimate?mode=paper")
+    assert status == 200
+    assert "provenance" not in plain, (
+        "explain leaked into the cached response body"
+    )
+
+
+def test_explain_junk_value_is_400(served):
+    status, _, body = fetch_json(served.url + "/estimate?explain=banana")
+    assert status == 400 and "error" in body
+    # explicit falsy forms are accepted and behave like absence
+    for off in ("0", "false", "no", ""):
+        status, _, body = fetch_json(served.url + f"/estimate?explain={off}")
+        assert status == 200 and "provenance" not in body
+
+
+def test_explain_wire_frame_value_section_is_explain_blind(served):
+    """Provenance rides section 4; the value section stays byte-stable."""
+    from repro.wire import ConnectionPool, decode_explain, decode_frame, fetch
+
+    pool = ConnectionPool()
+    try:
+        url = served.url + "/estimate?mode=improved"
+        wire_headers = {"Accept": "application/x-ndv-wire"}
+        _, _, raw_plain = pool.request(url, headers=wire_headers)
+        _, _, raw_expl = pool.request(url + "&explain=1", headers=wire_headers)
+        assert decode_frame(raw_expl) == decode_frame(raw_plain)
+        assert decode_explain(raw_plain) is None
+        status, _, body_json = fetch_json(url + "&explain=1")
+        assert decode_explain(raw_expl) == body_json["provenance"]
+        # the wire client re-attaches: wire and JSON bodies identical
+        status, _, body_wire = fetch(url + "&explain=1", pool=pool, binary=True)
+        assert status == 200 and body_wire == body_json
+    finally:
+        pool.close()
+
+
+def test_audit_loop_records_qerror_and_rides_explain(dataset):
+    from repro.obs import registry
+
+    svc = StatsService(dataset, audit=True, audit_columns=8)
+    svc.refresh()
+    results = svc.run_audit()
+    assert results, "audit produced no samples on a readable dataset"
+    audited = {r.column for r in results}
+    assert audited == {"tok", "val"}
+    for r in results:
+        assert r.qerror >= 1.0
+        assert r.reference > 0
+        assert r.route in ("dict", "minmax")
+    resp = svc.estimate(mode="paper", explain=True)
+    provs = resp.body["provenance"]
+    assert any("audit" in p for p in provs.values())
+    for name, p in provs.items():
+        if "audit" in p:
+            assert p["audit"]["qerror"] >= 1.0
+    text = registry().exposition()
+    assert "ndv_audit_qerror" in text and 'route="' in text
+
+
+def test_explained_payload_not_stale_after_audit(dataset):
+    """The memoized explained payload must refresh when the audit does."""
+    with StatsServer(StatsService(dataset, audit=True)) as server:
+        url = server.url + "/estimate?mode=improved&explain=1"
+        status, _, before = fetch_json(url)
+        assert status == 200
+        assert not any("audit" in p for p in before["provenance"].values())
+        server.service.run_audit()
+        status, _, after = fetch_json(url)
+        assert status == 200
+        assert any("audit" in p for p in after["provenance"].values()), (
+            "explained payload served stale (pre-audit) bytes"
+        )
+
+
+def test_debug_explain_serves_provenance_cache(served):
+    fetch_json(served.url + "/estimate?mode=paper")
+    fetch_json(served.url + "/estimate?mode=improved&explain=1")
+    status, etag, body = fetch_json(served.url + "/debug/explain")
+    assert status == 200 and etag is None
+    modes = {e["mode"] for e in body["entries"]}
+    assert "improved" in modes
+    for entry in body["entries"]:
+        for name, prov in entry["columns"].items():
+            assert prov["route"] in ("dict", "minmax")
+
+
+def test_debug_query_params_hardened(served):
+    """Malformed /debug/* query values answer 400, never an unhandled 500."""
+    for q in ("limit=-1", "limit=abc", "limit=", "limit=1.5"):
+        status, _, body = fetch_json(served.url + f"/debug/traces?{q}")
+        assert status == 400 and "error" in body, q
+    status, _, _ = fetch_json(served.url + "/debug/traces?limit=0")
+    assert status == 200

@@ -246,3 +246,61 @@ def test_wire_content_type_header(server):
     status, headers, raw = pool.request(server.url + "/health", headers={})
     assert headers["content-type"] == JSON_CONTENT_TYPE
     assert json.loads(raw)["status"] == "serving"
+
+
+# -- explain sidecar section (ISSUE 9) ----------------------------------------
+
+
+def _value_section(frame: bytes) -> bytes:
+    from repro.wire.codec import _SECTION_VALUE, _scan_sections
+
+    _, sections = _scan_sections(frame)
+    lo, hi = sections[_SECTION_VALUE]
+    return frame[lo:hi]
+
+
+def test_explain_section_leaves_value_section_bytes_unchanged():
+    """The explain sidecar must be invisible to the value a peer decodes."""
+    from repro.wire import decode_explain
+
+    body = {"estimates": {"k": {"ndv": 12.5}}, "meta": [1, 2, 3]}
+    prov = {"k": {"route": "dict", "route_margin": 3.25, "clamps": []}}
+    plain = encode_frame(body)
+    explained = encode_frame(body, explain=prov)
+    assert explained != plain                      # the section is really there
+    assert _value_section(explained) == _value_section(plain)
+    # old peers: decode_frame of an explained frame is just the value
+    assert decode_frame(explained) == decode_frame(plain) == _json_roundtrip(body)
+    assert decode_explain(explained) == _json_roundtrip(prov)
+
+
+def test_decode_explain_is_best_effort():
+    """No section -> None; a garbled section -> None, never an exception."""
+    from repro.wire import decode_explain
+    from repro.wire.codec import _SECTION_EXPLAIN, _scan_sections
+
+    plain = encode_frame({"a": 1})
+    assert decode_explain(plain) is None
+
+    explained = bytearray(encode_frame({"a": 1}, explain={"p": "x"}))
+    _, sections = _scan_sections(bytes(explained))
+    lo, hi = sections[_SECTION_EXPLAIN]
+    for i in range(lo, hi):                        # corrupt every byte in turn
+        garbled = bytearray(explained)
+        garbled[i] ^= 0xFF
+        got = decode_explain(bytes(garbled))
+        assert got is None or isinstance(got, dict)
+    assert decode_explain(bytes(explained)) == {"p": "x"}
+
+
+def test_decode_frame_and_explain_matches_separate_decodes():
+    from repro.wire import decode_explain, decode_frame_and_explain
+
+    body = {"estimates": {"a": 1.0, "b": 2.0}}
+    prov = {"a": {"route": "minmax"}, "b": {"route": "dict"}}
+    for frame in (encode_frame(body), encode_frame(body, explain=prov)):
+        assert decode_frame_and_explain(frame) == (
+            decode_frame(frame), decode_explain(frame)
+        )
+    with pytest.raises(WireError):
+        decode_frame_and_explain(b"\x00junk")
