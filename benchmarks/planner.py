@@ -1,0 +1,178 @@
+"""Planner tier: batched plan-scoring throughput + warm /cost latency.
+
+The planner's pitch is that scoring thousands of candidate join orders
+is ONE batched JAX dispatch, and that a warm `/cost` is a 304 that does
+no catalog or scoring work at all. This module measures both ends:
+
+  planner/score_N     plans-scored/sec for an N-table chain graph
+                      (N = 3, 6, 10), warm jit — the batched fold alone
+  planner/speedup     batched `score_plans` vs the pure-Python
+                      `sequential_reference` fold over the identical
+                      plan space (bit-identical costs, asserted)
+  planner/cost_cold   first POST /cost against a live StatsServer:
+                      tablestats + enumeration + scoring + body build
+  planner/cost_304    warm revalidation with If-None-Match — the
+                      zero-work path (no new scoring dispatch, asserted
+                      via the planner dispatch counter)
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+import numpy as np
+
+from benchmarks._quick import pick
+from repro.planner import (
+    ColumnStats,
+    TableStats,
+    enumerate_plans,
+    parse_join_graph,
+    score_plans,
+)
+from repro.planner.api import sequential_reference
+from repro.planner.cost import _DISPATCHES
+from repro.service import StatsServer, StatsService
+from repro.wire import fetch
+
+GRAPH_SIZES = pick((3, 6, 10), (3, 6))
+MAX_PLANS = pick(4096, 256)
+SCORE_REPS = pick(20, 3)
+SPEEDUP_TABLES = pick(7, 5)
+REVAL_REQS = pick(100, 5)
+
+ROWS_PER_SHARD = pick(1 << 12, 1 << 9)
+
+
+def _chain(n: int):
+    """An n-table chain join graph with one shared key column."""
+    return parse_join_graph({
+        "tables": [{"name": f"t{i}"} for i in range(n)],
+        "edges": [
+            {"left": f"t{i}", "left_column": "k",
+             "right": f"t{i + 1}", "right_column": "k"}
+            for i in range(n - 1)
+        ],
+    })
+
+
+def _stats(graph):
+    rng = np.random.default_rng(0)
+    return {
+        t.name: TableStats(
+            rows=float(rng.integers(10_000, 1_000_000)),
+            columns={"k": ColumnStats(
+                ndv=float(rng.integers(10, 10_000)), non_null=1,
+            )},
+        )
+        for t in graph.tables
+    }
+
+
+def _lanes(graph, stats):
+    """(base_rows, factors) in the shape `score_plans` consumes."""
+    index = {name: i for i, name in enumerate(graph.names)}
+    base_rows = np.array(
+        [np.float32(stats[t.name].rows) for t in graph.tables],
+        dtype=np.float32,
+    )
+    factors = [
+        (index[e.left], index[e.right],
+         float(np.float32(1.0) / np.float32(max(
+             stats[e.left].columns[e.left_column].ndv,
+             stats[e.right].columns[e.right_column].ndv, 1.0))))
+        for e in graph.edges
+    ]
+    return base_rows, factors
+
+
+def run() -> List[tuple]:
+    rows: List[tuple] = []
+
+    # -- batched scoring throughput by graph size ---------------------------
+    for n in GRAPH_SIZES:
+        graph = _chain(n)
+        stats = _stats(graph)
+        base_rows, factors = _lanes(graph, stats)
+        plans = enumerate_plans(n, MAX_PLANS)
+        score_plans(plans, base_rows, factors)  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(SCORE_REPS):
+            costs, _ = score_plans(plans, base_rows, factors)
+        us = (time.perf_counter() - t0) * 1e6 / SCORE_REPS
+        p = int(plans.shape[0])
+        rows.append((
+            f"planner/score_{n}", us,
+            f"plans={p};plans_per_s={p / (us / 1e6):.0f};"
+            f"dispatches_per_call=1",
+        ))
+
+    # -- batched vs sequential over the identical plan space ----------------
+    graph = _chain(SPEEDUP_TABLES)
+    stats = _stats(graph)
+    base_rows, factors = _lanes(graph, stats)
+    plans = enumerate_plans(SPEEDUP_TABLES, MAX_PLANS)
+    score_plans(plans, base_rows, factors)  # warm
+    t0 = time.perf_counter()
+    batched, _ = score_plans(plans, base_rows, factors)
+    batched_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    sequential, _ = sequential_reference(graph, stats, max_plans=MAX_PLANS)
+    seq_us = (time.perf_counter() - t0) * 1e6
+    assert batched.tobytes() == sequential.tobytes(), "parity broke"
+    rows.append((
+        "planner/speedup", batched_us,
+        f"plans={int(plans.shape[0])};sequential_us={seq_us:.0f};"
+        f"speedup={seq_us / max(batched_us, 1e-9):.1f}x",
+    ))
+
+    # -- /cost end to end: cold body vs warm 304 ----------------------------
+    root = os.path.join(tempfile.mkdtemp(), "planner_bench")
+    rng = np.random.default_rng(7)
+    from repro.columnar.writer import WriterOptions, write_file
+    for i in range(2):
+        write_file(
+            os.path.join(root, f"shard_{i:05d}"),
+            {"tok": rng.integers(0, 512, ROWS_PER_SHARD).astype(np.int64)},
+            options=WriterOptions(row_group_size=256),
+        )
+    payload = {
+        "graph": {
+            "tables": [{"name": f"t{i}"} for i in range(4)],
+            "edges": [
+                {"left": f"t{i}", "left_column": "tok",
+                 "right": f"t{i + 1}", "right_column": "tok"}
+                for i in range(3)
+            ],
+        },
+        "max_plans": MAX_PLANS,
+    }
+    with StatsServer(StatsService(root)) as server:
+        url = server.url + "/cost"
+        t0 = time.perf_counter()
+        status, etag, body = fetch(url, payload=payload, binary=False)
+        cold_us = (time.perf_counter() - t0) * 1e6
+        assert status == 200 and body["best_order"]
+        rows.append((
+            "planner/cost_cold", cold_us,
+            f"tables=4;plans_scored={body['plans_scored']};"
+            f"enumeration={body['enumeration']}",
+        ))
+
+        dispatches_before = _DISPATCHES.value()
+        t0 = time.perf_counter()
+        for _ in range(REVAL_REQS):
+            status, _, _ = fetch(
+                url, payload=payload, etag=etag, binary=False,
+            )
+            assert status == 304
+        rev_us = (time.perf_counter() - t0) * 1e6 / REVAL_REQS
+        assert _DISPATCHES.value() == dispatches_before, "304 re-scored"
+        rows.append((
+            "planner/cost_304", rev_us,
+            f"reqs={REVAL_REQS};score_dispatches=0;"
+            f"vs_cold={cold_us / max(rev_us, 1e-9):.1f}x",
+        ))
+    return rows

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV (one row per measurement):
   fleet_latency.py — routed vs direct overhead, failover, shared-spill warmth
   kernels.py      — Pallas kernel suite throughput
   obs_overhead.py — telemetry tier on-vs-off warm latency + ETag parity
+  planner.py      — batched plan-scoring throughput + warm /cost 304 latency
   service_latency.py — stats-service cold/warm/304 latency + throughput
   warehouse.py    — TPC-H-shaped lineitem accuracy via the catalog (§10.1)
 
@@ -88,6 +89,7 @@ def main(argv=None) -> None:
         fleet_latency,
         kernels,
         obs_overhead,
+        planner,
         service_latency,
         warehouse,
     )
@@ -100,6 +102,7 @@ def main(argv=None) -> None:
         ("service_latency", service_latency),
         ("fleet_latency", fleet_latency),
         ("obs_overhead", obs_overhead),
+        ("planner", planner),
         ("baselines", baselines),
         ("batch_memory", batch_memory),
         ("complexity", complexity),

@@ -12,98 +12,23 @@ script printed without any footer access of their own:
 
     PYTHONPATH=src python examples/profile_dataset.py --serve [root]
 
-    # client side — note the fingerprint ETag on every response:
-    import json, urllib.request
-    r = urllib.request.urlopen("http://127.0.0.1:8080/estimate?mode=improved")
-    etag, ests = r.headers["ETag"], json.load(r)["estimates"]
-    print(ests["key"]["ndv"])
-    # revalidate for free until a file is added/removed/rewritten:
-    req = urllib.request.Request(
-        "http://127.0.0.1:8080/estimate?mode=improved",
-        headers={"If-None-Match": etag},
-    )
-    urllib.request.urlopen(req)   # -> HTTPError 304: estimates unchanged
-
 With ``--explain`` the profile table gains per-column provenance — the
 route the estimator chose (dict vs minmax), its decision margins, Newton
 iteration counts, clamps — plus the audited q-error where the sketch
-auditor has sampled the column. The same diagnostics are served live:
-``?explain=1`` attaches them to any `/estimate` response (same ETag —
-explain never enters cache identity), and `/debug/explain` dumps the
-server's provenance cache:
+auditor has sampled the column. The served twin is ``?explain=1`` on any
+`/estimate` (same ETag — explain never enters cache identity) and
+`/debug/explain` for the provenance cache.
 
-    r = urllib.request.urlopen(
-        "http://127.0.0.1:8080/estimate?mode=improved&explain=1"
-    )
-    prov = json.load(r)["provenance"]
-    print(prov["key"]["route"], prov["key"]["route_margin"],
-          prov["key"].get("audit", {}).get("qerror"))
-    json.load(urllib.request.urlopen(
-        "http://127.0.0.1:8080/debug/explain"))   # cache + audit samples
+With ``--cost`` the script demonstrates the planner tier end to end: it
+generates two demo datasets, fronts them with an in-process replicated
+fleet router (`repro.fleet`), POSTs a join graph to `/cost`, and prints
+the NDV-driven join order with per-join cardinality predictions — then
+revalidates the plan for free with the combined ETag.
 
-For a whole warehouse namespace, front many datasets with the replicated
-fleet router instead (`python -m repro.launch.serve_fleet`, see
-`repro.fleet`) — same responses, same ETags, one endpoint:
-
-    # client side against the router — only the path gains {ns}/{dataset}:
-    r = urllib.request.urlopen(
-        "http://127.0.0.1:8090/wh/lineitem/estimate?mode=improved"
-    )
-    etag, ests = r.headers["ETag"], json.load(r)["estimates"]
-    # the same If-None-Match revalidation works across replica failover:
-    # ETags derive from dataset state, not from which replica answered,
-    # so a 304 survives crashes, restarts, and cold replicas.
-    urllib.request.urlopen("http://127.0.0.1:8090/datasets")  # namespace map
-
-A planner polling many datasets batches everything into ONE round trip
-over a keep-alive connection, with the compact binary framing negotiated
-automatically (`repro.wire`) — all cold tuples execute as a single
-super-packed engine call on the serving side:
-
-    from repro.wire import ConnectionPool, fetch
-    pool = ConnectionPool()
-    status, _, env = fetch(
-        "http://127.0.0.1:8090/batch", pool=pool, method="POST",
-        payload={"tuples": [
-            {"namespace": "wh", "dataset": "lineitem", "mode": "improved"},
-            {"namespace": "wh", "dataset": "orders",
-             "columns": ["o_custkey"], "bounds": {"o_custkey": 150000}},
-        ]},
-    )
-    for entry in env["responses"]:       # one per tuple, same order
-        print(entry["status"], entry["etag"])
-    # revalidate the whole sweep: per-tuple 304s, still one round trip
-    tuples = [
-        {"namespace": "wh", "dataset": "lineitem", "mode": "improved",
-         "if_none_match": env["responses"][0]["etag"]},
-    ]
-    fetch("http://127.0.0.1:8090/batch", pool=pool, method="POST",
-          payload={"tuples": tuples})    # responses[0]["status"] == 304
-
-Both tiers expose the unified telemetry tier (`repro.obs`). `/metrics`
-is Prometheus text exposition — request counters/latency histograms by
-tier/route/status next to the engine, catalog, ingest, and connection
-pool counters; the router re-emits every REMOTE replica's scrape under
-a `replica="<name>"` label, so one scrape covers the fleet:
-
-    print(urllib.request.urlopen("http://127.0.0.1:8090/metrics")
-          .read().decode())
-    # ndv_http_requests_total{route="batch",status="200",tier="router"} 2
-    # ndv_http_request_seconds_bucket{le="0.005",route="batch",...} 2
-    # ndv_engine_dispatches_total{...} 1 ...
-
-`/debug/traces` returns recent request traces as JSON span trees — a
-`/batch` shows the router span fanning out to per-replica sub-batches,
-the service's super-pack, and the engine's pack/dispatch/d2h children,
-all under one trace id (propagated via the `Traceparent` header and a
-tagged section of the binary frame):
-
-    t = json.load(urllib.request.urlopen(
-        "http://127.0.0.1:8090/debug/traces?limit=5"))["traces"][0]
-    def show(n, d=0):
-        print("  " * d, n["name"], n["duration_ms"], "ms")
-        [show(c, d + 1) for c in n["children"]]
-    show(t)   # router.batch > replica.sub_batch > service.superpack > ...
+Endpoint shapes, ETag/304 semantics, the binary wire negotiation, and
+worked client snippets (revalidation, `/batch` sweeps, `/metrics`,
+`/debug/traces`) for BOTH servers live in `docs/HTTP_API.md` — the
+reference this docstring used to duplicate.
 """
 import argparse
 import os
@@ -118,19 +43,70 @@ from repro.core import estimate_columns
 from repro.core.planner import NDVPlanner
 
 
-def ensure_demo_dataset(root: str):
+def ensure_demo_dataset(root: str, seed: int = 0):
     from repro.columnar.generator import int_domain, partitioned_column, zipf_column
     from repro.columnar.writer import WriterOptions, write_file
 
     for i in range(3):
-        dom = int_domain(2000 + 500 * i, seed=i)
-        a, _ = zipf_column(dom, 1 << 16, seed=10 + i)
-        b, _ = partitioned_column(dom, 1 << 16, seed=20 + i)
+        dom = int_domain(2000 + 500 * (i + seed), seed=i + 100 * seed)
+        a, _ = zipf_column(dom, 1 << 16, seed=10 + i + 100 * seed)
+        b, _ = partitioned_column(dom, 1 << 16, seed=20 + i + 100 * seed)
         write_file(
             os.path.join(root, f"part_{i:04d}"),
             {"key": a, "range_key": b},
             options=WriterOptions(row_group_size=8192),
         )
+
+
+def cost_demo() -> None:
+    """Planner-tier tour: two datasets, one router, one POST /cost."""
+    from repro.fleet import DatasetRegistry, Fleet, StatsRouter
+    from repro.wire import ConnectionPool, fetch
+
+    base = tempfile.mkdtemp()
+    registry = DatasetRegistry()
+    for name, seed in (("orders", 0), ("lines", 1)):
+        root = os.path.join(base, name)
+        ensure_demo_dataset(root, seed=seed)
+        registry.add("demo", name, root)
+    payload = {"graph": {
+        "tables": [
+            {"name": "o", "namespace": "demo", "dataset": "orders"},
+            {"name": "l", "namespace": "demo", "dataset": "lines",
+             "filter_selectivity": 0.5},
+        ],
+        "edges": [{"left": "o", "left_column": "key",
+                   "right": "l", "right_column": "key"}],
+    }}
+    pool = ConnectionPool()
+    with StatsRouter(Fleet(registry, replicas_per_dataset=2),
+                     port=0) as router:
+        status, etag, body = fetch(
+            router.url + "/cost", pool=pool, payload=payload, binary=False
+        )
+        assert status == 200, (status, body)
+        print("\n-- /cost: NDV-driven join ordering "
+              f"({body['plans_scored']} plans scored, "
+              f"{body['enumeration']}) --")
+        print(f"   best order: {' >> '.join(body['best_order'])}   "
+              f"total C_out cost: {body['total_cost']:.0f}")
+        for j in body["joins"]:
+            via = ", ".join(
+                f"{e['left']}.{e['left_column']}={e['right']}."
+                f"{e['right_column']} (sel 1/{1 / e['selectivity']:.0f})"
+                for e in j["edges"]
+            ) or "cross product"
+            print(f"   join {j['table']:8s} card~{j['cardinality']:12.0f} "
+                  f"via {via}")
+        print(f"   sources: {body['sources']}")
+        status, etag2, _ = fetch(
+            router.url + "/cost", pool=pool, payload=payload,
+            etag=etag, binary=False,
+        )
+        assert (status, etag2) == (304, etag), (status, etag2)
+        print(f"   revalidated 304 on the combined ETag {etag[:14]}... "
+              f"(valid until either dataset changes)")
+    pool.close()
 
 
 def serve_stats(root: str, host: str, port: int) -> None:
@@ -160,6 +136,10 @@ def main():
     ap.add_argument("--explain", action="store_true",
                     help="add a per-column provenance table (route, margins, "
                          "Newton iterations, clamps) and audited q-error")
+    ap.add_argument("--cost", action="store_true",
+                    help="after profiling, demo the planner tier: two demo "
+                         "datasets behind an in-process fleet router, one "
+                         "POST /cost, the chosen join order + cardinalities")
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8080)
     args = ap.parse_args()
@@ -220,6 +200,8 @@ def main():
     print(f"\nmetadata read: {meta_bytes/1e3:.1f} KB; "
           f"data pages NOT read: {data_bytes/1e6:.1f} MB "
           f"({data_bytes/max(meta_bytes,1):.0f}x saved)")
+    if args.cost:
+        cost_demo()
     if args.serve:
         serve_stats(root, args.host, args.port)
 

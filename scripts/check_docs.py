@@ -1,0 +1,121 @@
+#!/usr/bin/env python3
+"""Docs-consistency gate: the code is the inventory, the docs must match.
+
+Scans the source tree (regex only — no imports, so it runs anywhere a
+checkout exists) for the two surfaces the docs promise to cover:
+
+- every HTTP route dispatched by `src/repro/service/http.py` (shared
+  handler shell, so its routes exist on BOTH servers) and
+  `src/repro/fleet/router.py` must appear in `docs/HTTP_API.md`;
+- every metric series registered via `.counter(` / `.gauge(` /
+  `.histogram(` and every `register_stats_view("prefix", ...)` family
+  under `src/` must appear in `docs/METRICS.md`.
+
+A new route or metric that lands without its documentation line fails
+CI with the exact missing names. The reverse direction (documented but
+gone from the code) is deliberately unchecked: docs may describe
+behavior — e.g. per-tuple semantics — in prose this scanner can't parse.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+SERVICE_HTTP = SRC / "repro" / "service" / "http.py"
+FLEET_ROUTER = SRC / "repro" / "fleet" / "router.py"
+HTTP_DOC = REPO / "docs" / "HTTP_API.md"
+METRICS_DOC = REPO / "docs" / "METRICS.md"
+
+
+def service_routes() -> set:
+    """Literal paths compared against `url.path` in the handler shell."""
+    text = SERVICE_HTTP.read_text()
+    return set(re.findall(r'url\.path == "(/[^"]+)"', text))
+
+
+def router_routes() -> set:
+    """Router dispatch: top-level `parts == [...]` plus routed kinds."""
+    text = FLEET_ROUTER.read_text()
+    routes = {f"/{name}" for name in re.findall(r'parts == \["([^"]+)"\]', text)}
+    kinds_m = re.search(r"ROUTED_KINDS = \(([^)]*)\)", text)
+    if not kinds_m:
+        sys.exit("check_docs: ROUTED_KINDS tuple not found in router.py")
+    for kind in re.findall(r'"([^"]+)"', kinds_m.group(1)):
+        routes.add("/{ns}/{ds}/" + kind)
+    if re.search(r'parts\[2\] == "refresh"', text):
+        routes.add("/{ns}/{ds}/refresh")
+    return routes
+
+
+# Registration calls put the series name in the first string argument,
+# frequently on the line AFTER `.counter(` — match across the newline.
+_METRIC_RE = re.compile(r'\.(?:counter|gauge|histogram)\(\s*"([a-z0-9_]+)"')
+_VIEW_RE = re.compile(r'register_stats_view\(\s*"([a-z0-9_]+)"')
+
+
+def metric_names() -> set:
+    names = set()
+    for path in sorted(SRC.rglob("*.py")):
+        text = path.read_text()
+        names.update(_METRIC_RE.findall(text))
+        names.update(_VIEW_RE.findall(text))
+    return names
+
+
+def main() -> int:
+    failures = []
+
+    http_doc = HTTP_DOC.read_text() if HTTP_DOC.exists() else None
+    if http_doc is None:
+        failures.append(f"missing {HTTP_DOC.relative_to(REPO)}")
+    else:
+        for origin, routes in (
+            ("service/http.py", service_routes()),
+            ("fleet/router.py", router_routes()),
+        ):
+            for route in sorted(routes - {r for r in routes if r in http_doc}):
+                failures.append(
+                    f"route {route!r} ({origin}) is not documented in "
+                    f"docs/HTTP_API.md"
+                )
+
+    metrics_doc = METRICS_DOC.read_text() if METRICS_DOC.exists() else None
+    if metrics_doc is None:
+        failures.append(f"missing {METRICS_DOC.relative_to(REPO)}")
+    else:
+        names = metric_names()
+        if not names:
+            failures.append("metric scan found nothing — scanner regex rotted?")
+        for name in sorted(names):
+            if name not in metrics_doc:
+                failures.append(
+                    f"metric series {name!r} is not documented in "
+                    f"docs/METRICS.md"
+                )
+
+    # The scanner itself must stay honest: an empty route set means the
+    # dispatch idiom changed and this script silently stopped guarding.
+    if http_doc is not None and not service_routes():
+        failures.append("service route scan found nothing — scanner rotted?")
+    if http_doc is not None and not router_routes():
+        failures.append("router route scan found nothing — scanner rotted?")
+
+    if failures:
+        print("docs-consistency check FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print(
+        "docs-consistency check passed: "
+        f"{len(service_routes())} service routes, "
+        f"{len(router_routes())} router routes, "
+        f"{len(metric_names())} metric series documented."
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -405,6 +405,16 @@ class StatsCatalog:
     def non_nulls(self) -> Dict[str, float]:
         return {n: m.non_null for n, m in self.merged_metadata().items()}
 
+    def total_rows(self) -> int:
+        """Total row count across every ingested file (footer sums only).
+
+        The planner's base-cardinality input (`|R|` in the join-size
+        formula) — like everything else here it comes from metadata the
+        footers already carry, never from scanning data.
+        """
+        self._ensure_scanned()
+        return sum(e.footer.num_rows for e in self._entries.values())
+
     # -- estimation ----------------------------------------------------------
 
     def _packed(self, key: frozenset) -> ColumnBatch:

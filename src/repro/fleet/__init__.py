@@ -50,6 +50,15 @@ as a single cross-dataset super-pack engine call. Per-tuple ETags, 304s,
 and failover semantics are identical to the singleton routes — a sub-batch
 whose replica dies mid-flight requeues whole onto the next candidate.
 
+Planner tier: the router's `POST /cost` costs a join graph that spans
+registered datasets. `Fleet.cost` fetches one routed `/tablestats` body
+per referenced dataset (restricted to the join columns the graph uses),
+scores the plan space in the router process (`repro.planner`), and mints
+a combined ETag over the per-dataset tablestats ETags — 304 exactly when
+every input dataset's stats are unchanged, stable across replica
+failover because the constituent tags are state-derived. Cost tuples
+ride `POST /batch` next to estimate tuples.
+
 Entry points: `repro.launch.serve_fleet` (CLI; `--smoke` is the CI boot
 test), `serve_fleet()` (library), `Fleet` + `StatsRouter` for embedding.
 """

@@ -46,6 +46,7 @@ from repro.service import (
     Response,
     StatsService,
     format_bounds,
+    format_columns,
 )
 from repro.wire import ConnectionPool, WireError, fetch
 
@@ -54,7 +55,8 @@ from repro.wire import ConnectionPool, WireError, fetch
 class StatsRequest:
     """One transport-agnostic routed request (the router's unit of work)."""
 
-    kind: str  # "columns" | "estimate" | "plan" | "health" | "refresh"
+    kind: str  # "columns" | "estimate" | "plan" | "tablestats" | "health"
+               # | "refresh"
     mode: str = "paper"
     schema_bounds: Optional[Tuple[Tuple[str, float], ...]] = None
     if_none_match: Optional[str] = None
@@ -210,6 +212,12 @@ class LocalReplica:
             return self.service.plan(
                 mode=req.mode, if_none_match=req.if_none_match
             )
+        if req.kind == "tablestats":
+            return self.service.table_stats(
+                mode=req.mode,
+                columns=req.columns,
+                if_none_match=req.if_none_match,
+            )
         if req.kind == "health":
             return self.service.health()
         if req.kind == "refresh":
@@ -288,8 +296,10 @@ class RemoteReplica:
         if req.kind == "refresh":
             method = "POST"
         params = {}
-        if req.kind in ("estimate", "plan"):
+        if req.kind in ("estimate", "plan", "tablestats"):
             params["mode"] = req.mode
+        if req.kind == "tablestats" and req.columns:
+            params["columns"] = format_columns(req.columns)
         if req.kind == "estimate" and req.schema_bounds:
             # Percent-escaped per side: a column name containing ':' or ','
             # survives the trip (parse_bounds unescapes after splitting).

@@ -18,10 +18,13 @@ over it, the same shape as `repro.service.StatsServer`:
                                               (local queried in-process,
                                               remote scraped best-effort)
   POST /refresh                               broadcast refresh, all datasets
-  POST /batch                                 many estimate tuples, one frame
+  POST /batch                                 estimate + cost tuples, one frame
+  POST /cost?explain=                         join ordering over registered
+                                              datasets        [combined ETag]
   GET  /{ns}/{ds}/columns                     routed        [ETag passthrough]
   GET  /{ns}/{ds}/estimate?mode=&bounds=      routed        [ETag passthrough]
   GET  /{ns}/{ds}/plan?mode=                  routed        [ETag passthrough]
+  GET  /{ns}/{ds}/tablestats?mode=&columns=   routed        [ETag passthrough]
   GET  /{ns}/{ds}/health                      routed (any healthy replica)
   POST /{ns}/{ds}/refresh                     broadcast refresh, one dataset
 
@@ -40,13 +43,26 @@ minted by any replica validates on any other, because tags are derived from
 registry pins one engine config per dataset. That is the whole failover
 story — clients keep their `If-None-Match` caches across replica deaths,
 router restarts, and replica cold starts.
+
+`POST /cost` is the fleet's planner entry point (`repro.planner`): a join
+graph whose tables name registered datasets (`namespace`/`dataset` on every
+table) is costed in the router process. The router fetches one
+`/tablestats` body per referenced dataset from that dataset's replica set
+(restricted to the join columns the graph actually uses), scores the plan
+space with `compute_cost`, and mints a combined ETag hashed over (graph
+identity, mode, max_plans, the sorted per-dataset `/tablestats` ETags) —
+so `/cost` answers 304 exactly when *every* input dataset's stats are
+unchanged, and the tag is identical no matter which replica served each
+`/tablestats`, because those tags are state-derived. Cost tuples (dicts
+carrying a `"cost"` key) ride `POST /batch` next to estimate tuples.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 from http.server import ThreadingHTTPServer
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 from urllib.parse import parse_qs, urlsplit
 
 from repro.fleet.registry import DatasetRegistry, DatasetSpec
@@ -58,16 +74,28 @@ from repro.fleet.replica import (
 )
 from repro.obs import WIDTH_BUCKETS, registry as obs_registry
 from repro.obs.metrics import add_label_to_exposition
+from repro.planner import (
+    ColumnStats,
+    DEFAULT_MAX_PLANS,
+    JoinGraph,
+    TableStats,
+    compute_cost,
+)
+from repro.planner.api import provenance_block
 from repro.service import (
+    CostQuery,
     Response,
     batch_envelope,
+    etag_matches,
     parse_bounds,
+    parse_columns,
+    parse_cost_request,
     parse_explain,
     parse_query_tuple,
 )
 from repro.service.http import JSONResponseHandler
 
-ROUTED_KINDS = ("columns", "estimate", "plan", "health")
+ROUTED_KINDS = ("columns", "estimate", "plan", "tablestats", "health")
 
 # Same metric family the service tier observes — the `tier` label keeps
 # router envelopes and replica sub-batches distinguishable.
@@ -197,6 +225,131 @@ class Fleet:
             return Response(503, {"error": str(e)}, None)
         self._bump(routed=1, retried=int(attempts > 1))
         return resp
+
+    @staticmethod
+    def _cost_etag(
+        graph: JoinGraph, mode: str, max_plans: int,
+        source_etags: Dict[str, str],
+    ) -> str:
+        """Combined planner tag: rotates iff any input dataset's stats did.
+
+        Hashes the request identity (graph identity is order-insensitive,
+        so listing the same tables/edges in a different order revalidates)
+        plus every referenced dataset's `/tablestats` ETag in sorted key
+        order. Those tags are state-derived and replica-independent, so
+        this one is too.
+        """
+        h = hashlib.sha1()
+        h.update(
+            f"cost|{mode}|{graph.identity()!r}|{int(max_plans)}".encode()
+        )
+        for key in sorted(source_etags):
+            h.update(f"|{key}={source_etags[key]}".encode())
+        return f'"{h.hexdigest()}"'
+
+    def cost(
+        self,
+        *,
+        graph: JoinGraph,
+        mode: str = "paper",
+        max_plans: int = DEFAULT_MAX_PLANS,
+        if_none_match: Optional[str] = None,
+        explain: bool = False,
+    ) -> Response:
+        """Cost a cross-dataset join graph; the fleet's `POST /cost`.
+
+        Every graph table must carry `namespace`/`dataset` naming a
+        registered dataset (404 otherwise). Per referenced dataset, one
+        `/tablestats` request — restricted to the join columns the graph
+        uses on that dataset — goes through the replica set with the usual
+        rendezvous placement and failover; scoring happens here in the
+        router process. The 304 check runs after the (warm, cheap)
+        tablestats fetches but before any plan enumeration or scoring.
+        """
+        self._bump(requests=1)
+        needed = graph.columns_by_table()
+        key_by_alias: Dict[str, str] = {}
+        cols_by_key: Dict[str, set] = {}
+        for t in graph.tables:
+            if t.dataset_key is None:
+                return Response(
+                    400,
+                    {"error": f"table {t.name!r} must name a registered "
+                              f"dataset (namespace/dataset)"},
+                    None,
+                )
+            try:
+                key = self.registry.get(t.namespace, t.dataset).key
+            except KeyError as e:
+                self._bump(not_found=1)
+                return Response(404, {"error": str(e)}, None)
+            key_by_alias[t.name] = key
+            cols_by_key.setdefault(key, set()).update(needed[t.name])
+        bodies: Dict[str, dict] = {}
+        source_etags: Dict[str, str] = {}
+        for key in sorted(cols_by_key):
+            req = StatsRequest(
+                kind="tablestats",
+                mode=mode,
+                columns=tuple(sorted(cols_by_key[key])) or None,
+            )
+            try:
+                resp, _name, attempts = self.sets[key].call(req)
+            except NoReplicaAvailable as e:
+                self._bump(unavailable=1)
+                return Response(503, {"error": str(e)}, None)
+            self._bump(routed=1, retried=int(attempts > 1))
+            if resp.status != 200:
+                err = (resp.body or {}).get("error", f"status {resp.status}")
+                return Response(
+                    resp.status,
+                    {"error": f"tablestats for dataset {key!r}: {err}"},
+                    None,
+                )
+            bodies[key] = resp.body
+            source_etags[key] = resp.body["etag"]
+        etag = self._cost_etag(graph, mode, max_plans, source_etags)
+        if if_none_match is not None and etag_matches(if_none_match, etag):
+            return Response(304, None, etag)
+        stats: Dict[str, TableStats] = {}
+        for t in graph.tables:
+            body = bodies[key_by_alias[t.name]]
+            columns: Dict[str, ColumnStats] = {}
+            for col in needed[t.name]:
+                cs = body["columns"].get(col)
+                if cs is None:
+                    # The replica validated the column list, so this only
+                    # fires on a body-shape drift — still a client-visible
+                    # 400, not a 500.
+                    return Response(
+                        400,
+                        {"error": f"dataset {key_by_alias[t.name]!r} has "
+                                  f"no column {col!r}"},
+                        None,
+                    )
+                columns[col] = ColumnStats(
+                    ndv=float(cs["ndv"]),
+                    non_null=int(cs["non_null"]),
+                    confidence=cs.get("confidence"),
+                    route=cs.get("route"),
+                )
+            stats[t.name] = TableStats(
+                rows=float(body["rows"]), columns=columns
+            )
+        try:
+            cost_body = compute_cost(
+                graph, stats, mode=mode, max_plans=max_plans
+            )
+        except ValueError as e:
+            return Response(400, {"error": str(e)}, None)
+        out = {
+            "etag": etag,
+            "sources": dict(sorted(source_etags.items())),
+            **cost_body,
+        }
+        if explain:
+            out["provenance"] = provenance_block(graph, stats)
+        return Response(200, out, etag)
 
     def batch(
         self, items: Sequence[Tuple[str, str, StatsRequest]]
@@ -360,7 +513,7 @@ class _RouterHandler(JSONResponseHandler):
     server_version = "ndv-stats-router"
     tier = "router"
 
-    _TOP_ROUTES = frozenset({"datasets", "health", "refresh", "batch"})
+    _TOP_ROUTES = frozenset({"datasets", "health", "refresh", "batch", "cost"})
 
     def _route_label(self, path: str) -> str:
         # `/{ns}/{ds}/{kind}` collapses to the kind — dataset names must
@@ -400,16 +553,44 @@ class _RouterHandler(JSONResponseHandler):
         return parts, parse_qs(url.query)
 
     @staticmethod
-    def _parse_batch(payload) -> List[Tuple[str, str, StatsRequest]]:
-        """Router `/batch` body -> routable items (ValueError on junk)."""
+    def _parse_batch(
+        payload,
+    ) -> List[Union[Tuple[str, str, StatsRequest], CostQuery]]:
+        """Router `/batch` body -> routable items (ValueError on junk).
+
+        Estimate tuples carry `namespace`/`dataset` alongside the service
+        tuple fields. Cost tuples (a `"cost"` key) carry no top-level
+        dataset fields — every table inside the graph names its own —
+        and come back as `CostQuery` for `Fleet.cost`.
+        """
         if not isinstance(payload, dict) or not isinstance(
             payload.get("tuples"), list
         ):
             raise ValueError(
                 "batch body must be an object with a 'tuples' list"
             )
-        items: List[Tuple[str, str, StatsRequest]] = []
+        items: List[Union[Tuple[str, str, StatsRequest], CostQuery]] = []
         for t in payload["tuples"]:
+            if isinstance(t, dict) and "cost" in t:
+                unknown = set(t) - {"cost", "if_none_match", "explain"}
+                if unknown:
+                    raise ValueError(
+                        f"unknown cost tuple fields: {sorted(unknown)}"
+                    )
+                graph, mode, max_plans = parse_cost_request(
+                    t["cost"], require_datasets=True
+                )
+                inm = t.get("if_none_match")
+                if inm is not None and not isinstance(inm, str):
+                    raise ValueError("if_none_match must be a string")
+                items.append(CostQuery(
+                    graph=graph,
+                    mode=mode,
+                    max_plans=max_plans,
+                    if_none_match=inm,
+                    explain=bool(t.get("explain", False)),
+                ))
+                continue
             query = parse_query_tuple(t)
             ns, ds = t.get("namespace"), t.get("dataset")
             if not isinstance(ns, str) or not isinstance(ds, str):
@@ -441,11 +622,18 @@ class _RouterHandler(JSONResponseHandler):
                     explain = parse_explain(query)
                 except ValueError as e:
                     return self._error(400, str(e))
+                columns = None
+                if kind == "tablestats" and "columns" in query:
+                    try:
+                        columns = parse_columns(query["columns"][0])
+                    except ValueError as e:
+                        return self._error(400, str(e))
                 req = StatsRequest(
                     kind=kind,
                     mode=query.get("mode", ["paper"])[0],
                     schema_bounds=bounds,
                     if_none_match=self.headers.get("If-None-Match"),
+                    columns=columns,
                     explain=explain,
                 )
                 return self._send(self.fleet.route(ns, ds, req))
@@ -459,13 +647,51 @@ class _RouterHandler(JSONResponseHandler):
         try:
             if parts == ["refresh"]:
                 return self._send(self.fleet.refresh())
+            if parts == ["cost"]:
+                try:
+                    explain = parse_explain(
+                        parse_qs(urlsplit(self.path).query,
+                                 keep_blank_values=True)
+                    )
+                    graph, mode, max_plans = parse_cost_request(
+                        self._read_body(), require_datasets=True
+                    )
+                except ValueError as e:
+                    return self._error(400, str(e))
+                return self._send(self.fleet.cost(
+                    graph=graph,
+                    mode=mode,
+                    max_plans=max_plans,
+                    if_none_match=self.headers.get("If-None-Match"),
+                    explain=explain,
+                ))
             if parts == ["batch"]:
                 try:
                     items = self._parse_batch(self._read_body())
                 except ValueError as e:
                     return self._error(400, str(e))
                 _BATCH_WIDTH.observe(len(items), tier=self.tier)
-                return self._send(batch_envelope(self.fleet.batch(items)))
+                responses: List[Optional[Response]] = [None] * len(items)
+                est_items: List[Tuple[str, str, StatsRequest]] = []
+                est_idx: List[int] = []
+                for i, item in enumerate(items):
+                    if isinstance(item, CostQuery):
+                        responses[i] = self.fleet.cost(
+                            graph=item.graph,
+                            mode=item.mode,
+                            max_plans=item.max_plans,
+                            if_none_match=item.if_none_match,
+                            explain=item.explain,
+                        )
+                    else:
+                        est_idx.append(i)
+                        est_items.append(item)
+                if est_items:
+                    for i, resp in zip(
+                        est_idx, self.fleet.batch(est_items)
+                    ):
+                        responses[i] = resp
+                return self._send(batch_envelope(responses))
             if len(parts) == 3 and parts[2] == "refresh":
                 return self._send(self.fleet.refresh(parts[0], parts[1]))
             self.fleet._bump(not_found=1)

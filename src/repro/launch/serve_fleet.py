@@ -9,7 +9,9 @@
     # estimate, kill a replica, re-estimate through failover, assert 304
     # revalidation and zero-pack warm start from the shared spill, then a
     # binary POST /batch spanning both datasets (per-tuple 304s asserted
-    # through a second mid-batch replica kill, one pooled connection)
+    # through a second mid-batch replica kill, one pooled connection) and
+    # a cross-dataset POST /cost (combined ETag stable on the degraded
+    # fleet, 304 revalidation, batch-tuple parity)
     PYTHONPATH=src python -m repro.launch.serve_fleet --smoke
 
 A planner then addresses the whole namespace through one endpoint:
@@ -217,6 +219,39 @@ def run_smoke(args: argparse.Namespace) -> int:
         status, _, health = fetch_json(base_url + "/health")
         assert status == 200 and health["status"] == "serving", health
 
+        # -- planner tier: cross-dataset /cost through the router ---------
+        # Both replica sets have had a kill above, so the combined ETag
+        # (a hash of per-dataset /tablestats tags, themselves state-derived)
+        # is exercised on the degraded fleet: the tag must not depend on
+        # which replica served each tablestats fetch.
+        cost_payload = {"graph": {
+            "tables": [
+                {"name": "a", "namespace": "smoke", "dataset": "alpha"},
+                {"name": "b", "namespace": "smoke", "dataset": "beta"},
+            ],
+            "edges": [{"left": "a", "left_column": "tok",
+                       "right": "b", "right_column": "tok"}],
+        }}
+        status, cost_etag, cost = fetch(
+            base_url + "/cost", pool=pool, payload=cost_payload, binary=False
+        )
+        assert status == 200 and cost_etag, (status, cost)
+        assert sorted(cost["best_order"]) == ["a", "b"], cost
+        assert set(cost["sources"]) == {"smoke/alpha", "smoke/beta"}, cost
+        status, etag2_, _ = fetch(
+            base_url + "/cost", pool=pool, payload=cost_payload,
+            etag=cost_etag, binary=False,
+        )
+        assert status == 304 and etag2_ == cost_etag, (status, etag2_)
+        # a cost tuple rides /batch with the identical ETag
+        status, _, env = fetch(
+            base_url + "/batch", pool=pool, method="POST",
+            payload={"tuples": [{"cost": cost_payload}]},
+        )
+        entry = env["responses"][0]
+        assert status == 200 and entry["status"] == 200, env
+        assert entry["etag"] == cost_etag, (entry["etag"], cost_etag)
+
         # -- quality observability: explain round-trip + audited q-error --
         url = router.url_for("smoke", "beta", "estimate") \
             + "?mode=improved&explain=1"
@@ -262,9 +297,11 @@ def run_smoke(args: argparse.Namespace) -> int:
               f"stable across replicas, 304 revalidation on survivor, "
               f"fresh replica warm from spill (0 packs), binary /batch "
               f"across both datasets with per-tuple 304s through a "
-              f"mid-batch kill on one keep-alive connection, ?explain=1 "
-              f"provenance with stable ETag, audited q-error in /metrics, "
-              f"/debug/traces scraped")
+              f"mid-batch kill on one keep-alive connection, cross-dataset "
+              f"/cost with a combined ETag stable on the degraded fleet "
+              f"(304 + batch-tuple parity), ?explain=1 provenance with "
+              f"stable ETag, audited q-error in /metrics, /debug/traces "
+              f"scraped")
     # context exit shut everything down; a second connect must now fail
     try:
         fetch_json(base_url + "/health")

@@ -5,7 +5,8 @@
 
     # self-contained smoke (CI): temp dataset, ephemeral port, scripted
     # client asserting estimate / 304 / plan / health, binary-negotiated
-    # estimate parity, a per-tuple 200+304 /batch frame, clean shutdown
+    # estimate parity, a per-tuple 200+304 /batch frame, a /cost join
+    # order with 304 revalidation, clean shutdown
     PYTHONPATH=src python -m repro.launch.serve_stats --smoke
 
 Query planners then pull estimates without local footer access:
@@ -140,6 +141,29 @@ def run_smoke(args: argparse.Namespace) -> int:
         assert explained["provenance"].keys() == body["estimates"].keys()
         assert {k: v for k, v in explained.items() if k != "provenance"} \
             == body, "explain must not perturb the response body"
+        # planner tier: a self-join /cost over the served dataset answers
+        # with a join order, and revalidates 304 on the same state-derived
+        # ETag (cacheable POST acceptance, ISSUE 10)
+        cost_payload = {"graph": {
+            "tables": [{"name": "a"}, {"name": "b"}, {"name": "c"}],
+            "edges": [
+                {"left": "a", "left_column": "tok",
+                 "right": "b", "right_column": "tok"},
+                {"left": "b", "left_column": "tok",
+                 "right": "c", "right_column": "tok"},
+            ],
+        }}
+        statusc, etagc, cost = fetch(
+            base + "/cost", pool=pool, payload=cost_payload, binary=False
+        )
+        assert statusc == 200 and etagc, (statusc, cost)
+        assert sorted(cost["best_order"]) == ["a", "b", "c"], cost
+        assert len(cost["joins"]) == 2 and cost["total_cost"] > 0, cost
+        statusc2, etagc2, _ = fetch(
+            base + "/cost", pool=pool, payload=cost_payload,
+            etag=etagc, binary=False,
+        )
+        assert statusc2 == 304 and etagc2 == etagc, (statusc2, etagc2)
         # one synchronous audit pass (the background thread is event-driven;
         # the smoke drives it deterministically) feeds the q-error series
         server.service.run_audit()
@@ -153,7 +177,8 @@ def run_smoke(args: argparse.Namespace) -> int:
         for series in ("ndv_http_requests_total", "ndv_service_responses_304",
                        "ndv_service_engine_runs", "ndv_batch_tuples",
                        "ndv_engine_dispatches_total", "ndv_route_total",
-                       "ndv_audit_qerror"):
+                       "ndv_audit_qerror", "planner_plans_scored_total",
+                       "planner_dispatches_total"):
             assert series in metrics, f"/metrics missing {series}"
         with _req.urlopen(base + "/debug/traces?limit=10") as r:
             traces = _json.load(r)["traces"]
@@ -163,6 +188,7 @@ def run_smoke(args: argparse.Namespace) -> int:
               f"etag {etag[:10]}..., 304 revalidation, "
               f"{health['ingest']['footers_read']} footers read async, "
               f"binary /estimate bit-identical, /batch per-tuple 200+304, "
+              f"/cost join order with 304 revalidation, "
               f"?explain=1 provenance with stable ETag, audited q-error in "
               f"/metrics, /debug/traces scraped")
     # context exit shut the server down; a second connect must now fail

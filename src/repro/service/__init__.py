@@ -76,12 +76,20 @@ refresh generation, computes a reference NDV from an HLL sketch over
 one row group (`repro.kernels.hll`), and records q-error into
 `ndv_audit_qerror{route=}` — see `repro.obs` for the metrics map.
 
+The planner tier rides the same contract: `GET /tablestats` serves the
+planner-shaped inputs (total rows + per-column NDV/route/confidence) and
+`POST /cost` serves NDV-driven join ordering (`repro.planner`) — a
+cacheable POST whose ETag hashes (state token, join-graph identity,
+max_plans), so plans 304 exactly while the dataset's stats are
+unchanged. Cost tuples ride `/batch` alongside estimate tuples.
+
 Entry points: `repro.launch.serve_stats` (CLI), `serve()` (library),
 `examples/profile_dataset.py --serve` (demo). For many datasets behind
 one endpoint with N replicas each, see the fleet tier (`repro.fleet`):
 it composes this package's `StatsService` into health-checked replica
 sets — the state-derived ETag contract above is exactly what makes
-replicas interchangeable there.
+replicas interchangeable there. docs/HTTP_API.md is the full endpoint
+reference.
 """
 from repro.service.http import (  # noqa: F401
     JSONResponseHandler,
@@ -89,9 +97,12 @@ from repro.service.http import (  # noqa: F401
     batch_envelope,
     fetch_json,
     format_bounds,
+    format_columns,
     make_handler,
     parse_batch_queries,
     parse_bounds,
+    parse_columns,
+    parse_cost_request,
     parse_explain,
     parse_query_tuple,
     serve,
@@ -99,6 +110,7 @@ from repro.service.http import (  # noqa: F401
 from repro.service.ingest import AsyncIngestor, IngestStats  # noqa: F401
 from repro.service.service import (  # noqa: F401
     AuditResult,
+    CostQuery,
     EstimateQuery,
     Response,
     ServiceStats,

@@ -12,11 +12,23 @@ Routes (responses are JSON by default):
   GET  /columns                      merged per-column summary      [ETag]
   GET  /estimate?mode=&bounds=&explain=  per-column NDV estimates   [ETag]
   GET  /plan?mode=                   per-column memory plans        [ETag]
+  GET  /tablestats?mode=&columns=    planner-shaped rows + NDV      [ETag]
   GET  /metrics                      Prometheus text exposition (uncached)
   GET  /debug/traces?limit=N         recent request traces, JSON span trees
   GET  /debug/explain                provenance cache + audit samples
-  POST /batch                        many estimate tuples, one frame
+  POST /cost?explain=                cheapest join order for a graph [ETag]
+  POST /batch                        many estimate/cost tuples, one frame
   POST /refresh                      force one ingestion refresh
+
+`POST /cost` takes `{"graph": {"tables": [...], "edges": [...]},
+"mode"?, "max_plans"?}` (see `repro.planner.graph.parse_join_graph` for
+the graph shape) and returns the cheapest join order with per-join
+output cardinalities. It is cacheable despite being a POST: the response
+carries an ETag over (dataset state, graph identity, max_plans) and an
+`If-None-Match` request header earns a 304 — plans revalidate exactly
+while the dataset's stats are unchanged. A `/batch` tuple with a "cost"
+key (`{"cost": {"graph": ...}, "if_none_match"?, "explain"?}`) carries
+the same request inside the batch envelope with identical ETags.
 
 `explain=1` attaches per-column estimation provenance (chosen route and
 its margin, detector margin, Newton iteration counts and residual,
@@ -63,7 +75,13 @@ from repro.obs import (
     root_span,
     trace_tree,
 )
-from repro.service.service import EstimateQuery, Response, StatsService
+from repro.planner import parse_join_graph, parse_max_plans
+from repro.service.service import (
+    CostQuery,
+    EstimateQuery,
+    Response,
+    StatsService,
+)
 from repro.wire import (
     JSON_CONTENT_TYPE,
     WIRE_CONTENT_TYPE,
@@ -169,6 +187,53 @@ def format_bounds(bounds) -> str:
     )
 
 
+def parse_columns(raw: str) -> Tuple[str, ...]:
+    """`?columns=` query value -> column-name tuple (ValueError on junk).
+
+    Comma-separated, each name percent-unescaped after the split
+    (`format_columns` is the inverse) — same escaping contract as
+    `bounds`, so names containing `,` survive the trip.
+    """
+    cols = tuple(unquote(p) for p in raw.split(",") if p.strip())
+    if not cols:
+        raise ValueError("columns must name at least one column")
+    return cols
+
+
+def format_columns(columns) -> str:
+    """Inverse of `parse_columns`: name iterable -> query value."""
+    return ",".join(quote(str(c), safe="") for c in columns)
+
+
+def parse_cost_request(
+    payload, *, require_datasets: bool = False
+) -> Tuple[object, str, int]:
+    """`/cost` request body -> (graph, mode, max_plans); ValueError -> 400.
+
+    Shared verbatim by the per-dataset server and the fleet router
+    (`require_datasets=True` there: every table must name a registered
+    namespace/dataset), so the request grammar cannot drift between
+    tiers.
+    """
+    if not isinstance(payload, dict):
+        raise ValueError(
+            f"cost body must be an object, got {type(payload).__name__}"
+        )
+    unknown = set(payload) - {"graph", "mode", "max_plans"}
+    if unknown:
+        raise ValueError(f"unknown cost fields {sorted(unknown)}")
+    if "graph" not in payload:
+        raise ValueError("cost body needs a 'graph' object")
+    graph = parse_join_graph(
+        payload["graph"], require_datasets=require_datasets
+    )
+    mode = payload.get("mode", "paper")
+    if not isinstance(mode, str):
+        raise ValueError("'mode' must be a string")
+    max_plans = parse_max_plans(payload.get("max_plans"))
+    return graph, mode, max_plans
+
+
 def parse_explain(query: Dict[str, List[str]]) -> bool:
     """`?explain=` query value -> bool (ValueError on junk).
 
@@ -184,16 +249,39 @@ def parse_explain(query: Dict[str, List[str]]) -> bool:
     raise ValueError(f"explain must be a boolean flag, got {raw!r}")
 
 
-def parse_query_tuple(d: dict) -> EstimateQuery:
+def parse_query_tuple(d: dict) -> "EstimateQuery | CostQuery":
     """One `/batch` tuple dict -> `EstimateQuery` (ValueError on junk).
 
     `bounds` accepts either a `{name: value}` mapping (the native batch
     shape) or the GET query-string format (`parse_bounds` syntax), so a
     client can forward query strings verbatim. `explain` accepts a bool
     or 0/1.
+
+    A tuple carrying a "cost" key is a batched `/cost` request instead:
+    its value is the same `{"graph", "mode"?, "max_plans"?}` object the
+    standalone endpoint takes, with tuple-level `if_none_match`/`explain`
+    riding alongside. Parses to a `CostQuery`.
     """
     if not isinstance(d, dict):
         raise ValueError(f"batch tuple must be an object, got {type(d).__name__}")
+    if "cost" in d:
+        unknown = set(d) - {"cost", "if_none_match", "explain",
+                            "namespace", "dataset"}
+        if unknown:
+            raise ValueError(
+                f"unknown cost tuple fields {sorted(unknown)}"
+            )
+        graph, mode, max_plans = parse_cost_request(d["cost"])
+        inm = d.get("if_none_match")
+        if inm is not None and not isinstance(inm, str):
+            raise ValueError("'if_none_match' must be a string")
+        explain = d.get("explain", False)
+        if explain not in (True, False, 0, 1):
+            raise ValueError("'explain' must be a boolean or 0/1")
+        return CostQuery(
+            graph=graph, mode=mode, max_plans=max_plans,
+            if_none_match=inm, explain=bool(explain),
+        )
     unknown = set(d) - {"columns", "mode", "bounds", "if_none_match",
                         "namespace", "dataset", "explain"}
     if unknown:
@@ -281,7 +369,8 @@ class JSONResponseHandler(BaseHTTPRequestHandler):
     slow_request_ms: Optional[float] = None
 
     _KNOWN_ROUTES = frozenset(
-        {"health", "columns", "estimate", "plan", "refresh", "batch"}
+        {"health", "columns", "estimate", "plan", "tablestats", "cost",
+         "refresh", "batch"}
     )
 
     def log_message(self, fmt, *args):  # noqa: D102 — quiet by default
@@ -534,6 +623,18 @@ class _Handler(JSONResponseHandler):
                     mode=query.get("mode", ["paper"])[0],
                     if_none_match=inm,
                 ))
+            elif url.path == "/tablestats":
+                columns = None
+                if "columns" in query:
+                    try:
+                        columns = parse_columns(query["columns"][0])
+                    except ValueError as e:
+                        return self._error(400, str(e))
+                self._send(self.service.table_stats(
+                    mode=query.get("mode", ["paper"])[0],
+                    columns=columns,
+                    if_none_match=inm,
+                ))
             else:
                 self._error(404, f"no such endpoint: {url.path}")
         except Exception as e:
@@ -545,6 +646,21 @@ class _Handler(JSONResponseHandler):
         try:
             if url.path == "/refresh":
                 self._send(self.service.refresh())
+            elif url.path == "/cost":
+                try:
+                    explain = parse_explain(
+                        parse_qs(url.query, keep_blank_values=True)
+                    )
+                    graph, mode, max_plans = parse_cost_request(
+                        self._read_body()
+                    )
+                except ValueError as e:
+                    return self._error(400, str(e))
+                self._send(self.service.cost(
+                    graph=graph, mode=mode, max_plans=max_plans,
+                    if_none_match=self.headers.get("If-None-Match"),
+                    explain=explain,
+                ))
             elif url.path == "/batch":
                 try:
                     queries = parse_batch_queries(self._read_body())

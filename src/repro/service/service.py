@@ -53,6 +53,14 @@ from repro.catalog.source import MetadataSource
 from repro.core.ndv.estimator import provenance_to_json
 from repro.obs import registry, span
 from repro.obs.metrics import QERROR_BUCKETS
+from repro.planner import (
+    ColumnStats,
+    DEFAULT_MAX_PLANS,
+    JoinGraph,
+    TableStats,
+    compute_cost,
+)
+from repro.planner.api import provenance_block
 from repro.service.ingest import AsyncIngestor
 
 MODES = ("paper", "improved")
@@ -75,6 +83,21 @@ class EstimateQuery(NamedTuple):
     # single-flight key, so explain-on and explain-off tuples coalesce and
     # revalidate against each other; provenance attaches to a COPY of the
     # published body, never to the shared single-flight result.
+    explain: bool = False
+
+
+class CostQuery(NamedTuple):
+    """One `/cost` tuple of a batched request (`StatsService.batch`).
+
+    Same identity rules as the standalone endpoint: `if_none_match` and
+    `explain` are excluded from the ETag identity, so batched cost tuples
+    revalidate against standalone `/cost` responses byte-for-byte.
+    """
+
+    graph: JoinGraph
+    mode: str = "paper"
+    max_plans: int = DEFAULT_MAX_PLANS
+    if_none_match: Optional[str] = None
     explain: bool = False
 
 
@@ -524,7 +547,140 @@ class StatsService:
             },
         )
 
-    def batch(self, queries: Sequence[EstimateQuery]) -> List[Response]:
+    def table_stats(
+        self,
+        *,
+        mode: str = "paper",
+        columns: Optional[Tuple[str, ...]] = None,
+        if_none_match: Optional[str] = None,
+    ) -> Response:
+        """Planner-shaped table statistics: row count + per-column NDV.
+
+        The fleet router's `/cost` input: one small cacheable body per
+        dataset carrying everything the join-cardinality formula needs —
+        total rows (footer sums), per-column NDV, non-null count, and the
+        PR 9 quality signals (route, confidence). `columns=None` serves
+        every column; a filter restricts the body AND extends the ETag
+        identity (same rule as filtered batch tuples). Unknown columns
+        are a request error (400).
+        """
+        if columns is not None:
+            self._ensure_ready()
+            unknown = [
+                c for c in columns if c not in set(self.catalog.column_names)
+            ]
+            if unknown:
+                self.stats.requests += 1
+                return Response(
+                    400, {"error": f"unknown columns {unknown}"}, None
+                )
+
+        def build(etag: str, gen: int) -> dict:
+            ests = self.catalog.estimate(mode=mode)
+            provs = self.catalog.provenance(mode=mode, engine=self.engine)
+            merged = self.catalog.merged_metadata()
+            names = columns if columns is not None else sorted(ests)
+            return {
+                "etag": etag,
+                "generation": gen,
+                "mode": mode,
+                "rows": self.catalog.total_rows(),
+                "columns": {
+                    name: {
+                        "ndv": float(ests[name].ndv),
+                        "non_null": int(merged[name].non_null),
+                        "confidence": float(ests[name].confidence),
+                        "route": (
+                            provs[name].route if name in provs else None
+                        ),
+                    }
+                    for name in names
+                },
+            }
+
+        return self._cached_response(
+            "tablestats", mode, (), if_none_match, build, columns
+        )
+
+    def cost(
+        self,
+        *,
+        graph: JoinGraph,
+        mode: str = "paper",
+        max_plans: int = DEFAULT_MAX_PLANS,
+        if_none_match: Optional[str] = None,
+        explain: bool = False,
+    ) -> Response:
+        """Cheapest join order + per-join cardinalities for a join graph.
+
+        Tables read THIS service's dataset (aliases make self-join graphs;
+        cross-dataset graphs are the fleet router's `/cost`). The ETag
+        hashes (state token, graph identity, max_plans): a plan 304s
+        exactly while the dataset's stats are unchanged, and rotates with
+        any file add/remove/rewrite. `explain=True` attaches the
+        per-column NDV/route/confidence provenance that fed each
+        cardinality, on a copy — identity-neutral like `/estimate`'s.
+        """
+        ident_key = (repr(graph.identity()), int(max_plans))
+
+        def build(etag: str, gen: int) -> dict:
+            stats_map = self._planner_stats(graph, mode)
+            body = compute_cost(
+                graph, stats_map, mode=mode, max_plans=max_plans
+            )
+            return {"etag": etag, "generation": gen, **body}
+
+        try:
+            resp = self._cached_response(
+                "cost", mode, ident_key, if_none_match, build
+            )
+        except ValueError as e:
+            # Graph references a column this dataset doesn't have.
+            return Response(400, {"error": str(e)}, None)
+        if explain and resp.status == 200 and resp.body is not None:
+            with self.lock:
+                stats_map = self._planner_stats(graph, mode)
+            body = dict(resp.body)
+            body["provenance"] = provenance_block(graph, stats_map)
+            resp = Response(resp.status, body, resp.etag)
+        return resp
+
+    def _planner_stats(self, graph: JoinGraph, mode: str):
+        """Per-table `TableStats` for `compute_cost`, from this catalog.
+
+        Every graph alias reads the served dataset, so tables share the
+        row count and column estimates. Call under the lock (the cost
+        build does). Raises ValueError for unknown join columns -> 400.
+        """
+        ests = self.catalog.estimate(mode=mode)
+        provs = self.catalog.provenance(mode=mode, engine=self.engine)
+        merged = self.catalog.merged_metadata()
+        rows = float(self.catalog.total_rows())
+        needed = graph.columns_by_table()
+        unknown = sorted(
+            {c for cols in needed.values() for c in cols} - set(ests)
+        )
+        if unknown:
+            raise ValueError(f"unknown join columns {unknown}")
+        stats_map: Dict[str, TableStats] = {}
+        for name, cols in needed.items():
+            stats_map[name] = TableStats(
+                rows=rows,
+                columns={
+                    c: ColumnStats(
+                        ndv=float(ests[c].ndv),
+                        non_null=int(merged[c].non_null),
+                        confidence=float(ests[c].confidence),
+                        route=provs[c].route if c in provs else None,
+                    )
+                    for c in cols
+                },
+            )
+        return stats_map
+
+    def batch(
+        self, queries: Sequence[Union[EstimateQuery, "CostQuery"]]
+    ) -> List[Response]:
         """Many estimate tuples, one engine dispatch per cold mode group.
 
         Per-tuple semantics are exactly `estimate()`'s: the same ETags
@@ -539,12 +695,34 @@ class StatsService:
         duplicate within this one) ride that leader — and all claimed
         tuples execute as ONE `superpack_estimate` call under the lock,
         publishing each tuple's body to its own followers.
+
+        `CostQuery` tuples ride the same envelope: each runs the standalone
+        `cost()` path (its own single-flight key and 304 semantics — a
+        cost tuple's ETag matches the standalone endpoint's byte-for-byte).
+        The batched plan scorer is already one dispatch per graph, so cost
+        tuples don't super-pack across graphs the way estimate tuples do.
         """
         n = len(queries)
-        self.stats.requests += n
         responses: List[Optional[Response]] = [None] * n
         if n == 0:
             return []
+        for i, q in enumerate(queries):
+            if isinstance(q, CostQuery):
+                try:
+                    responses[i] = self.cost(
+                        graph=q.graph, mode=q.mode, max_plans=q.max_plans,
+                        if_none_match=q.if_none_match, explain=q.explain,
+                    )
+                except Exception as e:
+                    responses[i] = Response(
+                        500, {"error": f"{type(e).__name__}: {e}"}, None
+                    )
+        est_count = sum(
+            1 for q in queries if not isinstance(q, CostQuery)
+        )
+        self.stats.requests += est_count
+        if est_count == 0:
+            return responses
         self._ensure_ready()
         known = set(self.catalog.column_names)
 
@@ -553,6 +731,8 @@ class StatsService:
         waiting: List[tuple] = []   # (index, call) — led by another thread
         leader_for: Dict[tuple, int] = {}
         for i, q in enumerate(queries):
+            if isinstance(q, CostQuery):
+                continue
             if q.mode not in MODES:
                 responses[i] = Response(
                     400, {"error": f"mode {q.mode!r} not in {list(MODES)}"},
@@ -610,6 +790,9 @@ class StatsService:
         for i, q in enumerate(queries):
             # After publication: provenance attaches to per-tuple COPIES,
             # so coalesced tuples sharing a leader's body are unaffected.
+            # (Cost tuples handled their own explain above.)
+            if isinstance(q, CostQuery):
+                continue
             if q.explain and responses[i] is not None \
                     and responses[i].status == 200:
                 responses[i] = self._attach_provenance(
@@ -921,16 +1104,33 @@ class StatsService:
         if_none_match: Optional[str],
         build: Callable[[str, int], dict],
     ) -> Response:
+        bounds_key = (
+            tuple(sorted(schema_bounds.items())) if schema_bounds else ()
+        )
+        return self._cached_response(
+            kind, mode, bounds_key, if_none_match, build
+        )
+
+    def _cached_response(
+        self,
+        kind: str,
+        mode: str,
+        ident_key: tuple,
+        if_none_match: Optional[str],
+        build: Callable[[str, int], dict],
+        columns: Optional[Tuple[str, ...]] = None,
+    ) -> Response:
+        """The shared cacheable-endpoint skeleton (ETag precheck,
+        single-flight, lock discipline). `ident_key` is whatever request
+        identity the endpoint hashes besides kind/mode — schema bounds for
+        the estimate family, (graph identity, max_plans) for `/cost`."""
         self.stats.requests += 1
         if mode not in MODES:
             return Response(
                 400, {"error": f"mode {mode!r} not in {list(MODES)}"}, None
             )
         self._ensure_ready()
-        bounds_key = (
-            tuple(sorted(schema_bounds.items())) if schema_bounds else ()
-        )
-        etag = self._etag(kind, mode, bounds_key)
+        etag = self._etag(kind, mode, ident_key, columns)
         if if_none_match is not None and etag_matches(if_none_match, etag):
             # The entire hit path: one lock-free digest. No pack, no engine.
             self.stats.responses_304 += 1
@@ -941,7 +1141,7 @@ class StatsService:
                 # Recompute the tag inside the lock: a refresh may have
                 # committed since the cheap pre-check, and the body must
                 # describe the state its ETag names.
-                etag_now = self._etag(kind, mode, bounds_key)
+                etag_now = self._etag(kind, mode, ident_key, columns)
                 if self.shared_spill:
                     # A sibling replica may have computed (and spilled)
                     # this entry already: one stat when nothing changed,

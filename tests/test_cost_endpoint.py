@@ -1,0 +1,350 @@
+"""`/tablestats` + `/cost` end-to-end: both serving tiers, both encodings.
+
+Covers the planner-tier serving acceptance criteria:
+  * POST /cost on the single-dataset server returns the cheapest join
+    order + per-join cardinalities for a >=6-table graph, scoring >=1000
+    candidate plans in ONE batched JAX dispatch (asserted via the
+    planner_* obs counters through the HTTP path)
+  * /cost is a cacheable POST: strong state-derived ETag, If-None-Match
+    304, tag rotation on dataset rewrite, explain identity-neutrality,
+    byte-identical JSON and wire bodies, /batch carriage parity
+  * the router's /cost combines per-dataset /tablestats ETags: 304s
+    survive replica kills (tags are state-derived, replica-independent)
+    and unknown datasets answer 404
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.columnar.writer import WriterOptions, write_file
+from repro.fleet import DatasetRegistry, Fleet, StatsRouter
+from repro.service import StatsServer, StatsService, fetch_json
+from repro.wire import ConnectionPool, fetch
+
+
+def _write(root, name, seed, rows=256, vocab=64):
+    rng = np.random.default_rng(seed)
+    return write_file(
+        os.path.join(root, name),
+        {
+            "tok": rng.integers(0, vocab, rows).astype(np.int64),
+            "val": np.round(rng.uniform(0, 100, rows), 1),
+        },
+        options=WriterOptions(row_group_size=128),
+    )
+
+
+@pytest.fixture()
+def dataset(tmp_path):
+    root = str(tmp_path / "ds")
+    for i in range(2):
+        _write(root, f"shard_{i:03d}", seed=i)
+    return root
+
+
+@pytest.fixture()
+def served(dataset):
+    server = StatsServer(StatsService(dataset)).start()
+    yield server
+    server.stop()
+
+
+@pytest.fixture()
+def pool():
+    p = ConnectionPool()
+    yield p
+    p.close()
+
+
+def _post_json(url, payload, etag=None):
+    return fetch(url, payload=payload, etag=etag, binary=False)
+
+
+def _chain_graph(aliases, column="tok"):
+    """Self-join chain over the served dataset: a0 - a1 - ... on `column`."""
+    return {
+        "tables": [{"name": a} for a in aliases],
+        "edges": [
+            {"left": aliases[i], "left_column": column,
+             "right": aliases[i + 1], "right_column": column}
+            for i in range(len(aliases) - 1)
+        ],
+    }
+
+
+# -- single-dataset server ---------------------------------------------------
+
+
+def test_cost_body_shape_and_etag(served):
+    graph = _chain_graph(["a", "b", "c"])
+    status, etag, body = _post_json(served.url + "/cost", {"graph": graph})
+    assert status == 200 and etag and body["etag"] == etag
+    assert sorted(body["best_order"]) == ["a", "b", "c"]
+    assert len(body["joins"]) == 2
+    for join in body["joins"]:
+        assert join["cardinality"] > 0
+        assert not join["cross_product"] and join["edges"]
+        for e in join["edges"]:
+            assert e["selectivity"] == pytest.approx(
+                1.0 / max(e["ndv_left"], e["ndv_right"])
+            )
+    assert body["total_cost"] == pytest.approx(
+        sum(j["cardinality"] for j in body["joins"])
+    )
+    assert body["plans_scored"] == 6 and body["enumeration"] == "exhaustive"
+    # identity is listing-order-insensitive: same tag for a shuffled graph
+    shuffled = {
+        "tables": list(reversed(graph["tables"])),
+        "edges": list(reversed(graph["edges"])),
+    }
+    status2, etag2, _ = _post_json(served.url + "/cost", {"graph": shuffled})
+    assert status2 == 200 and etag2 == etag
+
+
+def test_cost_revalidates_and_rotates_on_rewrite(served, dataset):
+    graph = _chain_graph(["r", "s"])
+    status, etag, _ = _post_json(served.url + "/cost", {"graph": graph})
+    assert status == 200
+    status2, etag2, body2 = _post_json(
+        served.url + "/cost", {"graph": graph}, etag=etag
+    )
+    assert (status2, body2) == (304, None) and etag2 == etag
+    # rewrite one shard -> refresh -> the old tag stops validating
+    _write(dataset, "shard_000", seed=77)
+    assert fetch_json(served.url + "/refresh", method="POST")[0] == 200
+    status3, etag3, body3 = _post_json(
+        served.url + "/cost", {"graph": graph}, etag=etag
+    )
+    assert status3 == 200 and etag3 != etag and body3["etag"] == etag3
+
+
+def test_cost_wire_and_json_bodies_identical(served, pool):
+    graph = _chain_graph(["x", "y", "z"])
+    sj, ej, bj = fetch(served.url + "/cost", payload={"graph": graph},
+                       binary=False, pool=pool)
+    sw, ew, bw = fetch(served.url + "/cost", payload={"graph": graph},
+                       binary=True, pool=pool)
+    assert sj == sw == 200 and ej == ew
+    assert json.dumps(bj, sort_keys=True) == json.dumps(bw, sort_keys=True)
+    # wire-negotiated revalidation honors the JSON-minted tag
+    s304, e304, _ = fetch(served.url + "/cost", payload={"graph": graph},
+                          binary=True, etag=ej, pool=pool)
+    assert s304 == 304 and e304 == ej
+
+
+def test_cost_batch_carriage_matches_standalone(served, pool):
+    graph = _chain_graph(["p", "q"])
+    status, etag, body = _post_json(served.url + "/cost", {"graph": graph})
+    assert status == 200
+    sb, _, envelope = fetch(
+        served.url + "/batch",
+        payload={"tuples": [
+            {"cost": {"graph": graph}},
+            {"mode": "paper"},                      # estimate tuple
+            {"cost": {"graph": graph}, "if_none_match": etag},
+        ]},
+        binary=False, pool=pool,
+    )
+    assert sb == 200
+    r_cost, r_est, r_reval = envelope["responses"]
+    assert r_cost["status"] == 200 and r_cost["body"]["etag"] == etag
+    assert json.dumps(r_cost["body"], sort_keys=True) == json.dumps(
+        body, sort_keys=True
+    )
+    assert r_est["status"] == 200 and "estimates" in r_est["body"]
+    assert r_reval["status"] == 304
+
+
+def test_cost_explain_is_identity_neutral(served):
+    graph = _chain_graph(["m", "n"])
+    status, etag, plain = _post_json(served.url + "/cost", {"graph": graph})
+    status2, etag2, explained = _post_json(
+        served.url + "/cost?explain=1", {"graph": graph}
+    )
+    assert status == status2 == 200
+    assert etag2 == etag  # explain never touches identity
+    assert "provenance" not in plain
+    prov = explained["provenance"]
+    for alias in ("m", "n"):
+        assert prov[alias]["tok"]["route"] in ("dict", "minmax")
+        assert prov[alias]["tok"]["ndv"] > 0
+    without = {k: v for k, v in explained.items() if k != "provenance"}
+    assert json.dumps(without, sort_keys=True) == json.dumps(
+        plain, sort_keys=True
+    )
+
+
+def test_cost_request_errors(served):
+    url = served.url + "/cost"
+    # disconnected graph
+    status, _, body = _post_json(url, {"graph": {
+        "tables": [{"name": "a"}, {"name": "b"}], "edges": []}})
+    assert status == 400 and "disconnected" in body["error"]
+    # unknown join column
+    status, _, body = _post_json(url, {"graph": _chain_graph(
+        ["a", "b"], column="no_such_col")})
+    assert status == 400 and "no_such_col" in body["error"]
+    # junk fields at body / graph level
+    assert _post_json(url, {"graph": _chain_graph(["a", "b"]),
+                            "surprise": 1})[0] == 400
+    assert _post_json(url, {"graph": {**_chain_graph(["a", "b"]),
+                                      "hints": []}})[0] == 400
+    # bad mode, bad max_plans
+    assert _post_json(url, {"graph": _chain_graph(["a", "b"]),
+                            "mode": "psychic"})[0] == 400
+    assert _post_json(url, {"graph": _chain_graph(["a", "b"]),
+                            "max_plans": 0})[0] == 400
+    # single-table graph is fine and free
+    status, etag, body = _post_json(
+        url, {"graph": {"tables": [{"name": "solo"}], "edges": []}}
+    )
+    assert status == 200 and etag
+    assert body["total_cost"] == 0.0 and body["joins"] == []
+
+
+def test_cost_acceptance_one_dispatch_thousands_of_plans(served):
+    # The headline acceptance criterion: a 7-table graph's 4096-plan
+    # sample scores as ONE batched dispatch, observed through the obs
+    # counters across the HTTP path.
+    from repro.planner.cost import _DISPATCHES, _PLANS_SCORED
+
+    graph = _chain_graph([f"acc{i}" for i in range(7)])
+    d0, p0 = _DISPATCHES.value(), _PLANS_SCORED.value()
+    status, etag, body = _post_json(served.url + "/cost", {"graph": graph})
+    assert status == 200 and etag
+    assert body["plans_scored"] == 4096 >= 1000
+    assert body["plan_space"] == 5040 and body["enumeration"] == "sampled"
+    assert len(body["best_order"]) == 7 and len(body["joins"]) == 6
+    assert _DISPATCHES.value() - d0 == 1.0
+    assert _PLANS_SCORED.value() - p0 == 4096.0
+    # warm revalidation scores nothing at all
+    d1, p1 = _DISPATCHES.value(), _PLANS_SCORED.value()
+    assert _post_json(served.url + "/cost", {"graph": graph},
+                      etag=etag)[0] == 304
+    assert (_DISPATCHES.value(), _PLANS_SCORED.value()) == (d1, p1)
+
+
+def test_tablestats_endpoint(served):
+    status, etag, body = fetch_json(served.url + "/tablestats")
+    assert status == 200 and etag and body["etag"] == etag
+    assert body["rows"] == 512  # 2 shards x 256 rows, footer sums
+    assert sorted(body["columns"]) == ["tok", "val"]
+    for col in body["columns"].values():
+        assert col["ndv"] > 0 and col["route"] in ("dict", "minmax")
+    assert fetch_json(served.url + "/tablestats", etag=etag)[0] == 304
+    # column filter narrows the body and mints a distinct tag
+    s2, e2, b2 = fetch_json(served.url + "/tablestats?columns=tok")
+    assert s2 == 200 and e2 != etag and sorted(b2["columns"]) == ["tok"]
+    assert fetch_json(served.url + "/tablestats?columns=nope")[0] == 400
+
+
+# -- fleet router -------------------------------------------------------------
+
+
+@pytest.fixture()
+def registry(tmp_path):
+    reg = DatasetRegistry()
+    for name, seed in (("orders", 10), ("lines", 20)):
+        root = str(tmp_path / name)
+        for i in range(2):
+            _write(root, f"shard_{i:03d}", seed=seed + i, vocab=48)
+        reg.add("wh", name, root)
+    return reg
+
+
+@pytest.fixture()
+def routed(registry):
+    router = StatsRouter(Fleet(registry, replicas_per_dataset=2)).start()
+    yield router
+    router.stop()
+
+
+def _fleet_graph():
+    return {
+        "tables": [
+            {"name": "o", "namespace": "wh", "dataset": "orders"},
+            {"name": "l", "namespace": "wh", "dataset": "lines",
+             "filter_selectivity": 0.5},
+        ],
+        "edges": [{"left": "o", "left_column": "tok",
+                   "right": "l", "right_column": "tok"}],
+    }
+
+
+def test_router_cost_etag_survives_replica_kill(routed):
+    graph = _fleet_graph()
+    status, etag, body = _post_json(routed.url + "/cost", {"graph": graph})
+    assert status == 200 and etag and body["etag"] == etag
+    assert sorted(body["sources"]) == ["wh/lines", "wh/orders"]
+    assert body["best_order"] and len(body["joins"]) == 1
+    assert _post_json(routed.url + "/cost", {"graph": graph},
+                      etag=etag)[0] == 304
+    # kill one replica per set: failover must not rotate the tag
+    for rset in routed.fleet.sets.values():
+        rset.replicas[0].kill()
+    s2, e2, _ = _post_json(routed.url + "/cost", {"graph": graph},
+                           etag=etag)
+    assert s2 == 304 and e2 == etag
+    s3, e3, b3 = _post_json(routed.url + "/cost", {"graph": graph})
+    assert s3 == 200 and e3 == etag
+    assert json.dumps(b3, sort_keys=True) == json.dumps(
+        body, sort_keys=True
+    )
+
+
+def test_router_cost_explain_reports_routes(routed):
+    graph = _fleet_graph()
+    status, etag, plain = _post_json(routed.url + "/cost", {"graph": graph})
+    s2, e2, body = _post_json(routed.url + "/cost?explain=1",
+                              {"graph": graph})
+    assert status == s2 == 200 and e2 == etag
+    assert body["provenance"]["o"]["tok"]["route"] in ("dict", "minmax")
+    assert "provenance" not in plain
+
+
+def test_router_cost_dataset_errors(routed):
+    # unknown dataset -> 404
+    status, _, body = _post_json(routed.url + "/cost", {"graph": {
+        "tables": [{"name": "x", "namespace": "wh", "dataset": "nope"}],
+        "edges": [],
+    }})
+    assert status == 404 and "not registered" in body["error"]
+    # a table without namespace/dataset is a parse-time 400 on the router
+    status, _, body = _post_json(routed.url + "/cost", {"graph": {
+        "tables": [{"name": "x"}], "edges": [],
+    }})
+    assert status == 400 and "namespace" in body["error"]
+
+
+def test_router_batch_carries_cost_tuples(routed, pool):
+    graph = _fleet_graph()
+    status, etag, body = _post_json(routed.url + "/cost", {"graph": graph})
+    assert status == 200
+    sb, _, envelope = fetch(
+        routed.url + "/batch",
+        payload={"tuples": [
+            {"cost": {"graph": graph}},
+            {"namespace": "wh", "dataset": "orders", "mode": "paper"},
+            {"cost": {"graph": graph}, "if_none_match": etag},
+        ]},
+        binary=False, pool=pool,
+    )
+    assert sb == 200
+    r_cost, r_est, r_reval = envelope["responses"]
+    assert r_cost["status"] == 200 and r_cost["body"]["etag"] == etag
+    assert json.dumps(r_cost["body"], sort_keys=True) == json.dumps(
+        body, sort_keys=True
+    )
+    assert r_est["status"] == 200
+    assert r_reval["status"] == 304
+
+
+def test_router_tablestats_passthrough(routed):
+    url = routed.url + "/wh/orders/tablestats?columns=tok"
+    status, etag, body = fetch_json(url)
+    assert status == 200 and etag and sorted(body["columns"]) == ["tok"]
+    assert fetch_json(url, etag=etag)[0] == 304
+    assert fetch_json(routed.url + "/wh/orders/tablestats?columns=bad")[0] \
+        == 400

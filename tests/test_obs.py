@@ -311,16 +311,35 @@ def test_trace_tree_shapes():
 # -- HTTP e2e ----------------------------------------------------------------
 
 
+def _poll_trace(traces_url, root_name, timeout=5.0):
+    """Scrape /debug/traces until a trace rooted at `root_name` appears.
+
+    Spans land in the collector on the server thread AFTER the response
+    body is flushed (the span wraps the send), so a client that scrapes
+    immediately can see a trace whose root hasn't ended yet. Children
+    always end before their root, so once the root is visible the whole
+    tree is.
+    """
+    deadline = time.monotonic() + timeout
+    while True:
+        status, _, traces = fetch_json(traces_url)
+        assert status == 200
+        match = [t for t in traces["traces"] if t["name"] == root_name]
+        if match or time.monotonic() >= deadline:
+            assert match, [t["name"] for t in traces["traces"]]
+            return match[0]
+        time.sleep(0.01)
+
+
 def test_service_trace_spans_engine_and_scrape_endpoints(dataset):
     with StatsServer(StatsService(dataset)) as srv:
         obs.collector().clear()
         status, _, _ = fetch_json(srv.url + "/estimate?mode=improved")
         assert status == 200
 
-        status, _, traces = fetch_json(srv.url + "/debug/traces?limit=5")
-        assert status == 200
-        tree = traces["traces"][0]
-        assert tree["name"] == "service.estimate"
+        tree = _poll_trace(
+            srv.url + "/debug/traces?limit=5", "service.estimate"
+        )
         assert tree["attributes"]["status"] == 200
 
         def names(node):
@@ -403,10 +422,8 @@ def test_fleet_batch_single_trace_and_router_scrapes(fleet_registry):
         assert status == 200
         assert [r["status"] for r in env["responses"]] == [200, 200]
 
-        status, _, traces = fetch_json(router.url + "/debug/traces?limit=10")
-        assert status == 200
-        batch = next(
-            t for t in traces["traces"] if t["name"] == "router.batch"
+        batch = _poll_trace(
+            router.url + "/debug/traces?limit=10", "router.batch"
         )
 
         def walk(node):
@@ -457,9 +474,8 @@ def test_fleet_failover_reparents_attempt_spans(fleet_registry):
         obs.collector().clear()
         status, _, _ = fetch_json(url)
         assert status == 200  # failover answered
-        status, _, traces = fetch_json(router.url + "/debug/traces?limit=5")
-        tree = next(
-            t for t in traces["traces"] if t["name"] == "router.estimate"
+        tree = _poll_trace(
+            router.url + "/debug/traces?limit=5", "router.estimate"
         )
         calls = [c for c in tree["children"] if c["name"] == "replica.call"]
         assert len(calls) == 2, "failed attempt + retry, both re-parented"
